@@ -1,0 +1,44 @@
+"""Structured-generation overhead: per-step token-bitmask cost.
+
+WebLLM runs XGrammar in WASM precisely because per-step masking sits on
+the decode critical path; this measures our Earley+trie matcher's
+per-step mask latency at several vocab sizes and JSON-depth states.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.grammar import GrammarMatcher, parse_gbnf
+from repro.grammar.gbnf import JSON_GBNF
+from repro.tokenizer import ByteBPETokenizer
+
+
+def run() -> list:
+    rows = []
+    g = parse_gbnf(JSON_GBNF)
+    for vocab in (300, 600, 1200):
+        tok = ByteBPETokenizer.train(
+            ['{"key": [1, 2.5, true], "s": "text value here"} '] * 4 +
+            ["the quick brown fox jumps over the lazy dog "] * 4,
+            vocab_size=vocab)
+        m = GrammarMatcher(g, tok)
+        m.accept_bytes(b'{"nested": {"arr": [1, 2, {"deep": ')
+        t0 = time.perf_counter()
+        iters = 20
+        for _ in range(iters):
+            mask = m.token_mask()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append((f"grammar/mask_vocab{tok.vocab_size}", round(us, 1),
+                     f"allowed={int(mask.sum())}"))
+    # commit path
+    m2 = GrammarMatcher(g, tok)
+    t0 = time.perf_counter()
+    m2.accept_bytes(b'{"a": [1, 2, 3], "b": {"c": "ddddd"}} ')
+    us = (time.perf_counter() - t0) * 1e6 / 38
+    rows.append(("grammar/accept_per_byte", round(us, 2), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

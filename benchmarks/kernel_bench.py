@@ -1,0 +1,80 @@
+"""Per-kernel microbenchmarks (one per WebLLM WebGPU kernel class).
+
+On this CPU host the Pallas kernels execute in interpret mode, so the
+timings benchmark the *oracle-equivalent jnp path* (what XLA:CPU runs)
+and verify the harness; on a TPU host the same calls time the compiled
+kernels.  Derived column reports achieved GFLOP/s or GB/s.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.quant.int4 import quantize_array
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # flash attention (prefill class)
+    B, S, H, Kv, D = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Kv, D), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Kv, D), jnp.float32).astype(jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(f, q, k, v)
+    flops = 2 * 2 * B * H * S * S / 2 * D
+    rows.append(("kernel/flash_attention_1k", us,
+                 f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
+
+    # paged attention (decode class)
+    P_, psz, pps = 128, 16, 16
+    q2 = jax.random.normal(ks[0], (8, H, D), jnp.float32).astype(jnp.bfloat16)
+    kp = jax.random.normal(ks[1], (P_, psz, Kv, D), jnp.float32).astype(jnp.bfloat16)
+    vp = jax.random.normal(ks[2], (P_, psz, Kv, D), jnp.float32).astype(jnp.bfloat16)
+    pt = jax.random.randint(key, (8, pps), 0, P_)
+    lens = jnp.full((8,), pps * psz, jnp.int32)
+    f2 = jax.jit(lambda *a: ref.paged_attention_ref(*a))
+    us = _time(f2, q2, kp, vp, pt, lens)
+    byts = 2 * 8 * pps * psz * Kv * D * 2
+    rows.append(("kernel/paged_attention_256ctx", us,
+                 f"{byts/us/1e3:.2f}GB/s(xla-cpu)"))
+
+    # w4a16 gemm (quantized matmul class)
+    M, K, N = 128, 2048, 2048
+    x = (jax.random.normal(ks[0], (M, K), jnp.float32) * 0.1).astype(jnp.bfloat16)
+    w = (jax.random.normal(ks[1], (K, N), jnp.float32) * 0.05).astype(jnp.bfloat16)
+    qt = quantize_array(w, 64)
+    f3 = jax.jit(lambda x, d, s: ref.w4a16_gemm_ref(x, d, s, 64))
+    us = _time(f3, x, qt.data, qt.scales)
+    rows.append(("kernel/w4a16_gemm_128x2kx2k", us,
+                 f"{2*M*K*N/us/1e3:.1f}GFLOP/s(xla-cpu)"))
+
+    # rmsnorm (fusion class)
+    xn = jax.random.normal(key, (8, 512, 1024), jnp.float32).astype(jnp.bfloat16)
+    s = jnp.ones((1024,), jnp.float32)
+    f4 = jax.jit(lambda x, s: ref.rmsnorm_ref(x, s))
+    us = _time(f4, xn, s)
+    rows.append(("kernel/rmsnorm_8x512x1024", us,
+                 f"{2*xn.size*2/us/1e3:.2f}GB/s(xla-cpu)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,32 @@
+"""Roofline summary rows from the dry-run matrix (benchmarks/dryrun_results).
+
+Emits one row per (arch x shape) on the single-pod mesh: the dominant
+roofline term and its seconds-per-step (us_per_call column = dominant
+term in microseconds).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+
+def run() -> list:
+    from repro.launch.roofline import table
+    d = "benchmarks/dryrun_results"
+    if not Path(d).exists():
+        return [("roofline/missing", 0, "run repro.launch.dryrun --all")]
+    rows = []
+    for r in table(d, mesh_filter="16x16"):
+        if r.status != "ok":
+            rows.append((f"roofline/{r.arch}/{r.shape}", 0, r.status))
+            continue
+        dom_s = {"compute": r.compute_s, "memory": r.memory_s,
+                 "collective": r.collective_s}[r.dominant]
+        rows.append((f"roofline/{r.arch}/{r.shape}",
+                     round(dom_s * 1e6, 1),
+                     f"dominant={r.dominant} useful={r.useful_ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

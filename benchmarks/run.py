@@ -1,0 +1,50 @@
+"""Benchmark registry — one module per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+REGISTRY = [
+    # (module, description)
+    ("benchmarks.table1_retention",
+     "paper Table 1: engine-vs-native decode throughput retention"),
+    ("benchmarks.engine_throughput",
+     "continuous batching: aggregate tok/s vs concurrency"),
+    ("benchmarks.grammar_bench",
+     "structured generation: per-step token-mask latency"),
+    ("benchmarks.kernel_bench",
+     "kernel classes: flash/paged attention, w4a16 gemm, rmsnorm"),
+    ("benchmarks.roofline_report",
+     "dry-run roofline table summary (reads benchmarks/dryrun_results)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name, desc in REGISTRY:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod_name},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

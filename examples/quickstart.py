@@ -1,0 +1,38 @@
+"""Quickstart: load a model into the engine, stream a chat completion.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+
+
+def main():
+    engine = MLCEngine()
+    # reduced llama-3.1-8b family config (random weights, tiny tokenizer —
+    # the engine mechanics are identical to serving real weights)
+    engine.load_model("llama", get_config("llama-3.1-8b", reduced=True),
+                      max_slots=2, max_context=160)
+
+    print("=== streaming ===")
+    request = ChatCompletionRequest(
+        messages=[ChatMessage("user", "Tell me something.")],
+        model="llama", max_tokens=24, temperature=0.8, seed=0, stream=True)
+    for chunk in engine.chat_completions_create(request):
+        delta = chunk.choices[0].delta.content
+        if delta:
+            print(delta, end="", flush=True)
+        if chunk.usage:
+            print(f"\n--- usage: {chunk.usage.completion_tokens} tokens, "
+                  f"{chunk.usage.extra['decode_tokens_per_s']} tok/s")
+
+    print("=== non-streaming ===")
+    response = engine.chat_completions_create(ChatCompletionRequest(
+        messages=[ChatMessage("user", "And again, all at once.")],
+        model="llama", max_tokens=16, seed=1))
+    print(repr(response.choices[0].message.content))
+    print("finish_reason:", response.choices[0].finish_reason)
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

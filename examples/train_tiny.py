@@ -1,0 +1,52 @@
+"""Train a tiny model on the synthetic corpus until the loss visibly
+drops, then serve the trained weights through the engine.
+
+    PYTHONPATH=src python examples/train_tiny.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+from repro.data import LMDataPipeline, synthetic_corpus
+from repro.models import model
+from repro.optim import adamw_init, adamw_update
+from repro.tokenizer import ByteBPETokenizer
+
+
+def main():
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    docs = synthetic_corpus(300, seed=0)
+    tok = ByteBPETokenizer.train(docs[:150], vocab_size=cfg.vocab_size)
+    pipe = LMDataPipeline(tok, docs, seq_len=64, batch_size=8)
+
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch))(params)
+        params, opt = adamw_update(grads, opt, params, lr=3e-3)
+        return loss, params, opt
+
+    it = iter(pipe)
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        loss, params, opt = step(params, opt, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(loss):.3f}")
+
+    print("\nserving the trained weights:")
+    engine = MLCEngine()
+    engine.load_model("trained", cfg, params=params, tokenizer=tok,
+                      max_slots=2, max_context=128)
+    resp = engine.chat_completions_create(ChatCompletionRequest(
+        messages=[ChatMessage("user", "the quick brown")],
+        model="trained", max_tokens=16, temperature=0.5, seed=0))
+    print(repr(resp.choices[0].message.content))
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Checkpointing: pytree -> directory of .npy leaves + a JSON manifest.
+
+Handles arbitrary pytrees (params, AdamW state, QTensor leaves) via
+jax's key-path flattening; restore rebuilds into the structure of a
+caller-provided template tree, verifying shapes/dtypes.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip ml_dtypes custom dtypes through .npy; store the
+# raw bits in a same-width integer view and rebuild on load.
+_CUSTOM = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _key_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, tree: Any, *, step: int = 0,
+                    extra: Dict = None):
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        name = f"leaf_{i:05d}"
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if dtype in _CUSTOM:
+            arr = arr.view(_CUSTOM[dtype][1])
+        np.save(d / f"{name}.npy", arr)
+        manifest["leaves"].append(
+            {"file": f"{name}.npy", "path": _key_str(path),
+             "shape": list(arr.shape), "dtype": dtype})
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def load_checkpoint(ckpt_dir: str, template: Any):
+    """Returns (tree_like_template, step, extra)."""
+    d = Path(ckpt_dir)
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    leaves = []
+    for path, tmpl in flat:
+        key = _key_str(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        e = by_path[key]
+        arr = np.load(d / e["file"])
+        if e["dtype"] in _CUSTOM:
+            arr = arr.view(_CUSTOM[e["dtype"]][0])
+        if list(arr.shape) != list(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(tmpl.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest["extra"]

@@ -1,0 +1,47 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full production :class:`ModelConfig`;
+``get_config(arch_id, reduced=True)`` returns the smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    INPUT_SHAPES, FrontendConfig, GroupedPattern, InputShape, LayerSpec,
+    MLAConfig, MambaConfig, ModelConfig, MoEConfig, RWKV6Config,
+    group_pattern,
+)
+
+# arch id -> module name under repro.configs
+_ARCH_MODULES: Dict[str, str] = {
+    "whisper-base": "whisper_base",
+    "yi-6b": "yi_6b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "internvl2-1b": "internvl2_1b",
+    "gemma3-27b": "gemma3_27b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "arctic-480b": "arctic_480b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    # the paper's own evaluated models (Table 1)
+    "llama-3.1-8b": "llama3_1_8b",
+    "phi-3.5-mini": "phi3_5_mini",
+}
+
+ASSIGNED_ARCHS: List[str] = list(_ARCH_MODULES)[:10]
+ALL_ARCHS: List[str] = list(_ARCH_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str, *, reduced: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ALL_ARCHS}")
+    if arch not in _cache:
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+        _cache[arch] = mod.CONFIG
+    cfg = _cache[arch]
+    return cfg.reduced() if reduced else cfg

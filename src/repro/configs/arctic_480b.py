@@ -1,0 +1,29 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual.
+[hf:Snowflake/snowflake-arctic-base]
+
+35L, d_model=7168, 56 heads (GQA kv=8), vocab 32000.  Dense-MoE hybrid:
+every layer has a dense MLP residual path (d_ff=4864) in PARALLEL with a
+128-expert top-2 MoE (expert d_ff=4864).
+"""
+from repro.configs.base import (LayerSpec, ModelConfig, MoEConfig,
+                                pattern_from_rule)
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,                   # dense residual path width
+    vocab_size=32000,
+    layer_pattern=pattern_from_rule(35, lambda i: LayerSpec("attn", "moe")),
+    moe=MoEConfig(num_experts=128, top_k=2, expert_d_ff=4864,
+                  dense_residual=True),
+    rope_theta=1000000.0,
+    act="silu",
+    max_context=32768,
+    sub_quadratic=False,
+    source="hf:Snowflake/snowflake-arctic-base — 35L d7168 56H kv8 hd128, "
+           "128e top-2 MoE (ff4864) + parallel dense residual (ff4864), v32000",
+)

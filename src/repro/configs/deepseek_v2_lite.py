@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512. [arXiv:2405.04434]
+
+27L, d_model=2048, 16 heads, MLA (kv_lora_rank=512, no q-lora in Lite),
+vocab 102400.  MoE: 64 routed experts top-6 + 2 shared experts, expert
+d_ff=1408; layer 0 uses a dense MLP (d_ff=10944).
+(The bracketed "160 routed" in the assignment sheet is the non-Lite V2;
+we follow the stated Lite numbers: 64e top-6, 2 shared.)
+"""
+from repro.configs.base import (LayerSpec, MLAConfig, ModelConfig,
+                                MoEConfig, pattern_from_rule)
+
+
+def _spec(i: int) -> LayerSpec:
+    return LayerSpec("mla", "dense" if i == 0 else "moe")
+
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,               # MLA: per-head latent decompression
+    head_dim=128,
+    d_ff=10944,                  # dense layer-0 MLP width
+    vocab_size=102400,
+    layer_pattern=pattern_from_rule(27, _spec),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64,
+                  v_head_dim=128),
+    moe=MoEConfig(num_experts=64, top_k=6, expert_d_ff=1408,
+                  num_shared_experts=2, shared_d_ff=2816),
+    rope_theta=10000.0,
+    act="silu",
+    max_context=32768,
+    sub_quadratic=False,
+    source="arXiv:2405.04434 (DeepSeek-V2-Lite) — 27L d2048 16H MLA "
+           "kv_lora512, MoE 64e top-6 + 2 shared, expert ff1408, v102400",
+)

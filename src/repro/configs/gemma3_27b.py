@@ -1,0 +1,37 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt family]
+
+62L, d_model=5376, 32 heads (GQA kv=16), d_ff=21504, vocab 262144.
+Pattern: 5 sliding-window (1024) layers then 1 global layer, repeating.
+QK-norm; distinct rope theta for local (10k) vs global (1M) layers.
+Sub-quadratic long-context decode: 52/62 layers keep only a 1024-entry
+ring-buffer KV cache.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, pattern_from_rule
+
+
+def _spec(i: int) -> LayerSpec:
+    return LayerSpec("attn" if (i + 1) % 6 == 0 else "swa", "dense")
+
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    layer_pattern=pattern_from_rule(62, _spec),
+    sliding_window=1024,
+    rope_theta=1000000.0,        # global layers
+    local_rope_theta=10000.0,    # sliding-window layers
+    qk_norm=True,
+    act="gelu_gated",
+    tie_embeddings=True,
+    max_context=131072,
+    sub_quadratic=True,          # SWA ring buffers dominate the cache
+    source="hf:google/gemma-3-27b (family card) — 62L d5376 32H kv16 hd128 "
+           "ff21504 v262144, 5:1 local:global, window 1024",
+)

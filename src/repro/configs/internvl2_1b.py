@@ -1,0 +1,28 @@
+"""internvl2-1b [vlm] — InternViT(stub) + LLM backbone. [arXiv:2404.16821]
+
+Backbone: 24L, d_model=896, 14 heads (GQA kv=2), d_ff=4864, vocab 151655.
+The InternViT vision encoder + MLP projector is a STUB per the brief:
+``input_specs`` provides precomputed patch embeddings [B, 256, 896]
+prepended to the text sequence at prefill.
+"""
+from repro.configs.base import (FrontendConfig, LayerSpec, ModelConfig,
+                                pattern_from_rule)
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    layer_pattern=pattern_from_rule(24, lambda i: LayerSpec("attn", "dense")),
+    rope_theta=1000000.0,
+    qkv_bias=True,              # Qwen2-family backbone uses QKV bias
+    tie_embeddings=True,
+    act="silu",
+    frontend=FrontendConfig(kind="vision", num_embeds=256),
+    max_context=32768,
+    sub_quadratic=False,
+    source="arXiv:2404.16821 (InternVL2-1B) — 24L d896 14H kv2 ff4864 v151655",
+)

@@ -1,0 +1,36 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE.
+[arXiv:2403.19887 / 2408.12570]
+
+72L, d_model=8192, 64 heads (GQA kv=8), d_ff=24576, vocab 65536.
+Jamba block structure: blocks of 8 layers with attention at index 4
+(attn:mamba = 1:7); MoE replaces the dense MLP on every other layer
+(odd indices), 16 experts top-2.
+"""
+from repro.configs.base import (LayerSpec, MambaConfig, ModelConfig,
+                                MoEConfig, pattern_from_rule)
+
+
+def _spec(i: int) -> LayerSpec:
+    mixer = "attn" if i % 8 == 4 else "mamba"
+    ffn = "moe" if i % 2 == 1 else "dense"
+    return LayerSpec(mixer, ffn)
+
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    layer_pattern=pattern_from_rule(72, _spec),
+    moe=MoEConfig(num_experts=16, top_k=2, expert_d_ff=24576),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    rope_theta=0.0,            # jamba attn layers use no positional encoding
+    act="silu",
+    max_context=262144,
+    sub_quadratic=True,        # 7/8 of layers are Mamba (O(1) state)
+    source="arXiv:2403.19887 (Jamba) — 72L d8192 64H kv8 ff24576 v65536 "
+           "MoE 16e top-2, attn:mamba 1:7, MoE every 2nd layer",
+)

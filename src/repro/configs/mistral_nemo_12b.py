@@ -1,0 +1,24 @@
+"""mistral-nemo-12b [dense] — 128k context. [hf:mistralai/Mistral-Nemo-Base-2407]
+
+40L, d_model=5120, 32 heads (GQA kv=8), head_dim=128, d_ff=14336,
+vocab 131072.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, pattern_from_rule
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    layer_pattern=pattern_from_rule(40, lambda i: LayerSpec("attn", "dense")),
+    rope_theta=1000000.0,
+    act="silu",
+    max_context=131072,
+    sub_quadratic=False,
+    source="hf:mistralai/Mistral-Nemo-Base-2407 — 40L d5120 32H kv8 hd128 "
+           "ff14336 v131072",
+)

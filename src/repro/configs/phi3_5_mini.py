@@ -1,0 +1,21 @@
+"""phi-3.5-mini (3.8B) — the paper's Table 1 model #2. [arXiv:2404.14219]
+
+32L, d_model=3072, 32 heads (GQA kv=8 in 3.5-mini), d_ff=8192, vocab 32064.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, pattern_from_rule
+
+CONFIG = ModelConfig(
+    name="phi-3.5-mini",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=32064,
+    layer_pattern=pattern_from_rule(32, lambda i: LayerSpec("attn", "dense")),
+    rope_theta=10000.0,
+    act="silu",
+    max_context=131072,
+    sub_quadratic=False,
+    source="arXiv:2404.14219 (Phi-3.5-mini) — WebLLM Table 1",
+)

@@ -1,0 +1,23 @@
+"""qwen1.5-110b [dense] — QKV bias. [hf:Qwen/Qwen1.5-110B family]
+
+80L, d_model=8192, 64 heads (GQA kv=8), d_ff=49152, vocab 152064.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, pattern_from_rule
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    layer_pattern=pattern_from_rule(80, lambda i: LayerSpec("attn", "dense")),
+    rope_theta=1000000.0,
+    qkv_bias=True,
+    act="silu",
+    max_context=32768,
+    sub_quadratic=False,
+    source="hf:Qwen/Qwen1.5-110B (per brief hf:Qwen/Qwen1.5-0.5B card "
+           "family) — 80L d8192 64H kv8 ff49152 v152064, QKV bias",
+)

@@ -1,0 +1,25 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay. [arXiv:2404.05892]
+
+24L, d_model=2048, attention-free (WKV6 time-mixing), channel-mix
+d_ff=7168, vocab 65536.  Head dim 64 => 32 heads.  O(1) per-token state
+=> long_500k decode runs natively.
+"""
+from repro.configs.base import (LayerSpec, ModelConfig, RWKV6Config,
+                                pattern_from_rule)
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,                  # d_model / rwkv head_dim
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    layer_pattern=pattern_from_rule(24, lambda i: LayerSpec("rwkv6", "none")),
+    rwkv6=RWKV6Config(head_dim=64, decay_lora_rank=64, mix_lora_rank=32),
+    act="relu_sq",               # rwkv channel-mix uses squared relu
+    max_context=1 << 20,
+    sub_quadratic=True,
+    source="arXiv:2404.05892 (RWKV-6 Finch 1.6B) — 24L d2048 ff7168 v65536",
+)

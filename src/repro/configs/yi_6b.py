@@ -1,0 +1,21 @@
+"""yi-6b [dense] — llama-architecture GQA. [arXiv:2403.04652]
+
+32L, d_model=4096, 32 heads, GQA kv=4, d_ff=11008, vocab 64000.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, pattern_from_rule
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    layer_pattern=pattern_from_rule(32, lambda i: LayerSpec("attn", "dense")),
+    rope_theta=5000000.0,
+    act="silu",
+    max_context=32768,
+    sub_quadratic=False,
+    source="arXiv:2403.04652 (Yi) — 32L d4096 32H kv4 ff11008 v64000",
+)

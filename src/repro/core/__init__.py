@@ -1,0 +1,4 @@
+from repro.core.api import (ChatCompletionRequest, ChatCompletionResponse,  # noqa
+                            ChatMessage, ResponseFormat)
+from repro.core.engine import MLCEngine  # noqa: F401
+from repro.core.worker import ServiceWorkerMLCEngine  # noqa: F401

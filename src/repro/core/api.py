@@ -1,0 +1,146 @@
+"""OpenAI-style API types (the JSON-in/JSON-out engine protocol).
+
+WebLLM's endpoint-like design: every request/response/chunk is a plain
+JSON-serializable dict (`to_dict`/`from_dict`), because the frontend and
+backend engines exchange them purely by message-passing (core/worker.py).
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class ChatMessage:
+    role: str
+    content: str
+
+
+@dataclass
+class ResponseFormat:
+    type: str = "text"                  # text | json_object | json_schema | grammar
+    json_schema: Optional[Dict[str, Any]] = None
+    grammar: Optional[str] = None       # GBNF text for type == "grammar"
+
+
+@dataclass
+class ChatCompletionRequest:
+    messages: List[ChatMessage]
+    model: str = "default"
+    max_tokens: int = 128
+    temperature: float = 1.0
+    top_p: float = 1.0
+    top_k: int = 0
+    frequency_penalty: float = 0.0
+    presence_penalty: float = 0.0
+    repetition_penalty: float = 1.0
+    stop: List[str] = field(default_factory=list)
+    stream: bool = False
+    seed: Optional[int] = None
+    logit_bias: Dict[int, float] = field(default_factory=dict)
+    response_format: ResponseFormat = field(default_factory=ResponseFormat)
+    # vision-language input: stub image embeddings are attached by id
+    image_embeds: Optional[str] = None
+
+    def __post_init__(self):
+        self.messages = [ChatMessage(**m) if isinstance(m, dict) else m
+                         for m in self.messages]
+        if isinstance(self.response_format, dict):
+            self.response_format = ResponseFormat(**self.response_format)
+        self.logit_bias = {int(k): float(v)
+                           for k, v in (self.logit_bias or {}).items()}
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChatCompletionRequest":
+        d = dict(d)
+        d["messages"] = [ChatMessage(**m) for m in d.get("messages", [])]
+        rf = d.get("response_format") or {}
+        d["response_format"] = ResponseFormat(**rf)
+        d["logit_bias"] = {int(k): float(v)
+                           for k, v in (d.get("logit_bias") or {}).items()}
+        return cls(**d)
+
+
+@dataclass
+class Usage:
+    prompt_tokens: int = 0
+    completion_tokens: int = 0
+    total_tokens: int = 0
+    # WebLLM extension: perf stats in usage.extra
+    extra: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class ChoiceDelta:
+    content: str = ""
+    role: Optional[str] = None
+
+
+@dataclass
+class ChunkChoice:
+    delta: ChoiceDelta
+    index: int = 0
+    finish_reason: Optional[str] = None
+
+
+@dataclass
+class ChatCompletionChunk:
+    id: str
+    choices: List[ChunkChoice]
+    model: str
+    created: int = field(default_factory=lambda: int(time.time()))
+    object: str = "chat.completion.chunk"
+    usage: Optional[Usage] = None
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChatCompletionChunk":
+        d = dict(d)
+        d["choices"] = [
+            ChunkChoice(delta=ChoiceDelta(**c["delta"]), index=c["index"],
+                        finish_reason=c.get("finish_reason"))
+            for c in d["choices"]]
+        if d.get("usage"):
+            d["usage"] = Usage(**d["usage"])
+        return cls(**d)
+
+
+@dataclass
+class Choice:
+    message: ChatMessage
+    index: int = 0
+    finish_reason: str = "stop"
+
+
+@dataclass
+class ChatCompletionResponse:
+    id: str
+    choices: List[Choice]
+    model: str
+    usage: Usage
+    created: int = field(default_factory=lambda: int(time.time()))
+    object: str = "chat.completion"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ChatCompletionResponse":
+        d = dict(d)
+        d["choices"] = [
+            Choice(message=ChatMessage(**c["message"]), index=c["index"],
+                   finish_reason=c.get("finish_reason", "stop"))
+            for c in d["choices"]]
+        d["usage"] = Usage(**d["usage"])
+        return cls(**d)
+
+
+def new_request_id() -> str:
+    return "chatcmpl-" + uuid.uuid4().hex[:16]

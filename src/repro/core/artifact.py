@@ -1,0 +1,68 @@
+"""AOT compile-artifact cache — the MLC "compiled WASM library" analogue.
+
+WebLLM loads ahead-of-time compiled kernels + weights from a hosted
+artifact; here every jitted step function (per model x shape-bucket x
+mesh) is compiled once, serialized with
+``jax.experimental.serialize_executable`` and reloaded on later runs, so
+an engine restart skips XLA compilation entirely.
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+try:
+    from jax.experimental.serialize_executable import (deserialize_and_load,
+                                                       serialize)
+    _HAVE_SERIALIZE = True
+except Exception:                                       # pragma: no cover
+    _HAVE_SERIALIZE = False
+
+
+class ArtifactCache:
+    def __init__(self, cache_dir: Optional[str] = None):
+        self.mem: Dict[str, Any] = {}
+        self.dir = Path(cache_dir) if cache_dir else None
+        if self.dir:
+            self.dir.mkdir(parents=True, exist_ok=True)
+        self.stats = {"hits": 0, "disk_hits": 0, "compiles": 0}
+
+    def _digest(self, key: str) -> str:
+        salt = f"{jax.__version__}|{jax.default_backend()}|{key}"
+        return hashlib.sha256(salt.encode()).hexdigest()[:24]
+
+    def get_or_compile(self, key: str,
+                       build: Callable[[], Tuple[Any, tuple]]) -> Any:
+        """``build`` returns (jitted_fn, abstract_args); we lower+compile.
+
+        Returns the compiled executable (callable with concrete args).
+        """
+        dig = self._digest(key)
+        if dig in self.mem:
+            self.stats["hits"] += 1
+            return self.mem[dig]
+        path = self.dir / f"{dig}.jaxexe" if self.dir else None
+        if path and path.exists() and _HAVE_SERIALIZE:
+            try:
+                payload, in_tree, out_tree = pickle.loads(path.read_bytes())
+                compiled = deserialize_and_load(payload, in_tree, out_tree)
+                self.mem[dig] = compiled
+                self.stats["disk_hits"] += 1
+                return compiled
+            except Exception:
+                path.unlink(missing_ok=True)
+        fn, args = build()
+        compiled = fn.lower(*args).compile()
+        self.stats["compiles"] += 1
+        self.mem[dig] = compiled
+        if path and _HAVE_SERIALIZE:
+            try:
+                payload, in_tree, out_tree = serialize(compiled)
+                path.write_bytes(pickle.dumps((payload, in_tree, out_tree)))
+            except Exception:
+                pass
+        return compiled

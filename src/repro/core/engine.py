@@ -1,0 +1,328 @@
+"""MLCEngine — the backend inference engine (WebLLM §2.1/§2.2).
+
+Continuous-batching loop over dense decode slots, OpenAI-style streaming
+chat completions, structured generation via the grammar engine,
+multi-model support, and usage stats (incl. decode tok/s — the paper's
+Table-1 metric).
+
+The engine is synchronous-core + thread-loop: ``chat_completions_create``
+enqueues a request and returns an iterator over chunks; a single loop
+thread steps all models while any request is live (the UI-thread /
+worker-thread split of the paper lives one level up, in core/worker.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Union
+
+import numpy as np
+
+from repro.core import api
+from repro.core.runner import ModelRunner
+from repro.core.sampler import RequestSampler
+from repro.core.scheduler import Scheduler
+from repro.grammar import GrammarMatcher, parse_gbnf, schema_to_gbnf
+from repro.grammar.gbnf import JSON_GBNF
+from repro.tokenizer import ByteBPETokenizer, DetokStreamer
+
+_SENTINEL = object()
+
+
+@dataclass
+class _Live:
+    req: api.ChatCompletionRequest
+    rid: str
+    model: str
+    prompt_ids: List[int]
+    out: "queue.Queue"
+    sampler: RequestSampler = None
+    matcher: Optional[GrammarMatcher] = None
+    streamer: DetokStreamer = None
+    embeds: Optional[np.ndarray] = None
+    slot: int = -1
+    pos: int = 0                      # next write position
+    generated: List[int] = field(default_factory=list)
+    text: str = ""
+    emitted: int = 0                  # chars already streamed
+    finish_reason: Optional[str] = None
+    t_submit: float = field(default_factory=time.time)
+    t_first: float = 0.0
+    t_done: float = 0.0
+    next_token: Optional[int] = None
+
+
+@dataclass
+class _LoadedModel:
+    runner: ModelRunner
+    tokenizer: ByteBPETokenizer
+    scheduler: Scheduler
+    image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
+
+
+class MLCEngine:
+    """Backend engine.  See ServiceWorkerMLCEngine for the frontend."""
+
+    def __init__(self):
+        self.models: Dict[str, _LoadedModel] = {}
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._shutdown = False
+
+    # -- model management ----------------------------------------------
+    def load_model(self, name: str, cfg, *, params=None, tokenizer=None,
+                   max_slots: int = 4, max_context: int = 256,
+                   seed: int = 0, quantize: bool = False,
+                   artifact_cache=None):
+        if tokenizer is None:
+            tokenizer = ByteBPETokenizer.train(
+                ["hello world this is a tiny corpus for the demo engine "
+                 '{"json": [1, 2.5, true], "key": "value"} '] * 2,
+                vocab_size=min(cfg.vocab_size, 512))
+        assert tokenizer.vocab_size <= cfg.vocab_size, \
+            (tokenizer.vocab_size, cfg.vocab_size)
+        runner = ModelRunner(cfg, params, max_slots=max_slots,
+                             max_context=max_context, seed=seed,
+                             quantize=quantize,
+                             artifact_cache=artifact_cache)
+        self.models[name] = _LoadedModel(
+            runner=runner, tokenizer=tokenizer,
+            scheduler=Scheduler(max_slots=max_slots,
+                                max_context=max_context))
+
+    def unload_model(self, name: str):
+        with self._lock:
+            self.models.pop(name, None)
+
+    def register_image(self, model: str, key: str, embeds: np.ndarray):
+        """Stub vision frontend: precomputed patch embeddings by key."""
+        self.models[model].image_embeds[key] = embeds
+
+    # -- public API ------------------------------------------------------
+    def chat_completions_create(
+            self, request: Union[api.ChatCompletionRequest, dict]):
+        if isinstance(request, dict):
+            request = api.ChatCompletionRequest.from_dict(request)
+        live = self._make_live(request)
+        with self._lock:
+            self.models[request.model].scheduler.enqueue(live)
+        self._ensure_loop()
+        self._wake.set()
+        if request.stream:
+            return self._iter_chunks(live)
+        return self._collect(live)
+
+    # -- request setup ----------------------------------------------------
+    def _make_live(self, req: api.ChatCompletionRequest) -> _Live:
+        if req.model not in self.models:
+            raise KeyError(f"model {req.model!r} not loaded")
+        lm = self.models[req.model]
+        tok = lm.tokenizer
+        prompt = tok.apply_chat_template([m.__dict__ for m in req.messages])
+        ids = tok.encode(prompt)
+        room = lm.runner.max_context - (
+            lm.runner.cfg.frontend.num_embeds
+            if lm.runner.cfg.frontend.kind == "vision" and req.image_embeds
+            else 0)
+        max_prompt = room - max(1, min(req.max_tokens, 16))
+        ids = ids[-max_prompt:]
+        matcher = None
+        rf = req.response_format
+        if rf.type == "json_object":
+            matcher = GrammarMatcher(parse_gbnf(JSON_GBNF), tok)
+        elif rf.type == "json_schema":
+            matcher = GrammarMatcher(
+                parse_gbnf(schema_to_gbnf(rf.json_schema or {})), tok)
+        elif rf.type == "grammar":
+            matcher = GrammarMatcher(parse_gbnf(rf.grammar or ""), tok)
+        embeds = None
+        if req.image_embeds:
+            embeds = lm.image_embeds[req.image_embeds]
+        return _Live(
+            req=req, rid=api.new_request_id(), model=req.model,
+            prompt_ids=ids, out=queue.Queue(),
+            sampler=RequestSampler(
+                temperature=req.temperature, top_p=req.top_p,
+                top_k=req.top_k, frequency_penalty=req.frequency_penalty,
+                presence_penalty=req.presence_penalty,
+                repetition_penalty=req.repetition_penalty,
+                logit_bias=req.logit_bias, seed=req.seed),
+            matcher=matcher, streamer=DetokStreamer(tok), embeds=embeds)
+
+    # -- loop --------------------------------------------------------------
+    def _ensure_loop(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def _loop(self):
+        idle_since = time.time()
+        while not self._shutdown:
+            busy = self.step()
+            if busy:
+                idle_since = time.time()
+            else:
+                if time.time() - idle_since > 5.0:
+                    return                       # loop thread retires
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    def step(self) -> bool:
+        """One engine step across all models.  Returns True if any work."""
+        busy = False
+        with self._lock:
+            models = list(self.models.items())
+        for name, lm in models:
+            busy |= self._step_model(name, lm)
+        return busy
+
+    def _step_model(self, name: str, lm: _LoadedModel) -> bool:
+        sched = lm.scheduler
+        busy = False
+        # ---- admission + prefill (one per step, WebLLM-style) ----
+        if sched.waiting and sched.free_slots:
+            live: _Live = sched.waiting.popleft()
+            slot = sched.admit(live)
+            live.slot = slot
+            t0 = time.time()
+            logits = lm.runner.prefill(slot, live.prompt_ids, live.embeds)
+            live.pos = len(live.prompt_ids) + (
+                lm.runner.cfg.frontend.num_embeds
+                if (lm.runner.cfg.frontend.kind == "vision"
+                    and live.embeds is not None) else 0)
+            live.t_first = time.time()
+            live._prefill_s = live.t_first - t0
+            self._emit_role(live)
+            self._consume_logits(lm, live, logits)
+            busy = True
+        # ---- batched decode over active slots ----
+        active = [sched.running[s] for s in sched.active_slots
+                  if sched.running[s].next_token is not None]
+        if active:
+            toks = {lv.slot: lv.next_token for lv in active}
+            poss = {lv.slot: lv.pos for lv in active}
+            logits = lm.runner.decode(toks, poss)
+            for lv in active:
+                lv.generated.append(lv.next_token)
+                lv.pos += 1
+                self._consume_logits(lm, lv, logits[lv.slot])
+            busy = True
+        return busy
+
+    # -- token consumption ---------------------------------------------
+    def _consume_logits(self, lm: _LoadedModel, live: _Live,
+                        logits: np.ndarray):
+        tok = lm.tokenizer
+        V = tok.vocab_size
+        mask = live.matcher.token_mask() if live.matcher else None
+        t = live.sampler.sample(logits[:V], mask)
+        if live.matcher is not None:
+            live.matcher.accept_token(t)
+        live.sampler.observe(t)
+
+        if t == tok.eos_id:
+            return self._finish(lm, live, "stop", consume_pending=True)
+        live.next_token = t
+        delta = live.streamer.put(t)
+        live.text += delta
+        self._emit_progress(lm, live)
+        n_gen = len(live.generated) + 1          # incl. pending next_token
+        if live.req.stop and any(s in live.text for s in live.req.stop):
+            cut = min(live.text.find(s) for s in live.req.stop
+                      if s in live.text)
+            live.text = live.text[:cut]
+            return self._finish(lm, live, "stop")
+        if n_gen >= live.req.max_tokens:
+            live.generated.append(t)
+            return self._finish(lm, live, "length")
+
+    def _safe_len(self, live: _Live) -> int:
+        if not live.req.stop:
+            return len(live.text)
+        hold = max(len(s) for s in live.req.stop) - 1
+        return max(live.emitted, len(live.text) - hold)
+
+    def _emit_role(self, live: _Live):
+        if live.req.stream:
+            live.out.put(api.ChatCompletionChunk(
+                id=live.rid, model=live.model,
+                choices=[api.ChunkChoice(
+                    delta=api.ChoiceDelta(content="", role="assistant"))]))
+
+    def _emit_progress(self, lm: _LoadedModel, live: _Live):
+        if not live.req.stream:
+            return
+        safe = self._safe_len(live)
+        if safe > live.emitted:
+            live.out.put(api.ChatCompletionChunk(
+                id=live.rid, model=live.model,
+                choices=[api.ChunkChoice(
+                    delta=api.ChoiceDelta(
+                        content=live.text[live.emitted:safe]))]))
+            live.emitted = safe
+
+    def _finish(self, lm: _LoadedModel, live: _Live, reason: str,
+                consume_pending: bool = False):
+        live.text += live.streamer.flush()
+        # the flush may surface a stop string that was buffered as
+        # incomplete UTF-8 — truncate again
+        for s in live.req.stop:
+            if s in live.text:
+                live.text = live.text[:live.text.find(s)]
+                reason = "stop"
+        live.finish_reason = reason
+        live.t_done = time.time()
+        live.next_token = None
+        lm.scheduler.release(live.slot)
+        n_prompt = len(live.prompt_ids)
+        n_gen = len(live.generated)
+        decode_s = max(live.t_done - live.t_first, 1e-9)
+        usage = api.Usage(
+            prompt_tokens=n_prompt, completion_tokens=n_gen,
+            total_tokens=n_prompt + n_gen,
+            extra={
+                "prefill_tokens_per_s": round(
+                    n_prompt / max(getattr(live, "_prefill_s", 1e-9), 1e-9),
+                    2),
+                "decode_tokens_per_s": round(n_gen / decode_s, 2),
+                "e2e_latency_s": round(live.t_done - live.t_submit, 4),
+            })
+        if live.req.stream:
+            final_delta = live.text[live.emitted:]
+            live.out.put(api.ChatCompletionChunk(
+                id=live.rid, model=live.model,
+                choices=[api.ChunkChoice(
+                    delta=api.ChoiceDelta(content=final_delta),
+                    finish_reason=reason)],
+                usage=usage))
+            live.out.put(_SENTINEL)
+        else:
+            live.out.put(api.ChatCompletionResponse(
+                id=live.rid, model=live.model,
+                choices=[api.Choice(
+                    message=api.ChatMessage("assistant", live.text),
+                    finish_reason=reason)],
+                usage=usage))
+            live.out.put(_SENTINEL)
+
+    # -- result plumbing ---------------------------------------------------
+    def _iter_chunks(self, live: _Live) -> Iterator[api.ChatCompletionChunk]:
+        while True:
+            item = live.out.get(timeout=120)
+            if item is _SENTINEL:
+                return
+            yield item
+
+    def _collect(self, live: _Live) -> api.ChatCompletionResponse:
+        item = live.out.get(timeout=120)
+        out = item
+        rest = live.out.get(timeout=120)
+        assert rest is _SENTINEL
+        return out
+
+    def shutdown(self):
+        self._shutdown = True
+        self._wake.set()

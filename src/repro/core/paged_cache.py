@@ -1,0 +1,101 @@
+"""Paged KV-cache management (WebLLM's WASM sequence manager, in Python).
+
+``PageManager`` is the pure bookkeeping side: a free list of physical
+pages, per-sequence page tables, allocate-on-append, and preemption
+support (free a whole sequence).  ``PagedKVState`` owns the jax-side page
+pools for every attention layer of a model and performs token writes +
+paged-attention reads (via the Pallas kernel on TPU / interpret on CPU).
+
+Non-attention state (SSM/RWKV/conv, MLA latents) is slot-based: O(1) per
+sequence, managed by the same slot ids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class SeqAlloc:
+    seq_id: int
+    slot: int                      # dense batch slot / state row
+    pages: List[int] = field(default_factory=list)
+    length: int = 0                # tokens currently stored
+
+
+class PageManager:
+    """Free-list page allocator + per-sequence page tables."""
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 pages_per_seq: int):
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.pages_per_seq = pages_per_seq
+        self.free_pages: List[int] = list(range(num_pages))
+        self.free_slots: List[int] = list(range(max_slots))
+        self.seqs: Dict[int, SeqAlloc] = {}
+        self._next_id = 0
+
+    # -- lifecycle ----------------------------------------------------
+    def new_seq(self) -> SeqAlloc:
+        if not self.free_slots:
+            raise OutOfPages("no free slots")
+        sid = self._next_id
+        self._next_id += 1
+        alloc = SeqAlloc(seq_id=sid, slot=self.free_slots.pop())
+        self.seqs[sid] = alloc
+        return alloc
+
+    def free_seq(self, seq_id: int):
+        alloc = self.seqs.pop(seq_id)
+        self.free_pages.extend(alloc.pages)
+        self.free_slots.append(alloc.slot)
+
+    # -- growth ---------------------------------------------------------
+    def ensure_capacity(self, seq_id: int, new_length: int):
+        """Allocate pages so the sequence can hold ``new_length`` tokens."""
+        alloc = self.seqs[seq_id]
+        need = -(-new_length // self.page_size)          # ceil
+        if need > self.pages_per_seq:
+            raise OutOfPages(
+                f"sequence needs {need} pages > pages_per_seq "
+                f"{self.pages_per_seq}")
+        while len(alloc.pages) < need:
+            if not self.free_pages:
+                raise OutOfPages("page pool exhausted")
+            alloc.pages.append(self.free_pages.pop())
+
+    def append_tokens(self, seq_id: int, n: int = 1):
+        alloc = self.seqs[seq_id]
+        self.ensure_capacity(seq_id, alloc.length + n)
+        alloc.length += n
+
+    # -- views -----------------------------------------------------------
+    def page_table(self, seq_ids: List[int]) -> np.ndarray:
+        """[len(seq_ids), pages_per_seq] int32 (0-padded)."""
+        out = np.zeros((len(seq_ids), self.pages_per_seq), np.int32)
+        for i, sid in enumerate(seq_ids):
+            pages = self.seqs[sid].pages
+            out[i, :len(pages)] = pages
+        return out
+
+    def context_lens(self, seq_ids: List[int]) -> np.ndarray:
+        return np.array([self.seqs[s].length for s in seq_ids], np.int32)
+
+    def slots(self, seq_ids: List[int]) -> np.ndarray:
+        return np.array([self.seqs[s].slot for s in seq_ids], np.int32)
+
+    @property
+    def num_free_pages(self) -> int:
+        return len(self.free_pages)
+
+    def stats(self) -> dict:
+        return {"free_pages": len(self.free_pages),
+                "used_pages": self.num_pages - len(self.free_pages),
+                "active_seqs": len(self.seqs)}

@@ -1,0 +1,187 @@
+"""PagedModelRunner: decode through the paged KV cache + Pallas kernel.
+
+The TPU-native serving path (WebLLM's PagedAttention analogue): attention
+layers keep physical page pools ``[P, page_size, Kv, Dh]``; per-step the
+new token's K/V are scattered into each sequence's current page and
+attention runs via ``kernels.paged_attention`` (scalar-prefetched page
+tables).  Pure-GQA decoder-only models (llama/phi/yi/qwen/nemo/internvl)
+are supported; hybrid/SSM/MLA families use the dense-slot runner.
+
+Page bookkeeping lives in :class:`repro.core.paged_cache.PageManager`;
+this runner owns the jax-side pools and a jitted step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.paged_cache import PageManager
+from repro.kernels.ops import paged_attention
+from repro.models import model
+from repro.models.attention import _project, _qk_norm
+from repro.models.layers import apply_rope, mlp, rmsnorm, shard_act
+from repro.models.pdef import init_params
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    return (not cfg.is_encdec
+            and all(s.mixer == "attn" and s.ffn == "dense"
+                    for s in cfg.layer_pattern))
+
+
+class PagedModelRunner:
+    """Decode-only paged runner (prefill fills pages via the dense path)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, num_pages: int = 64,
+                 page_size: int = 16, max_slots: int = 4,
+                 pages_per_seq: int = 8, seed: int = 0):
+        assert paged_supported(cfg), f"{cfg.name}: paged path needs pure GQA"
+        self.cfg = cfg
+        self.page_size = page_size
+        self.pages_per_seq = pages_per_seq
+        self.max_slots = max_slots
+        self.pm = PageManager(num_pages, page_size, max_slots, pages_per_seq)
+        if params is None:
+            params = init_params(model.params_def(cfg),
+                                 jax.random.PRNGKey(seed))
+        self.params = params
+        L, Kv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        self.k_pages = jnp.zeros((L, num_pages, page_size, Kv, Dh),
+                                 jnp.bfloat16)
+        self.v_pages = jnp.zeros_like(self.k_pages)
+        self._step = jax.jit(self._decode_step, donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------
+    def _layer_params(self):
+        """Unstack the scanned block params into per-layer trees."""
+        g = self.cfg.grouped_pattern()
+        layers = list(self.params["decoder"]["prefix"])
+        if g.n_blocks:
+            stacked = self.params["decoder"]["blocks"]
+            for i in range(g.n_blocks):
+                for j in range(len(g.block)):
+                    layers.append(jax.tree.map(lambda x: x[i], stacked[j]))
+        layers += list(self.params["decoder"]["suffix"])
+        return layers
+
+    def _decode_step(self, params, k_pages, v_pages, token, pos,
+                     page_table, lens, page_idx, page_off):
+        """token [B,1], pos [B], page_table [B,pps], lens [B] (incl. the
+        new token), page_idx/page_off [B]: physical write location."""
+        cfg = self.cfg
+        B = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0)           # [B,1,D]
+        layers = self._layer_params_traced(params)
+        for li, p in enumerate(layers):
+            h = rmsnorm(x, p["mixer_norm"], cfg.norm_eps)
+            q = _project(cfg, p["attn"], h, "q", cfg.n_heads)  # [B,1,H,Dh]
+            k = _project(cfg, p["attn"], h, "k", cfg.n_kv_heads)
+            v = _project(cfg, p["attn"], h, "v", cfg.n_kv_heads)
+            q, k = _qk_norm(cfg, p["attn"], q, k)
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], cfg.rope_theta)
+            # scatter the new K/V into each sequence's current page
+            k_pages = k_pages.at[li, page_idx, page_off].set(
+                k[:, 0].astype(k_pages.dtype))
+            v_pages = v_pages.at[li, page_idx, page_off].set(
+                v[:, 0].astype(v_pages.dtype))
+            att = paged_attention(q[:, 0], k_pages[li], v_pages[li],
+                                  page_table, lens)           # [B,H,Dh]
+            y = att.reshape(B, 1, -1) @ p["attn"]["wo"]
+            x = x + y
+            h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+            x = x + mlp(h, p["ffn"], cfg.act)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return logits, k_pages, v_pages
+
+    def _layer_params_traced(self, params):
+        g = self.cfg.grouped_pattern()
+        layers = list(params["decoder"]["prefix"])
+        if g.n_blocks:
+            stacked = params["decoder"]["blocks"]
+            for i in range(g.n_blocks):
+                for j in range(len(g.block)):
+                    layers.append(jax.tree.map(lambda x: x[i], stacked[j]))
+        layers += list(params["decoder"]["suffix"])
+        return layers
+
+    # -- host-side API ---------------------------------------------------
+    def prefill_seq(self, prompt_ids: List[int]) -> int:
+        """Prefill a new sequence via the dense path, scatter its KV into
+        freshly allocated pages.  Returns seq_id."""
+        cfg = self.cfg
+        alloc = self.pm.new_seq()
+        T = len(prompt_ids)
+        self.pm.append_tokens(alloc.seq_id, T)
+        caches = model.init_caches(cfg, 1, T)
+        toks = jnp.asarray(np.array(prompt_ids, np.int32)[None])
+        self._last_logits, caches, _ = model.prefill(
+            cfg, self.params, toks, caches=caches)
+        # move dense cache rows into this sequence's pages
+        g = cfg.grouped_pattern()
+        li = 0
+        k_pages, v_pages = self.k_pages, self.v_pages
+        pages = np.array(alloc.pages, np.int32)
+
+        def put(li, kk, vv):
+            nonlocal k_pages, v_pages
+            # kk/vv: [T, Kv, Dh] -> page layout
+            pad = (-T) % self.page_size
+            kk = jnp.pad(kk, ((0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(vv, ((0, pad), (0, 0), (0, 0)))
+            kk = kk.reshape(-1, self.page_size, *kk.shape[1:])
+            vv = vv.reshape(-1, self.page_size, *vv.shape[1:])
+            k_pages = k_pages.at[li, pages[:kk.shape[0]]].set(
+                kk.astype(k_pages.dtype))
+            v_pages = v_pages.at[li, pages[:vv.shape[0]]].set(
+                vv.astype(v_pages.dtype))
+
+        for c in caches["prefix"]:
+            put(li, c["mixer"]["k"][0, :T], c["mixer"]["v"][0, :T])
+            li += 1
+        for i in range(g.n_blocks):
+            for j in range(len(g.block)):
+                c = caches["blocks"][j]
+                put(li, c["mixer"]["k"][i, 0, :T], c["mixer"]["v"][i, 0, :T])
+                li += 1
+        for c in caches["suffix"]:
+            put(li, c["mixer"]["k"][0, :T], c["mixer"]["v"][0, :T])
+            li += 1
+        self.k_pages, self.v_pages = k_pages, v_pages
+        return alloc.seq_id
+
+    def last_prefill_logits(self) -> np.ndarray:
+        return np.asarray(self._last_logits[0, -1].astype(jnp.float32))
+
+    def decode(self, seq_tokens: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """One batched decode step for {seq_id: token}."""
+        sids = sorted(seq_tokens)
+        B = len(sids)
+        pos = self.pm.context_lens(sids)               # write position
+        for sid in sids:
+            self.pm.append_tokens(sid, 1)
+        table = self.pm.page_table(sids)
+        lens = self.pm.context_lens(sids)              # now includes new tok
+        page_idx = np.array(
+            [self.pm.seqs[s].pages[p // self.page_size]
+             for s, p in zip(sids, pos)], np.int32)
+        page_off = (pos % self.page_size).astype(np.int32)
+        tok = np.array([[seq_tokens[s]] for s in sids], np.int32)
+        logits, self.k_pages, self.v_pages = self._step(
+            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
+            jnp.asarray(pos.astype(np.int32)), jnp.asarray(table),
+            jnp.asarray(lens), jnp.asarray(page_idx), jnp.asarray(page_off))
+        out = np.asarray(logits[:, 0].astype(jnp.float32))
+        return {s: out[i] for i, s in enumerate(sids)}
+
+    def free(self, seq_id: int):
+        self.pm.free_seq(seq_id)

@@ -1,0 +1,135 @@
+"""ModelRunner: the jax-side execution backend of the engine.
+
+Owns the model params, the batched decode caches (``max_slots`` dense
+slots), and the AOT-compiled step functions.  Prefill runs per sequence
+(optionally right-padded to a power-of-two bucket for attention-only
+models, with cache ``pos`` invalidation for the padding); decode runs the
+whole slot batch every step with ragged per-slot positions.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.artifact import ArtifactCache
+from repro.models import model
+from repro.models.pdef import init_params
+
+
+def _attn_only(cfg: ModelConfig) -> bool:
+    return all(s.mixer in ("attn", "swa", "mla") for s in cfg.layer_pattern)
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 max_slots: int = 4, max_context: int = 256,
+                 seed: int = 0, quantize: bool = False,
+                 artifact_cache: Optional[ArtifactCache] = None,
+                 bucket_prefill: Optional[bool] = None):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_context = max_context
+        self.cache = artifact_cache or ArtifactCache()
+        if params is None:
+            params = init_params(model.params_def(cfg),
+                                 jax.random.PRNGKey(seed))
+        if quantize:
+            from repro.quant.int4 import quantize_tree
+            params = quantize_tree(params, model.params_def(cfg))
+        self.params = params
+        self.caches = model.init_caches(cfg, max_slots, max_context)
+        self.bucket = (_attn_only(cfg) if bucket_prefill is None
+                       else bucket_prefill)
+        self._prefill_fns: Dict[int, object] = {}
+
+        cfgc = cfg
+
+        def _decode(params, caches, token, pos):
+            return model.decode_step(cfgc, params, caches, token, pos)
+
+        self._decode_jit = jax.jit(_decode, donate_argnums=(1,))
+
+        def _prefill(params, caches, tokens, embeds=None):
+            logits, new_caches, _ = model.prefill(
+                cfgc, params, tokens, caches=caches, embeds=embeds)
+            return logits, new_caches
+
+        self._prefill_jit = jax.jit(_prefill, static_argnames=())
+        self._insert_jit = jax.jit(self._insert, donate_argnums=(0,),
+                                   static_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        if not self.bucket:
+            return n
+        return min(self.max_context, 1 << max(4, math.ceil(math.log2(n))))
+
+    def prefill(self, slot: int, prompt_ids: List[int],
+                embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """Prefill one sequence into ``slot``; returns last-token logits."""
+        T = len(prompt_ids)
+        e = None
+        if embeds is not None:
+            e = jnp.asarray(embeds)[None]
+        extra = (self.cfg.frontend.num_embeds
+                 if (self.cfg.frontend.kind == "vision" and e is not None)
+                 else 0)
+        assert T + extra <= self.max_context, (T, extra, self.max_context)
+        Tp = self._bucket_len(T)
+        if Tp + extra > self.max_context:
+            Tp = self.max_context - extra
+        toks = np.zeros((1, Tp), np.int32)
+        toks[0, :T] = prompt_ids
+        one_caches = model.init_caches(self.cfg, 1, self.max_context)
+        logits, one_caches = self._prefill_jit(
+            self.params, one_caches, jnp.asarray(toks), e) \
+            if e is not None else self._prefill_jit(
+                self.params, one_caches, jnp.asarray(toks))
+        self.caches = self._insert_jit(self.caches, one_caches, slot,
+                                       T + extra)
+        return np.asarray(logits[0, T - 1 + extra].astype(jnp.float32))
+
+    def _insert(self, full, one, slot: int, t_real):
+        """Insert a batch-1 cache into the slot of the batched cache."""
+        def ins(axis):
+            def f(path, dst, src):
+                names = [str(getattr(p, "key", "")) for p in path]
+                src = src.astype(dst.dtype)
+                if names and names[-1] == "pos":
+                    src = jnp.where(src < t_real, src, -1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src, slot, axis=axis)
+            return f
+
+        out = {}
+        out["prefix"] = [
+            jax.tree_util.tree_map_with_path(ins(0), d, s)
+            for d, s in zip(full["prefix"], one["prefix"])]
+        out["blocks"] = tuple(
+            jax.tree_util.tree_map_with_path(ins(1), d, s)
+            for d, s in zip(full["blocks"], one["blocks"]))
+        out["suffix"] = [
+            jax.tree_util.tree_map_with_path(ins(0), d, s)
+            for d, s in zip(full["suffix"], one["suffix"])]
+        return out
+
+    def decode(self, tokens_by_slot: Dict[int, int],
+               pos_by_slot: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """One decode step over the full slot batch; returns logits per
+        active slot."""
+        tok = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.zeros((self.max_slots,), np.int32)
+        for s, t in tokens_by_slot.items():
+            tok[s, 0] = t
+            pos[s] = pos_by_slot[s]
+        logits, self.caches = self._decode_jit(
+            self.params, self.caches, jnp.asarray(tok), jnp.asarray(pos))
+        out_np = np.asarray(logits[:, 0].astype(jnp.float32))
+        return {s: out_np[s] for s in tokens_by_slot}

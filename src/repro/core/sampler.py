@@ -1,0 +1,82 @@
+"""Per-request sampling: temperature / top-k / top-p, penalties, logit
+bias, seeded RNG, and grammar bitmask application.  Runs on host (numpy)
+— logits arrive from the accelerator once per step.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class RequestSampler:
+    def __init__(self, *, temperature: float = 1.0, top_p: float = 1.0,
+                 top_k: int = 0, frequency_penalty: float = 0.0,
+                 presence_penalty: float = 0.0,
+                 repetition_penalty: float = 1.0,
+                 logit_bias: Optional[Dict[int, float]] = None,
+                 seed: Optional[int] = None):
+        self.temperature = max(0.0, temperature)
+        self.top_p = top_p
+        self.top_k = top_k
+        self.frequency_penalty = frequency_penalty
+        self.presence_penalty = presence_penalty
+        self.repetition_penalty = repetition_penalty
+        self.logit_bias = logit_bias or {}
+        self.rng = np.random.default_rng(seed)
+        self.counts: Counter = Counter()       # generated-token counts
+
+    def observe(self, token: int):
+        self.counts[token] += 1
+
+    def sample(self, logits: np.ndarray,
+               grammar_mask: Optional[np.ndarray] = None) -> int:
+        logits = logits.astype(np.float64).copy()
+        for t, b in self.logit_bias.items():
+            if 0 <= t < logits.shape[0]:
+                logits[t] += b
+        if self.counts:
+            idx = np.fromiter(self.counts.keys(), dtype=np.int64)
+            cnt = np.fromiter(self.counts.values(), dtype=np.float64)
+            logits[idx] -= self.frequency_penalty * cnt
+            logits[idx] -= self.presence_penalty
+            if self.repetition_penalty != 1.0:
+                sel = logits[idx]
+                logits[idx] = np.where(sel > 0,
+                                       sel / self.repetition_penalty,
+                                       sel * self.repetition_penalty)
+        if grammar_mask is not None:
+            if not grammar_mask.any():
+                raise RuntimeError("grammar mask excludes every token")
+            logits = np.where(grammar_mask, logits, -np.inf)
+        if self.temperature == 0.0:
+            return int(np.argmax(logits))
+        logits = logits / self.temperature
+        if self.top_k > 0:
+            kth = np.partition(logits, -self.top_k)[-self.top_k]
+            logits = np.where(logits >= kth, logits, -np.inf)
+        probs = _softmax(logits)
+        if self.top_p < 1.0:
+            order = np.argsort(-probs)
+            csum = np.cumsum(probs[order])
+            cutoff = max(1, int(np.searchsorted(csum, self.top_p) + 1))
+            keep = order[:cutoff]
+            mask = np.zeros_like(probs, dtype=bool)
+            mask[keep] = True
+            probs = np.where(mask, probs, 0.0)
+            probs = probs / probs.sum()
+        return int(self.rng.choice(probs.shape[0], p=probs))
+
+
+def _softmax(x: np.ndarray) -> np.ndarray:
+    m = np.max(x[np.isfinite(x)]) if np.isfinite(x).any() else 0.0
+    e = np.exp(np.clip(x - m, -700, 50))
+    e[~np.isfinite(x)] = 0.0
+    s = e.sum()
+    if s <= 0:
+        # degenerate: fall back to argmax one-hot
+        out = np.zeros_like(e)
+        out[int(np.argmax(x))] = 1.0
+        return out
+    return e / s

@@ -1,0 +1,70 @@
+"""Continuous-batching scheduler: FCFS admission into a fixed set of
+decode slots, with page accounting and preemption.
+
+The dense backend reserves ``max_context`` per slot up front (slots are
+the unit of admission); the paged backend admits as long as the page pool
+can cover the prompt and preempts the newest sequence when an append
+fails mid-decode (its request is re-queued, WebLLM-style graceful
+degradation rather than a crash).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core.paged_cache import OutOfPages, PageManager
+
+
+class Scheduler:
+    def __init__(self, *, max_slots: int, max_context: int,
+                 page_manager: Optional[PageManager] = None):
+        self.max_slots = max_slots
+        self.max_context = max_context
+        self.pm = page_manager
+        self.waiting: Deque = deque()
+        self.running: Dict[int, object] = {}       # slot -> request state
+        self.free_slots: List[int] = list(range(max_slots))
+        self._admit_seq = 0
+        self._admitted_at: Dict[int, int] = {}     # slot -> admission order
+
+    def enqueue(self, item):
+        self.waiting.append(item)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        if not self.free_slots or not self.waiting:
+            return False
+        if self.pm is not None:
+            pages_needed = -(-prompt_len // self.pm.page_size) + 1
+            return self.pm.num_free_pages >= pages_needed
+        return True
+
+    def admit(self, item) -> int:
+        slot = self.free_slots.pop()
+        self.running[slot] = item
+        self._admit_seq += 1
+        self._admitted_at[slot] = self._admit_seq
+        return slot
+
+    def release(self, slot: int):
+        self.running.pop(slot, None)
+        self._admitted_at.pop(slot, None)
+        self.free_slots.append(slot)
+
+    def preempt_newest(self):
+        """Kick the most recently admitted sequence back to the queue."""
+        if not self.running:
+            raise OutOfPages("nothing to preempt")
+        slot = max(self.running, key=lambda s: self._admitted_at[s])
+        item = self.running.pop(slot)
+        self._admitted_at.pop(slot, None)
+        self.free_slots.append(slot)
+        self.waiting.appendleft(item)
+        return slot, item
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self.running)
+
+    def stats(self) -> dict:
+        return {"waiting": len(self.waiting), "running": len(self.running),
+                "free_slots": len(self.free_slots)}

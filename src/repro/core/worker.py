@@ -1,0 +1,137 @@
+"""ServiceWorkerMLCEngine — the frontend/backend engine split (§2.2).
+
+WebLLM keeps the UI thread responsive by running MLCEngine inside a web
+worker and exchanging ONLY OpenAI-style JSON messages over postMessage.
+Here the backend engine runs in a worker thread; the frontend handle
+serializes every request to a JSON string, the backend replies with JSON
+chunks — nothing else crosses the boundary (asserted in tests).
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import uuid
+from typing import Dict, Iterator, Optional, Union
+
+from repro.core import api
+from repro.core.engine import MLCEngine
+
+
+class _MessagePort:
+    """A pair of JSON-string queues (the postMessage analogue)."""
+
+    def __init__(self):
+        self.to_worker: "queue.Queue[str]" = queue.Queue()
+        self.to_client: "queue.Queue[str]" = queue.Queue()
+
+
+class BackendWorker:
+    """Owns the real MLCEngine; speaks only JSON over the port."""
+
+    def __init__(self, port: _MessagePort, engine: Optional[MLCEngine] = None):
+        self.port = port
+        self.engine = engine or MLCEngine()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        while True:
+            raw = self.port.to_worker.get()
+            msg = json.loads(raw)
+            kind = msg.get("kind")
+            if kind == "shutdown":
+                self.engine.shutdown()
+                return
+            if kind == "chat_completion":
+                threading.Thread(
+                    target=self._run_completion, args=(msg,),
+                    daemon=True).start()
+            elif kind == "ping":
+                self._post({"kind": "pong", "id": msg.get("id")})
+
+    def _run_completion(self, msg: dict):
+        mid = msg["id"]
+        try:
+            req = api.ChatCompletionRequest.from_dict(msg["request"])
+            if req.stream:
+                for chunk in self.engine.chat_completions_create(req):
+                    self._post({"kind": "chunk", "id": mid,
+                                "data": chunk.to_dict()})
+                self._post({"kind": "done", "id": mid})
+            else:
+                resp = self.engine.chat_completions_create(req)
+                self._post({"kind": "response", "id": mid,
+                            "data": resp.to_dict()})
+                self._post({"kind": "done", "id": mid})
+        except Exception as e:                      # surfaced to frontend
+            self._post({"kind": "error", "id": mid, "message": str(e)})
+
+    def _post(self, obj: dict):
+        self.port.to_client.put(json.dumps(obj))
+
+
+class ServiceWorkerMLCEngine:
+    """Frontend handle: endpoint-like API, JSON-only transport."""
+
+    def __init__(self, backend_engine: Optional[MLCEngine] = None):
+        self.port = _MessagePort()
+        self.worker = BackendWorker(self.port, backend_engine)
+        self._pending: Dict[str, "queue.Queue[dict]"] = {}
+        self._lock = threading.Lock()
+        self._rx = threading.Thread(target=self._dispatch, daemon=True)
+        self._rx.start()
+
+    # the backend engine object is NOT reachable through this API --------
+    def _dispatch(self):
+        while True:
+            raw = self.port.to_client.get()
+            msg = json.loads(raw)
+            mid = msg.get("id")
+            with self._lock:
+                q = self._pending.get(mid)
+            if q is not None:
+                q.put(msg)
+
+    def _send(self, obj: dict):
+        self.port.to_worker.put(json.dumps(obj))
+
+    def chat_completions_create(
+            self, request: Union[api.ChatCompletionRequest, dict]):
+        if isinstance(request, api.ChatCompletionRequest):
+            request = request.to_dict()
+        mid = uuid.uuid4().hex
+        q: "queue.Queue[dict]" = queue.Queue()
+        with self._lock:
+            self._pending[mid] = q
+        self._send({"kind": "chat_completion", "id": mid,
+                    "request": request})
+        if request.get("stream"):
+            return self._stream(mid, q)
+        msg = q.get(timeout=180)
+        if msg["kind"] == "error":
+            raise RuntimeError(msg["message"])
+        done = q.get(timeout=180)
+        assert done["kind"] == "done"
+        self._drop(mid)
+        return api.ChatCompletionResponse.from_dict(msg["data"])
+
+    def _stream(self, mid: str,
+                q: "queue.Queue[dict]") -> Iterator[api.ChatCompletionChunk]:
+        try:
+            while True:
+                msg = q.get(timeout=180)
+                if msg["kind"] == "done":
+                    return
+                if msg["kind"] == "error":
+                    raise RuntimeError(msg["message"])
+                yield api.ChatCompletionChunk.from_dict(msg["data"])
+        finally:
+            self._drop(mid)
+
+    def _drop(self, mid: str):
+        with self._lock:
+            self._pending.pop(mid, None)
+
+    def shutdown(self):
+        self._send({"kind": "shutdown"})

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (LMDataPipeline, synthetic_corpus,  # noqa
+                                 text_corpus)

@@ -1,0 +1,83 @@
+"""LM data pipeline: corpus -> tokenize -> pack -> shard -> batches.
+
+Deterministic (seeded) and host-shardable: each host takes every
+``num_shards``-th packed sequence.  The synthetic corpus is a seeded
+order-2 Markov chain over words — enough structure for a tiny model to
+measurably learn (loss decreases), with no external data dependency.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+_WORDS = ("the quick brown fox jumps over lazy dog a cat sat on mat "
+          "in browser we run models with pages and tokens fast "
+          "json value string number true false null").split()
+
+
+def synthetic_corpus(n_docs: int = 200, seed: int = 0,
+                     doc_len: tuple = (20, 80)) -> List[str]:
+    rng = np.random.default_rng(seed)
+    n = len(_WORDS)
+    # order-2 markov transition table
+    trans = rng.dirichlet(np.ones(n) * 0.3, size=(n, n))
+    docs = []
+    for _ in range(n_docs):
+        ln = int(rng.integers(*doc_len))
+        w = list(rng.integers(0, n, size=2))
+        for _ in range(ln - 2):
+            w.append(int(rng.choice(n, p=trans[w[-2], w[-1]])))
+        docs.append(" ".join(_WORDS[i] for i in w))
+    return docs
+
+
+def text_corpus(paths: Sequence[str]) -> List[str]:
+    docs = []
+    for p in paths:
+        with open(p) as f:
+            docs.extend(x.strip() for x in f.read().split("\n\n") if x.strip())
+    return docs
+
+
+class LMDataPipeline:
+    """Packs tokenized docs into fixed-length training sequences."""
+
+    def __init__(self, tokenizer, docs: Sequence[str], *, seq_len: int,
+                 batch_size: int, shard: int = 0, num_shards: int = 1,
+                 seed: int = 0):
+        self.tok = tokenizer
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.shard = shard
+        self.num_shards = num_shards
+        self.seed = seed
+        ids: List[int] = []
+        for d in docs:
+            ids.extend(self.tok.encode(d))
+            ids.append(self.tok.eos_id)
+        self._stream = np.array(ids, np.int32)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(self.seed)
+        L = self.seq_len + 1
+        n_seq = len(self._stream) // L
+        order = np.arange(n_seq)
+        epoch = 0
+        batch_tokens, batch_labels = [], []
+        while True:
+            rng_e = np.random.default_rng(self.seed + epoch)
+            rng_e.shuffle(order)
+            for idx in order[self.shard::self.num_shards]:
+                chunk = self._stream[idx * L:(idx + 1) * L]
+                batch_tokens.append(chunk[:-1])
+                batch_labels.append(chunk[1:])
+                if len(batch_tokens) == self.batch_size:
+                    yield {"tokens": np.stack(batch_tokens),
+                           "labels": np.stack(batch_labels)}
+                    batch_tokens, batch_labels = [], []
+            epoch += 1
+
+    def take(self, n: int) -> List[Dict[str, np.ndarray]]:
+        return list(itertools.islice(iter(self), n))

@@ -1,0 +1,3 @@
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (flash_attention, paged_attention,  # noqa
+                               rmsnorm, w4a16_gemm)

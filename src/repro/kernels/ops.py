@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU hosts the kernels execute with ``interpret=True`` (Pallas runs the
+kernel body in Python) — the TPU path compiles the same kernels natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.w4a16_gemm import w4a16_gemm as _w4a16
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, context_lens, *,
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    return _paged(q, k_pages, v_pages, page_table, context_lens,
+                  scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def w4a16_gemm(x, w_packed, scales, *, group: int = 64, block_m: int = 128,
+               block_n: int = 128, block_k: int = 128,
+               interpret: Optional[bool] = None):
+    return _w4a16(x, w_packed, scales, group=group, block_m=block_m,
+                  block_n=block_n, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, residual=None,
+            block_rows: int = 256, interpret: Optional[bool] = None):
+    return _rmsnorm(x, scale, eps=eps, residual=residual,
+                    block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,124 @@
+"""Paged-attention decode — Pallas TPU kernel.
+
+The TPU rethink of WebLLM's PagedAttention WebGPU kernel: the per-sequence
+page table is SCALAR-PREFETCHED (``PrefetchScalarGridSpec``) so the
+``BlockSpec`` index maps can route each grid step's HBM->VMEM DMA to the
+right physical page — the gather never materializes in HBM.  Online
+softmax (flash-decode) accumulates across the sequential page grid
+dimension in VMEM scratch.
+
+Shapes:
+    q            [B, H, D]
+    k_pages      [P, page_size, Kv, D]   (physical page pool)
+    v_pages      [P, page_size, Kv, D]
+    page_table   [B, pages_per_seq] int32
+    context_lens [B] int32
+Grid: (B, Kv, pages_per_seq); G = H // Kv query heads ride along per kv
+head (rows of an MXU-aligned [G_pad, D] tile).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, lens_ref,          # scalar-prefetch refs
+            q_ref, k_ref, v_ref, o_ref,        # blocks
+            m_scr, l_scr, acc_scr, *,
+            scale: float, page_size: int, pages_per_seq: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = lens_ref[b]
+    page_start = pi * page_size
+
+    @pl.when(page_start < ctx)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G, page]
+        t = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(t < ctx, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, context_lens: jax.Array, *,
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Returns [B, H, D] attention output over the paged KV cache."""
+    B, H, D = q.shape
+    P, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # q laid out per kv head: [B, Kv, G, D]
+    qg = q.reshape(B, Kv, G, D)
+
+    grid = (B, Kv, pages_per_seq)
+
+    def q_map(b, kv, pi, pt, lens):
+        return (b, kv, 0, 0)
+
+    def kv_map(b, kv, pi, pt, lens):
+        # scalar-prefetched page table routes the DMA to the physical page
+        return (pt[b, pi], 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, page_size=page_size,
+                          pages_per_seq=pages_per_seq),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, context_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are small, obviously-correct implementations used by the kernel
+tests (``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+``assert_allclose`` against these).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: [B,S,H,D]; k,v: [B,S,Kv,D] (GQA: H = Kv*G).  fp32 softmax."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+    qf = q.reshape(B, S, Kv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) * scale
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = i >= j
+        if window:
+            mask &= (i - j) < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, context_lens: jax.Array,
+                        *, scale: Optional[float] = None) -> jax.Array:
+    """Decode attention over a paged KV cache.
+
+    q: [B, H, D]; k_pages/v_pages: [P, page_size, Kv, D];
+    page_table: [B, pages_per_seq] int32; context_lens: [B] int32.
+    """
+    B, H, D = q.shape
+    P, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_table.shape[1]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+
+    # gather each sequence's pages -> [B, pages_per_seq*page_size, Kv, D]
+    k = k_pages[page_table].reshape(B, pages_per_seq * page_size, Kv, D)
+    v = v_pages[page_table].reshape(B, pages_per_seq * page_size, Kv, D)
+    qf = q.reshape(B, Kv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qf,
+                        k.astype(jnp.float32)) * scale
+    t = jnp.arange(pages_per_seq * page_size)[None, :]
+    valid = t < context_lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def w4a16_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
+                   group: int) -> jax.Array:
+    """x: [M,K] bf16; w_packed: [K//2, N] int8 (2 nibbles along K);
+    scales: [K//group, N] bf16.  Returns [M,N] bf16."""
+    K2, N = w_packed.shape
+    K = K2 * 2
+    low = jnp.right_shift(jnp.left_shift(w_packed, 4), 4)
+    high = jnp.right_shift(w_packed, 4)
+    wq = jnp.stack([low, high], axis=1).reshape(K, N)      # int8 in [-8,7]
+    w = (wq.astype(jnp.float32).reshape(K // group, group, N)
+         * scales.astype(jnp.float32)[:, None, :]).reshape(K, N)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+                residual: Optional[jax.Array] = None) -> jax.Array:
+    """Fused (residual-add +) RMSNorm: y = rms(x + residual) * scale."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,64 @@
+"""Fused (residual-add +) RMSNorm — Pallas TPU kernel.
+
+MLC/TVM fuses the pre-attention norm with the residual add when compiling
+WebLLM's WebGPU kernels; this is the TPU equivalent.  One row-block per
+grid step, fp32 statistics in VREGs, everything stays in VMEM.
+
+    x [R, D], scale [D] -> [R, D]   (optional residual [R, D] added first)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _kernel_res(x_ref, r_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+            residual: Optional[jax.Array] = None, block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jax.Array:
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    R = x2.shape[0]
+    block_rows = min(block_rows, R)
+    while R % block_rows:
+        block_rows -= 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (R // block_rows,)
+    row_spec = pl.BlockSpec((block_rows, D), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((D,), lambda i: (0,))
+    if residual is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, eps=eps),
+            grid=grid, in_specs=[row_spec, s_spec], out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+            interpret=interpret,
+        )(x2, scale)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_res, eps=eps),
+            grid=grid, in_specs=[row_spec, row_spec, s_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+            interpret=interpret,
+        )(x2, residual.reshape(-1, D), scale)
+    return out.reshape(orig_shape)

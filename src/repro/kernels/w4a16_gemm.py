@@ -1,0 +1,91 @@
+"""Fused int4-dequant GEMM (w4a16) — Pallas TPU kernel.
+
+WebLLM serves q4f16 models: weights live packed (two int4 nibbles per
+int8) with bf16 group scales, and the dequant is fused into the GEMM so
+the packed form is what crosses HBM.  TPU adaptation: MXU-aligned
+(128-multiple) M/N/K tiles, nibble unpack + scale in VREGs right before
+the ``dot``, fp32 VMEM accumulator across the sequential K grid dim.
+
+    x        [M, K]   bf16
+    w_packed [K/2, N] int8   (low nibble = even k, high = odd k)
+    scales   [K/G, N] bf16   (per-(group, column) symmetric scales)
+    out      [M, N]   bf16
+
+Grid: (M/bm, N/bn, K/bk) — K innermost/sequential.  ``bk`` is a multiple
+of the quant group size so each K-tile sees whole groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_scr, *,
+            block_k: int, group: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    packed = w_ref[...]                               # [bk/2, bn] int8
+    low = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    high = jnp.right_shift(packed, 4)
+    wq = jnp.stack([low, high], axis=1)               # [bk/2, 2, bn]
+    wq = wq.reshape(block_k, -1)                      # [bk, bn]
+    scales = s_ref[...]                               # [bk/G, bn]
+    w = (wq.reshape(block_k // group, group, -1).astype(jnp.float32)
+         * scales.astype(jnp.float32)[:, None, :])
+    w = w.reshape(block_k, -1).astype(jnp.bfloat16)   # [bk, bn]
+    x = x_ref[...]                                    # [bm, bk]
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def w4a16_gemm(x: jax.Array, w_packed: jax.Array, scales: jax.Array, *,
+               group: int = 64, block_m: int = 128, block_n: int = 128,
+               block_k: int = 128,
+               interpret: Optional[bool] = None) -> jax.Array:
+    M, K = x.shape
+    K2, N = w_packed.shape
+    assert K == 2 * K2, (K, K2)
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    if block_k % group:
+        block_k = group
+    assert (M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+            and block_k % group == 0), (M, N, K, block_m, block_n, block_k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (M // block_m, N // block_n, K // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k // 2, block_n),
+                         lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k // group, block_n),
+                         lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_packed, scales)
+    return out

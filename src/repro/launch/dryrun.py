@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh(es), record memory/cost/collective analysis.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init).  Run single pairs::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+
+or the full matrix (each pair in a subprocess, results as JSON)::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/dryrun_results
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             quantized: bool = True, kv_int8: bool = False,
+             moe_ep: bool = False) -> dict:
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import applicable, build_step
+    from repro.models.layers import activation_sharding
+
+    cfg = get_config(arch)
+    if kv_int8:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "quantized_serve": quantized,
+           "kv_int8": kv_int8, "moe_ep": moe_ep}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    act_rules = None
+    if moe_ep:
+        from repro.launch.specs import build_train
+        fn, args, in_sh, out_sh = build_train(cfg, shape, mesh, moe_ep=True)
+        act_rules = {"batch": ("pod", "data", "model"), "heads": None,
+                     "kv_heads": None, "d_ff": None, "d_inner": None,
+                     "vocab": None}
+    else:
+        fn, args, in_sh, out_sh = build_step(cfg, shape, mesh,
+                                             quantized_serve=quantized)
+    donate = (0, 1) if shape.kind == "train" else (1,)
+    with mesh:
+        with activation_sharding(mesh, act_rules):
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    hlo = hlo_analysis.analyze(txt, n_dev)
+
+    rec.update({
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_est": int(mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {
+            "flops_unscaled": float(cost.get("flops", 0.0)),
+            "bytes_accessed_unscaled": float(cost.get("bytes accessed", 0.0)),
+        },
+        "hlo_analysis": hlo,
+        "hlo_text_bytes": len(txt),
+    })
+    return rec
+
+
+def _matrix(archs, shapes):
+    for a in archs:
+        for s in shapes:
+            yield a, s
+
+
+def main() -> None:
+    from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--bf16-serve", action="store_true",
+                    help="disable int4 serving weights")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="quantize the KV cache to int8")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel (no TP) training sharding")
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        shapes = list(INPUT_SHAPES)
+        meshes = [False, True] if args.both_meshes else [False]
+        failures = 0
+        for arch, shape in _matrix(ASSIGNED_ARCHS, shapes):
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                dest = outdir / f"{tag}.json"
+                if dest.exists():
+                    st = json.loads(dest.read_text()).get("status")
+                    if st in ("ok", "skipped"):
+                        print(f"[cached] {tag}: {st}")
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--out", str(outdir)]
+                if mp:
+                    cmd.append("--multi-pod")
+                if args.bf16_serve:
+                    cmd.append("--bf16-serve")
+                print(f"[run] {tag} ...", flush=True)
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                dt = time.time() - t0
+                if r.returncode != 0:
+                    failures += 1
+                    dest.write_text(json.dumps({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error",
+                        "stderr": r.stderr[-4000:]}, indent=1))
+                    print(f"[FAIL {dt:.0f}s] {tag}\n{r.stderr[-2000:]}")
+                else:
+                    print(f"[ok {dt:.0f}s] {tag}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_pair(args.arch, args.shape, args.multi_pod,
+                   quantized=not args.bf16_serve, kv_int8=args.kv_int8,
+                   moe_ep=args.moe_ep)
+    tag = f"{args.arch}__{args.shape}__{rec['mesh']}" + \
+        ("__kvint8" if args.kv_int8 else "") + \
+        ("__moe_ep" if args.moe_ep else "")
+    dest = outdir / f"{tag}.json"
+    dest.write_text(json.dumps(rec, indent=1))
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("hlo_analysis",)}, indent=1))
+    print("hlo:", json.dumps(rec.get("hlo_analysis", {}), indent=1))
+    if rec["status"] not in ("ok", "skipped"):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh definitions (TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,249 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+    compute_s    = FLOPs_per_device / 197e12          (TPU v5e bf16 peak)
+    memory_s     = HBM_bytes_per_device / 819e9
+    collective_s = collective_bytes_per_device / 50e9 (ICI per link)
+
+FLOPs and collective bytes come from the compiled dry-run artifact
+(``hlo_analysis`` — loop-scaled HLO parse; dot-FLOPs validated against
+analytic counts).  The HBM term uses an ANALYTIC traffic model (params +
+KV-cache + activation churn, sharding-exact per device): the XLA-*CPU*
+HLO materializes f32 mirrors of bf16 buffers around dots, which a TPU
+never does, so the parsed byte count is reported only as a cross-check
+(``hlo_hbm_bytes``).  See EXPERIMENTS.md §Roofline for the full method.
+
+Runs without initializing any jax mesh (shape/spec arithmetic only), so it
+can post-process dry-run JSONs anywhere.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+class _FakeMesh:
+    """Duck-typed mesh (axis names + sizes) for spec arithmetic only."""
+
+    def __init__(self, multi_pod: bool):
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        names = ("pod", "data", "model") if multi_pod else ("data", "model")
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+def _spec_shards(spec, sizes: Dict[str, int]) -> int:
+    n = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in ((part,) if isinstance(part, str) else part):
+            n *= sizes.get(ax, 1)
+    return n
+
+
+def _tree_bytes_per_device(abstract_tree, spec_tree, sizes) -> int:
+    import jax
+    flat_a = jax.tree.leaves(abstract_tree)
+    flat_s = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: hasattr(x, "index") and not
+        isinstance(x, (list, tuple, dict)))
+    # fall back to zipped traversal
+    from jax.sharding import PartitionSpec as P
+    flat_s = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for a, s in zip(flat_a, flat_s):
+        b = math.prod(a.shape) * a.dtype.itemsize
+        total += b // max(1, _spec_shards(s, sizes))
+    return total
+
+
+def param_bytes_per_device(cfg: ModelConfig, mesh, quantized: bool) -> int:
+    from repro.models import model
+    from repro.models.pdef import abstract_params, param_pspecs
+    from repro.quant.int4 import abstract_qtree, qtree_pspecs
+    from repro.runtime.shardings import mesh_sizes
+    defs = model.params_def(cfg)
+    sizes = mesh_sizes(mesh)
+    if quantized:
+        return _tree_bytes_per_device(abstract_qtree(defs),
+                                      qtree_pspecs(defs, mesh), sizes)
+    return _tree_bytes_per_device(abstract_params(defs),
+                                  param_pspecs(defs, mesh), sizes)
+
+
+def cache_bytes_per_device(cfg: ModelConfig, batch: int, max_seq: int,
+                           mesh) -> int:
+    from repro.models import model
+    from repro.runtime.shardings import mesh_sizes
+    a = model.init_caches(cfg, batch, max_seq, abstract=True)
+    s = model.cache_pspecs(cfg, batch, max_seq, mesh)
+    return _tree_bytes_per_device(a, s, mesh_sizes(mesh))
+
+
+def analytic_flops_per_device(cfg: ModelConfig, shape: InputShape,
+                              n_devices: int) -> Dict[str, float]:
+    """MODEL_FLOPS (6/2*N_active*D + attention) and per-device share."""
+    n_active = cfg.num_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        weight_flops = 6.0 * n_active * tokens
+        attn_mult = 3.0          # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = B * S
+        weight_flops = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    else:
+        tokens = B * 1.0
+        weight_flops = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    # attention score+value flops over the layer pattern
+    attn_flops = 0.0
+    for spec in cfg.layer_pattern:
+        if spec.mixer in ("attn", "swa", "mla"):
+            if spec.mixer == "mla":
+                dh = (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+                      + cfg.mla.v_head_dim)
+                h = cfg.n_heads
+            else:
+                dh, h = 2 * cfg.head_dim, cfg.n_heads
+            if shape.kind == "decode":
+                ctx = min(S, cfg.sliding_window) if (
+                    spec.mixer == "swa" and cfg.sliding_window) else S
+                attn_flops += 2.0 * B * h * dh * ctx
+            else:
+                win = cfg.sliding_window if (spec.mixer == "swa"
+                                             and cfg.sliding_window) else S
+                avg_ctx = min(win, S / 2)
+                attn_flops += 2.0 * B * S * h * dh * avg_ctx
+    total = weight_flops + attn_mult * attn_flops
+    return {"model_flops_total": weight_flops,
+            "attn_flops_total": attn_mult * attn_flops,
+            "flops_per_device": total / n_devices}
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: InputShape, mesh,
+                       quantized: bool) -> Dict[str, float]:
+    from repro.runtime.shardings import mesh_sizes
+    sizes = mesh_sizes(mesh)
+    n_dev = math.prod(sizes.values())
+    B, S = shape.global_batch, shape.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    extra = cfg.frontend.num_embeds if cfg.frontend.kind == "vision" else 0
+
+    if shape.kind == "train":
+        pb = param_bytes_per_device(cfg, mesh, quantized=False)
+        # fwd+bwd param reads, grad write+read, AdamW m/v read+write (fp32)
+        param_traffic = 2 * pb + 2 * (2 * pb) + 2 * (2 * (2 * pb))
+        act = 12.0 * B * S * D * L * 2 / n_dev   # remat'd activation churn
+        return {"param_bytes": pb, "cache_bytes": 0,
+                "hbm_bytes_per_device": param_traffic + act}
+    pb = param_bytes_per_device(cfg, mesh, quantized=quantized)
+    cb = cache_bytes_per_device(cfg, B, S + extra, mesh)
+    if shape.kind == "prefill":
+        act = 8.0 * B * S * D * L * 2 / n_dev
+        traffic = pb + cb + act                  # read params, write cache
+    else:
+        traffic = pb + cb + 8.0 * B * 1 * D * L * 2 / n_dev
+    return {"param_bytes": pb, "cache_bytes": cb,
+            "hbm_bytes_per_device": traffic}
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    hlo_flops_per_dev: float = 0.0
+    useful_ratio: float = 0.0
+    note: str = ""
+
+
+def analyze_record(rec: dict) -> RooflineRow:
+    arch, shape_name = rec["arch"], rec["shape"]
+    row = RooflineRow(arch, shape_name, rec["mesh"], rec["status"])
+    if rec["status"] != "ok":
+        row.note = rec.get("reason", rec.get("stderr", ""))[:100]
+        return row
+    cfg = get_config(arch)
+    if rec.get("kv_int8"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = INPUT_SHAPES[shape_name]
+    multi = rec["mesh"].count("x") == 2
+    mesh = _FakeMesh(multi)
+    n_dev = rec["n_devices"]
+    quantized = rec.get("quantized_serve", True)
+
+    af = analytic_flops_per_device(cfg, shape, n_dev)
+    ab = analytic_hbm_bytes(cfg, shape, mesh, quantized)
+    hlo = rec["hlo_analysis"]
+
+    flops_dev = max(hlo["flops_per_device"], af["flops_per_device"])
+    row.compute_s = flops_dev / PEAK_FLOPS
+    row.memory_s = ab["hbm_bytes_per_device"] / HBM_BW
+    row.collective_s = hlo["collective_bytes_per_device"] / ICI_BW
+    row.model_flops = af["model_flops_total"]
+    row.hlo_flops_per_dev = hlo["flops_per_device"]
+    if hlo["flops_per_device"] > 0:
+        # useful = analytic necessary FLOPs (weights + attention) vs what
+        # the compiled module actually computes — catches remat/dispatch/
+        # capacity redundancy
+        row.useful_ratio = min(
+            1.0, af["flops_per_device"] / hlo["flops_per_device"])
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.dominant = max(terms, key=terms.get)
+    return row
+
+
+def table(results_dir: str = "benchmarks/dryrun_results",
+          mesh_filter: Optional[str] = "16x16"):
+    rows = []
+    for f in sorted(Path(results_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def render_markdown(rows) -> str:
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful FLOP ratio | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.status != "ok":
+            out.append(f"| {r.arch} | {r.shape} | {r.mesh} | — | — | — | "
+                       f"{r.status} | — | {r.note} |")
+            continue
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.dominant} | "
+            f"{r.useful_ratio:.2f} | |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/dryrun_results"
+    rows = table(d, mesh_filter=None)
+    print(render_markdown(rows))

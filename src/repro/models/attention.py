@@ -1,0 +1,309 @@
+"""GQA attention with rope, sliding-window (ring-buffer cache), QKV bias,
+QK-norm, and cross-attention (enc-dec).
+
+Cache layout per layer::
+
+    {"k": [B, C, Hkv, Dh], "v": [B, C, Hkv, Dh], "pos": [B, C] int32}
+
+``C`` is the cache capacity: ``min(max_seq, window)`` for sliding-window
+layers (ring buffer; slot = pos % C), ``max_seq`` otherwise.  ``pos``
+records which absolute position each slot currently holds (-1 = empty),
+which makes masking uniform across both layouts and across ragged
+per-sequence decode positions.
+
+Keys are stored post-rope (rope's relative property keeps scores exact).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm, shard_act, softcap
+from repro.models.pdef import ParamDef, bias, linear, norm_scale
+
+NEG_INF = -1e30
+
+
+def attn_def(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, q_dim, kv_dim = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "wq": linear(d, q_dim, "d_model", "heads_flat"),
+        "wk": linear(d, kv_dim, "d_model", "kv_flat"),
+        "wv": linear(d, kv_dim, "d_model", "kv_flat"),
+        "wo": linear(q_dim, d, "heads_flat", "d_model"),
+    }
+    if cfg.qkv_bias:
+        out.update({"bq": bias(q_dim, "heads_flat"),
+                    "bk": bias(kv_dim, "kv_flat"),
+                    "bv": bias(kv_dim, "kv_flat")})
+    if cfg.qk_norm:
+        out.update({"q_norm": norm_scale(cfg.head_dim),
+                    "k_norm": norm_scale(cfg.head_dim)})
+    if cross:
+        out.pop("bk", None), out.pop("bv", None)
+    return out
+
+
+def cache_capacity(cfg: ModelConfig, sliding: bool, max_seq: int) -> int:
+    if sliding and cfg.sliding_window:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, sliding: bool,
+               dtype=jnp.bfloat16, abstract: bool = False) -> dict:
+    c = cache_capacity(cfg, sliding, max_seq)
+    kv_shape = (batch, c, cfg.n_kv_heads, cfg.head_dim)
+    int8 = cfg.kv_cache_dtype == "int8"
+    if int8:
+        dtype = jnp.int8
+    if abstract:
+        out = {"k": jax.ShapeDtypeStruct(kv_shape, dtype),
+               "v": jax.ShapeDtypeStruct(kv_shape, dtype),
+               "pos": jax.ShapeDtypeStruct((batch, c), jnp.int32)}
+        if int8:
+            out["k_scale"] = jax.ShapeDtypeStruct(kv_shape[:3], jnp.bfloat16)
+            out["v_scale"] = jax.ShapeDtypeStruct(kv_shape[:3], jnp.bfloat16)
+        return out
+    out = {"k": jnp.zeros(kv_shape, dtype),
+           "v": jnp.zeros(kv_shape, dtype),
+           "pos": jnp.full((batch, c), -1, jnp.int32)}
+    if int8:
+        out["k_scale"] = jnp.zeros(kv_shape[:3], jnp.bfloat16)
+        out["v_scale"] = jnp.zeros(kv_shape[:3], jnp.bfloat16)
+    return out
+
+
+def _kv_quant(x: jax.Array):
+    """x: [..., Dh] -> int8 values + per-vector scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical dim names per cache leaf (for sharding-spec derivation)."""
+    out = {"k": ("batch", "cache_seq", "kv_heads", None),
+           "v": ("batch", "cache_seq", "kv_heads", None),
+           "pos": ("batch", "cache_seq")}
+    if cfg.kv_cache_dtype == "int8":
+        out["k_scale"] = ("batch", "cache_seq", "kv_heads")
+        out["v_scale"] = ("batch", "cache_seq", "kv_heads")
+    return out
+
+
+def cross_cache_axes(cfg: ModelConfig) -> dict:
+    return {"k": ("batch", None, "kv_heads", None),
+            "v": ("batch", None, "kv_heads", None)}
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array, which: str,
+             n_heads: int) -> jax.Array:
+    w = p["w" + which]
+    y = x @ w
+    if cfg.qkv_bias and ("b" + which) in p:
+        y = y + p["b" + which]
+    B, S = x.shape[:2]
+    return y.reshape(B, S, n_heads, cfg.head_dim)
+
+
+def _qk_norm(cfg, p, q, k):
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: [B,S,H,Dh]; k,v: [B,T,Kv,Dh]; mask broadcastable to [B,1,1,S,T]."""
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    q = q.reshape(B, S, Kv, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= Dh ** -0.5
+    scores = softcap(scores, cfg.logit_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, Dh)
+
+
+def attn_fwd(cfg: ModelConfig, p: dict, x: jax.Array, *, sliding: bool,
+             mode: str, cache: Optional[dict], pos: Optional[jax.Array],
+             enc_out: Optional[jax.Array] = None, cross: bool = False,
+             uniform: bool = False):
+    """Returns (y, new_cache).  mode in {train, prefill, decode, encode}."""
+    theta = (cfg.local_rope_theta or cfg.rope_theta) if sliding \
+        else cfg.rope_theta
+    B, S = x.shape[:2]
+    q = _project(cfg, p, x, "q", cfg.n_heads)
+
+    if cross:                                    # ---- cross-attention ----
+        if mode == "decode":
+            assert cache is not None and "k" in cache
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        else:
+            assert enc_out is not None
+            k = _project(cfg, p, enc_out, "k", cfg.n_kv_heads)
+            v = _project(cfg, p, enc_out, "v", cfg.n_kv_heads)
+            new_cache = {"k": k, "v": v}
+        y = _sdpa(cfg, q, k, v, None)
+        y = shard_act(y, "batch", None, "heads", None)
+        return y.reshape(B, S, -1) @ p["wo"], new_cache
+
+    k = _project(cfg, p, x, "k", cfg.n_kv_heads)
+    v = _project(cfg, p, x, "v", cfg.n_kv_heads)
+    q, k = _qk_norm(cfg, p, q, k)
+
+    if mode in ("train", "prefill", "encode"):
+        if mode != "encode":                     # encoder: abs pos in embeds
+            positions = jnp.arange(S)[None, :]   # [1, S]
+            q = apply_rope(q, positions, theta)
+            k = apply_rope(k, positions, theta)
+        q = shard_act(q, "batch", None, "heads", None)
+        k = shard_act(k, "batch", None, "kv_heads", None)
+        if mode == "encode":
+            mask = None
+        else:
+            i = jnp.arange(S)[:, None]
+            j = jnp.arange(S)[None, :]
+            mask = i >= j
+            if sliding and cfg.sliding_window:
+                mask &= (i - j) < cfg.sliding_window
+            mask = mask[None, None, None]
+        y = _sdpa(cfg, q, k, v, mask)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = _prefill_cache(cfg, cache, k, v, S, sliding)
+        y = shard_act(y, "batch", None, "heads", None)
+        return y.reshape(B, S, -1) @ p["wo"], new_cache
+
+    # ---- decode: S == 1, pos is [B] int32 of current positions ----
+    assert S == 1 and cache is not None and pos is not None
+    C = cache["k"].shape[1]
+    q = apply_rope(q, pos[:, None], theta)
+    k = apply_rope(k, pos[:, None], theta)
+    if cfg.kv_cache_dtype == "int8":
+        return _decode_int8(cfg, p, cache, q, k, v, pos, sliding, uniform)
+    if uniform:
+        # synchronized batch (dry-run / static-batch serving): one slot for
+        # all sequences -> dynamic-update-slice (XLA-CPU expands ragged
+        # bf16 scatter through f32; ragged batches use the paged-attention
+        # path instead — see DESIGN.md)
+        slot0 = (pos[0] % C).astype(jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (zero, slot0, zero, zero))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (zero, slot0, zero, zero))
+        pos_cache = jax.lax.dynamic_update_slice(
+            cache["pos"], pos[:, None], (zero, slot0))
+    else:
+        slot = (pos % C).astype(jnp.int32)           # [B]
+        b_idx = jnp.arange(B)
+        k_cache = cache["k"].at[b_idx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[b_idx, slot].set(v[:, 0])
+        pos_cache = cache["pos"].at[b_idx, slot].set(pos)
+    # valid slots: hold a real position <= pos (and within window if SWA)
+    stored = pos_cache                                # [B, C]
+    valid = (stored >= 0) & (stored <= pos[:, None])
+    if sliding and cfg.sliding_window:
+        valid &= stored > (pos[:, None] - cfg.sliding_window)
+    y = _sdpa(cfg, q, k_cache, v_cache,
+              valid[:, None, None, None, :])          # [B,1,1,1,C]
+    y = y.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache, "pos": pos_cache}
+
+
+def _decode_int8(cfg: ModelConfig, p: dict, cache: dict, q, k, v, pos,
+                 sliding: bool, uniform: bool):
+    """Decode against an int8-quantized KV cache (perf iteration #2 —
+    halves the decode memory term; see EXPERIMENTS.md §Perf)."""
+    B = q.shape[0]
+    C = cache["k"].shape[1]
+    kq, ks = _kv_quant(k[:, 0])                      # [B,Kv,Dh],[B,Kv]
+    vq, vs = _kv_quant(v[:, 0])
+    if uniform:
+        zero = jnp.zeros((), jnp.int32)
+        slot0 = (pos[0] % C).astype(jnp.int32)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice(
+            buf, val[:, None].astype(buf.dtype),
+            (zero, slot0) + (zero,) * (buf.ndim - 2))
+        k_c, v_c = upd(cache["k"], kq), upd(cache["v"], vq)
+        ks_c, vs_c = upd(cache["k_scale"], ks), upd(cache["v_scale"], vs)
+        pos_c = jax.lax.dynamic_update_slice(
+            cache["pos"], pos[:, None], (zero, slot0))
+    else:
+        slot = (pos % C).astype(jnp.int32)
+        b_idx = jnp.arange(B)
+        k_c = cache["k"].at[b_idx, slot].set(kq)
+        v_c = cache["v"].at[b_idx, slot].set(vq)
+        ks_c = cache["k_scale"].at[b_idx, slot].set(ks)
+        vs_c = cache["v_scale"].at[b_idx, slot].set(vs)
+        pos_c = cache["pos"].at[b_idx, slot].set(pos)
+    stored = pos_c
+    valid = (stored >= 0) & (stored <= pos[:, None])
+    if sliding and cfg.sliding_window:
+        valid &= stored > (pos[:, None] - cfg.sliding_window)
+    k_deq = _kv_dequant(k_c, ks_c)
+    v_deq = _kv_dequant(v_c, vs_c)
+    y = _sdpa(cfg, q, k_deq, v_deq, valid[:, None, None, None, :])
+    y = y.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": k_c, "v": v_c, "k_scale": ks_c, "v_scale": vs_c,
+               "pos": pos_c}
+
+
+def _prefill_cache(cfg: ModelConfig, cache: dict, k: jax.Array,
+                   v: jax.Array, S: int, sliding: bool) -> dict:
+    """Write prefilled K/V into the (possibly ring) cache."""
+    C = cache["k"].shape[1]
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        base = _prefill_cache_raw(cache, kq, vq, S, C)
+        if S <= C:
+            base["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks.astype(jnp.bfloat16), 0, axis=1)
+            base["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs.astype(jnp.bfloat16), 0, axis=1)
+        else:
+            j = jnp.arange(C, dtype=jnp.int32)
+            p_for_slot = S - C + ((j - (S - C)) % C)
+            base["k_scale"] = ks[:, p_for_slot].astype(jnp.bfloat16)
+            base["v_scale"] = vs[:, p_for_slot].astype(jnp.bfloat16)
+        return base
+    return _prefill_cache_raw(cache, k, v, S, C)
+
+
+def _prefill_cache_raw(cache: dict, k: jax.Array, v: jax.Array,
+                       S: int, C: int) -> dict:
+    if S <= C:
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        pos = jnp.arange(C, dtype=jnp.int32)
+        pos = jnp.where(pos < S, pos, -1)
+        pos_c = jnp.broadcast_to(pos, cache["pos"].shape).astype(jnp.int32)
+        return {"k": k_c, "v": v_c, "pos": pos_c}
+    # ring: keep the last C positions; slot j holds p ≡ j (mod C)
+    j = jnp.arange(C, dtype=jnp.int32)
+    p_for_slot = S - C + ((j - (S - C)) % C)          # in [S-C, S-1]
+    k_c = k[:, p_for_slot].astype(cache["k"].dtype)
+    v_c = v[:, p_for_slot].astype(cache["v"].dtype)
+    pos_c = jnp.broadcast_to(p_for_slot, cache["pos"].shape).astype(jnp.int32)
+    return {"k": k_c, "v": v_c, "pos": pos_c}

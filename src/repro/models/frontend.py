@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per brief).
+
+Audio (whisper): the mel-spectrogram + conv feature extractor is stubbed —
+we provide frame embeddings [B, n_frames, d_model] (as if produced by the
+conv stack + sinusoidal positions).  Vision (internvl2): the ViT + MLP
+projector is stubbed — patch embeddings [B, n_patches, d_model].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def stub_embeds(cfg: ModelConfig, batch: int, key: jax.Array,
+                dtype=jnp.bfloat16) -> jax.Array:
+    assert cfg.frontend.kind != "none"
+    n = cfg.frontend.num_embeds
+    return (jax.random.normal(key, (batch, n, cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embeds_spec(cfg: ModelConfig, batch: int,
+                dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    n = cfg.frontend.num_embeds
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), dtype)

@@ -1,0 +1,161 @@
+"""Shared layer primitives: norms, rope, activations, MLPs, sharding hints."""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import pdef
+from repro.models.pdef import ParamDef, bias, linear, norm_scale
+
+# ---------------------------------------------------------------------
+# activation-sharding context: the launcher installs a mesh + rules; on
+# bare CPU (tests, engine) constraints are no-ops.
+# ---------------------------------------------------------------------
+_MESH_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+class activation_sharding:
+    """Context manager installing (mesh, logical rules) for shard_act."""
+
+    def __init__(self, mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(pdef.DEFAULT_RULES, **(rules or {}))
+        self.rules.setdefault("batch", ("pod", "data")
+                              if "pod" in mesh.axis_names else ("data",))
+
+    def __enter__(self):
+        self._tok = _MESH_CTX.set(self)
+        return self
+
+    def __exit__(self, *exc):
+        _MESH_CTX.reset(self._tok)
+
+
+def shard_act(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without mesh."""
+    ctx = _MESH_CTX.get()
+    if ctx is None:
+        return x
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    parts = []
+    used = set()
+    for dim, ax in zip(x.shape, axes):
+        mesh_ax = ctx.rules.get(ax) if ax else None
+        if mesh_ax is None:
+            parts.append(None)
+            continue
+        names = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        names = tuple(n for n in names if n in sizes and n not in used)
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        if not names or dim % total != 0:
+            parts.append(None)
+        else:
+            parts.append(names if len(names) > 1 else names[0])
+            used.update(names)
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------
+def rmsnorm_def(d: int) -> ParamDef:
+    return norm_scale(d)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5,
+            *, plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if plus_one else scale
+    return (y * s).astype(x.dtype)
+
+
+def layernorm_def(d: int):
+    return {"scale": norm_scale(d), "bias": ParamDef((d,), jnp.float32, "zeros",
+                                                     axes=(None,))}
+
+
+def layernorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    if theta <= 0.0:
+        return x
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                         # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------
+# activations / MLP
+# ---------------------------------------------------------------------
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_gated": jax.nn.gelu,
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def gated(name: str) -> bool:
+    return name in ("silu", "gelu_gated")
+
+
+def mlp_def(d_model: int, d_ff: int, act: str):
+    if gated(act):
+        return {"wi": linear(d_model, d_ff, "d_model", "d_ff"),
+                "wg": linear(d_model, d_ff, "d_model", "d_ff"),
+                "wo": linear(d_ff, d_model, "d_ff", "d_model")}
+    return {"wi": linear(d_model, d_ff, "d_model", "d_ff"),
+            "bi": bias(d_ff, "d_ff"),
+            "wo": linear(d_ff, d_model, "d_ff", "d_model"),
+            "bo": bias(d_model)}
+
+
+def mlp(x: jax.Array, p, act: str) -> jax.Array:
+    f = act_fn(act)
+    if gated(act):
+        h = f(x @ p["wg"]) * (x @ p["wi"])
+        h = shard_act(h, "batch", None, "d_ff")
+        return h @ p["wo"]
+    h = f(x @ p["wi"] + p["bi"])
+    h = shard_act(h, "batch", None, "d_ff")
+    return h @ p["wo"] + p["bo"]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,180 @@
+"""Mamba (S6) selective-state-space mixer — Jamba flavour.
+
+Train/prefill use the parallel form: depthwise causal conv then the
+selective scan evaluated with ``lax.associative_scan`` over the sequence
+(diagonal SSM => elementwise first-order recurrence
+``h_t = a_t * h_{t-1} + b_t``).  Decode carries O(1) state:
+
+    {"conv":  [B, d_conv-1, Din],     # last inputs for the causal conv
+     "ssm":   [B, Din, N] float32}    # SSM hidden state
+
+Jamba applies RMSNorm to dt/B/C before discretization; we follow that.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, shard_act
+from repro.models.pdef import ParamDef, bias, linear, norm_scale
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    return d_in, m.d_state, m.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_def(cfg: ModelConfig) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in, N, dt_rank = _dims(cfg)
+    return {
+        "in_proj": linear(d, 2 * d_in, "d_model", "d_inner"),   # x | z
+        "conv_w": ParamDef((m.d_conv, d_in), jnp.bfloat16, "normal", 0.02,
+                           axes=(None, "d_inner")),
+        "conv_b": bias(d_in, "d_inner"),
+        "x_proj": linear(d_in, dt_rank + 2 * N, "d_inner", None),
+        "dt_proj": linear(dt_rank, d_in, None, "d_inner"),
+        "dt_bias": ParamDef((d_in,), jnp.float32, "const", const=0.1,
+                            axes=("d_inner",)),
+        "A_log": ParamDef((d_in, N), jnp.float32, "const", const=0.0,
+                          axes=("d_inner", None)),
+        "D": ParamDef((d_in,), jnp.float32, "ones", axes=("d_inner",)),
+        "dt_norm": norm_scale(dt_rank),
+        "b_norm": norm_scale(N),
+        "c_norm": norm_scale(N),
+        "out_proj": linear(d_in, d, "d_inner", "d_model"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> dict:
+    m = cfg.mamba
+    d_in, N, _ = _dims(cfg)
+    shapes = {"conv": ((batch, m.d_conv - 1, d_in), dtype),
+              "ssm": ((batch, d_in, N), jnp.float32)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(*v) for k, v in shapes.items()}
+    return {k: jnp.zeros(*v) for k, v in shapes.items()}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {"conv": ("batch", None, "d_inner"),
+            "ssm": ("batch", "d_inner", None)}
+
+
+def _ssm_params(cfg, p, xc):
+    """xc: [..., Din] post-conv activations -> dt, B, C (discretization)."""
+    m = cfg.mamba
+    d_in, N, dt_rank = _dims(cfg)
+    proj = xc @ p["x_proj"]                                  # [..., R+2N]
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = rmsnorm(dt, p["dt_norm"], cfg.norm_eps)
+    Bmat = rmsnorm(Bmat, p["b_norm"], cfg.norm_eps).astype(jnp.float32)
+    Cmat = rmsnorm(Cmat, p["c_norm"], cfg.norm_eps).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                     # [..., Din]
+    return dt, Bmat, Cmat
+
+
+def _discretize(p, dt, Bmat, xc):
+    """dA = exp(dt*A) [..., Din, N]; dBx = dt*x * B [..., Din, N]."""
+    A = -jnp.exp(p["A_log"])                                 # [Din, N] (<0)
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bmat[..., None, :]
+    return dA, dBx
+
+
+SCAN_CHUNK = 256    # perf iteration #4: bound the f32 [B,S,Din,N]
+                    # discretization temporaries to one chunk at a time
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _selective_scan(cfg: ModelConfig, p: dict, xc, dt, Bm, Cm):
+    """Returns (y [B,S,Din] f32, h_last [B,Din,N] f32).
+
+    Chunked-parallel form: the sequence is scanned in SCAN_CHUNK pieces —
+    within a chunk the first-order recurrence runs as an associative scan,
+    across chunks a lax.scan carries the state.  Peak temporaries drop
+    from O(S·Din·N) to O(chunk·Din·N) per layer (the full-sequence
+    associative scan made jamba train_4k need 425 GB/chip of XLA temps;
+    see EXPERIMENTS.md §Perf iteration 4)."""
+    B_, S = xc.shape[:2]
+    Q = SCAN_CHUNK
+    if S % Q:                                 # small/odd seqs: one chunk
+        Q = S
+    nc = S // Q
+
+    @jax.checkpoint
+    def chunk_body(h0, inp):
+        # remat'd: backward recomputes the [B,Q,Din,N] discretization per
+        # chunk instead of saving it for every chunk
+        xc_c, dt_c, Bm_c, Cm_c = inp          # [B,Q,...]
+        dA, dBx = _discretize(p, dt_c, Bm_c, xc_c)   # [B,Q,Din,N] f32
+        a_cum, h_loc = jax.lax.associative_scan(_combine, (dA, dBx), axis=1)
+        h = h_loc + a_cum * h0[:, None]       # fold in carried state
+        y = jnp.einsum("bqdn,bqn->bqd", h, Cm_c)
+        return h[:, -1], y
+
+    chunks = tuple(
+        jnp.moveaxis(t.reshape(B_, nc, Q, *t.shape[2:]), 1, 0)
+        for t in (xc, dt, Bm, Cm))
+    d_in, N, _ = _dims(cfg)
+    h0 = jnp.zeros((B_, d_in, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_body, h0, chunks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, -1)
+    return y, h_last
+
+
+def mamba_fwd(cfg: ModelConfig, p: dict, x: jax.Array, *, mode: str,
+              cache: Optional[dict], pos: Optional[jax.Array] = None):
+    m = cfg.mamba
+    d_in, N, _ = _dims(cfg)
+    B_, S = x.shape[:2]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                        # [B,S,Din] each
+    xs = shard_act(xs, "batch", None, "d_inner")
+
+    if mode in ("train", "prefill"):
+        # causal depthwise conv via sliding window
+        pad = jnp.zeros((B_, m.d_conv - 1, d_in), xs.dtype)
+        xpad = jnp.concatenate([pad, xs], axis=1)            # [B,S+K-1,Din]
+        xc = sum(xpad[:, k:k + S] * p["conv_w"][k]
+                 for k in range(m.d_conv)) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        dt, Bm, Cm = _ssm_params(cfg, p, xc)
+        y, h = _selective_scan(cfg, p, xc, dt, Bm, Cm)       # [B,S,Din]
+        y = y + p["D"] * xc.astype(jnp.float32)
+        y = (y.astype(x.dtype)) * jax.nn.silu(z)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {
+                "conv": xs[:, S - (m.d_conv - 1):, :].astype(cache["conv"].dtype)
+                if S >= m.d_conv - 1 else
+                jnp.concatenate([cache["conv"][:, S:], xs], axis=1),
+                "ssm": h,                                    # [B,Din,N]
+            }
+        return y @ p["out_proj"], new_cache
+
+    # ---- decode: S == 1 ----
+    assert S == 1 and cache is not None
+    xt = xs[:, 0]                                            # [B,Din]
+    window = jnp.concatenate([cache["conv"], xs], axis=1)    # [B,K,Din]
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_params(cfg, p, xc)
+    dA, dBx = _discretize(p, dt, Bm, xc)                     # [B,Din,N]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z[:, 0])
+    y = (y @ p["out_proj"])[:, None, :]
+    return y, {"conv": window[:, 1:].astype(cache["conv"].dtype), "ssm": h}

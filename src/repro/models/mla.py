@@ -1,0 +1,181 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Prefill/train use the decompressed form.  Decode uses the **absorbed**
+form: queries are projected into the kv-latent space so attention runs
+directly over the cached compressed latents — the cache per token is just
+``kv_lora_rank + qk_rope_head_dim`` floats (the whole point of MLA, and
+what our paged-KV engine pages).
+
+Cache layout per layer::
+
+    {"ckv": [B, C, R], "krope": [B, C, Dr], "pos": [B, C] int32}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm, shard_act, softcap
+from repro.models.pdef import linear, norm_scale
+
+NEG_INF = -1e30
+
+
+def mla_def(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out = {
+        "wkv_a": linear(d, m.kv_lora_rank + m.qk_rope_head_dim,
+                        "d_model", None),
+        "kv_norm": norm_scale(m.kv_lora_rank),
+        # wkv_b packs [k_nope | v] per head
+        "wkv_b": linear(m.kv_lora_rank,
+                        H * (m.qk_nope_head_dim + m.v_head_dim),
+                        None, "heads_flat"),
+        "wo": linear(H * m.v_head_dim, d, "heads_flat", "d_model"),
+    }
+    if m.q_lora_rank:
+        out["wq_a"] = linear(d, m.q_lora_rank, "d_model", None)
+        out["q_norm"] = norm_scale(m.q_lora_rank)
+        out["wq_b"] = linear(m.q_lora_rank, H * qk_dim, None, "heads_flat")
+    else:
+        out["wq"] = linear(d, H * qk_dim, "d_model", "heads_flat")
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, abstract: bool = False) -> dict:
+    m = cfg.mla
+    shapes = {"ckv": (batch, max_seq, m.kv_lora_rank),
+              "krope": (batch, max_seq, m.qk_rope_head_dim),
+              "pos": (batch, max_seq)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, jnp.int32 if k == "pos" else dtype)
+                for k, s in shapes.items()}
+    return {"ckv": jnp.zeros(shapes["ckv"], dtype),
+            "krope": jnp.zeros(shapes["krope"], dtype),
+            "pos": jnp.full(shapes["pos"], -1, jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {"ckv": ("batch", "cache_seq", None),
+            "krope": ("batch", "cache_seq", None),
+            "pos": ("batch", "cache_seq")}
+
+
+def _queries(cfg: ModelConfig, p: dict, x: jax.Array):
+    m = cfg.mla
+    B, S = x.shape[:2]
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        q = rmsnorm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, cfg.n_heads, qk_dim)
+    return jnp.split(q, [m.qk_nope_head_dim], axis=-1)   # nope, rope parts
+
+
+def _latents(cfg: ModelConfig, p: dict, x: jax.Array):
+    m = cfg.mla
+    kv_a = x @ p["wkv_a"]                                  # [B,S,R+Dr]
+    ckv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    return ckv, k_rope
+
+
+def _split_wkv_b(cfg: ModelConfig, p: dict):
+    m = cfg.mla
+    w = p["wkv_b"].reshape(m.kv_lora_rank, cfg.n_heads,
+                           m.qk_nope_head_dim + m.v_head_dim)
+    return w[..., :m.qk_nope_head_dim], w[..., m.qk_nope_head_dim:]
+
+
+def mla_fwd(cfg: ModelConfig, p: dict, x: jax.Array, *, mode: str,
+            cache: Optional[dict], pos: Optional[jax.Array],
+            uniform: bool = False):
+    m = cfg.mla
+    B, S = x.shape[:2]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(cfg, p, x)
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(S)[None, :]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        ckv, k_rope = _latents(cfg, p, x)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)                 # [B,S,1,Dr]
+        wk, wv = _split_wkv_b(cfg, p)
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv, wk)
+        v = jnp.einsum("bsr,rhd->bshd", ckv, wv)
+        k_nope = shard_act(k_nope, "batch", None, "heads", None)
+        scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshd,btzd->bhst", q_rope,
+                               jnp.broadcast_to(
+                                   k_rope, (B, S, 1, m.qk_rope_head_dim)),
+                               preferred_element_type=jnp.float32))
+        scores *= scale
+        mask = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        y = jnp.einsum("bhst,bthd->bshd", probs, v)
+        y = y.reshape(B, S, -1) @ p["wo"]
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            C = cache["ckv"].shape[1]
+            pos_line = jnp.arange(C, dtype=jnp.int32)
+            pos_line = jnp.where(pos_line < S, pos_line, -1)
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"],
+                    k_rope[:, :, 0].astype(cache["krope"].dtype), 0, axis=1),
+                "pos": jnp.broadcast_to(pos_line, cache["pos"].shape),
+            }
+        return y, new_cache
+
+    # ---- decode (absorbed form): S == 1 ----
+    assert S == 1 and cache is not None and pos is not None
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)  # [B,1,H,Dr]
+    ckv_t, k_rope_t = _latents(cfg, p, x)                      # [B,1,R],[B,1,Dr]
+    k_rope_t = apply_rope(k_rope_t[:, :, None, :], pos[:, None],
+                          cfg.rope_theta)[:, :, 0]
+    if uniform:
+        zero = jnp.zeros((), jnp.int32)
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_t.astype(cache["ckv"].dtype),
+            (zero, pos[0], zero))
+        krope_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope_t.astype(cache["krope"].dtype),
+            (zero, pos[0], zero))
+        pos_c = jax.lax.dynamic_update_slice(
+            cache["pos"], pos[:, None], (zero, pos[0]))
+    else:
+        b_idx = jnp.arange(B)
+        ckv_c = cache["ckv"].at[b_idx, pos].set(
+            ckv_t[:, 0].astype(cache["ckv"].dtype))
+        krope_c = cache["krope"].at[b_idx, pos].set(
+            k_rope_t[:, 0].astype(cache["krope"].dtype))
+        pos_c = cache["pos"].at[b_idx, pos].set(pos)
+
+    wk, wv = _split_wkv_b(cfg, p)
+    # absorb wk into the query: q_lat [B,H,R]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk)
+    scores = (jnp.einsum("bhr,bcr->bhc", q_lat,
+                         ckv_c.astype(q_lat.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bcd->bhc", q_rope[:, 0],
+                           krope_c.astype(q_rope.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = (pos_c >= 0) & (pos_c <= pos[:, None])             # [B,C]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhc,bcr->bhr", probs.astype(ckv_c.dtype), ckv_c)
+    y = jnp.einsum("bhr,rhd->bhd", out_lat, wv)                # [B,H,Dv]
+    y = y.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": ckv_c, "krope": krope_c, "pos": pos_c}

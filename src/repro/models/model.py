@@ -1,0 +1,416 @@
+"""Model assembly: ParamDef trees, block-scanned stacks, train / prefill /
+decode entry points for every assigned architecture family.
+
+Layer stacks are grouped (prefix, repeated-block x n, suffix) — the
+repeated block runs under ``lax.scan`` with stacked params/caches so HLO
+size (and SPMD compile time) stays bounded for 80-layer models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GroupedPattern, LayerSpec, ModelConfig
+from repro.models import attention, mamba, mla, moe, rwkv6
+from repro.models.layers import mlp, mlp_def, rmsnorm, rmsnorm_def, shard_act
+from repro.models.pdef import (ParamDef, abstract_params, count, init_params,
+                               linear, stack_defs, tree_map_defs)
+
+# ======================================================================
+# Param definitions
+# ======================================================================
+def layer_def(cfg: ModelConfig, spec: LayerSpec, *, cross: bool = False
+              ) -> dict:
+    if spec.mixer == "rwkv6":
+        return {"rwkv6": rwkv6.rwkv6_def(cfg)}
+    d: Dict[str, Any] = {"mixer_norm": rmsnorm_def(cfg.d_model)}
+    if spec.mixer in ("attn", "swa"):
+        d["attn"] = attention.attn_def(cfg)
+    elif spec.mixer == "mla":
+        d["mla"] = mla.mla_def(cfg)
+    elif spec.mixer == "mamba":
+        d["mamba"] = mamba.mamba_def(cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        d["cross_norm"] = rmsnorm_def(cfg.d_model)
+        d["cross"] = attention.attn_def(cfg, cross=True)
+    if spec.ffn == "dense":
+        d["ffn_norm"] = rmsnorm_def(cfg.d_model)
+        d["ffn"] = mlp_def(cfg.d_model, cfg.d_ff, cfg.act)
+    elif spec.ffn == "moe":
+        d["ffn_norm"] = rmsnorm_def(cfg.d_model)
+        d["moe"] = moe.moe_def(cfg)
+    return d
+
+
+def _stack_defs(cfg: ModelConfig, g: GroupedPattern, *, cross: bool) -> dict:
+    return {
+        "prefix": [layer_def(cfg, s, cross=cross) for s in g.prefix],
+        "blocks": tuple(stack_defs(layer_def(cfg, s, cross=cross),
+                                   g.n_blocks)
+                        for s in g.block),
+        "suffix": [layer_def(cfg, s, cross=cross) for s in g.suffix],
+    }
+
+
+def params_def(cfg: ModelConfig) -> dict:
+    V, D = cfg.vocab_size, cfg.d_model
+    g = cfg.grouped_pattern()
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((V, D), jnp.bfloat16, "normal", 0.02,
+                          axes=("vocab", "d_model")),
+        "final_norm": rmsnorm_def(D),
+        "decoder": _stack_defs(cfg, g, cross=cfg.is_encdec),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = linear(D, V, "d_model", "vocab")
+    if cfg.frontend.kind != "none":
+        # stub projector: frontend embeds arrive at d_model already
+        defs["frontend_proj"] = linear(D, D, "d_model", None)
+    if cfg.is_encdec:
+        enc_spec = LayerSpec("attn", "dense")
+        enc_g = GroupedPattern((), (enc_spec,), cfg.encoder.n_layers, ())
+        defs["encoder"] = dict(
+            _stack_defs(cfg, enc_g, cross=False),
+            final_norm=rmsnorm_def(D))
+    return defs
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    defs = params_def(cfg)
+    if not active_only or cfg.moe is None:
+        return count(defs)
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]
+    for path, d in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        n = functools.reduce(lambda a, b: a * b, d.shape, 1)
+        if "moe" in names and any(w in names for w in ("wi", "wg", "wo")):
+            n = int(n * frac)
+        total += n
+    return total
+
+
+# ======================================================================
+# Caches
+# ======================================================================
+def _layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                 max_seq: int, *, cross: bool, abstract: bool):
+    c: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "swa"):
+        c["mixer"] = attention.init_cache(
+            cfg, batch, max_seq, sliding=(spec.mixer == "swa"),
+            abstract=abstract)
+    elif spec.mixer == "mla":
+        c["mixer"] = mla.init_cache(cfg, batch, max_seq, abstract=abstract)
+    elif spec.mixer == "mamba":
+        c["mixer"] = mamba.init_cache(cfg, batch, abstract=abstract)
+    elif spec.mixer == "rwkv6":
+        c["mixer"] = rwkv6.init_cache(cfg, batch, abstract=abstract)
+    if cross:
+        n_frames = cfg.frontend.num_embeds
+        kv_shape = (batch, n_frames, cfg.n_kv_heads, cfg.head_dim)
+        if abstract:
+            c["cross"] = {"k": jax.ShapeDtypeStruct(kv_shape, jnp.bfloat16),
+                          "v": jax.ShapeDtypeStruct(kv_shape, jnp.bfloat16)}
+        else:
+            c["cross"] = {"k": jnp.zeros(kv_shape, jnp.bfloat16),
+                          "v": jnp.zeros(kv_shape, jnp.bfloat16)}
+    return c
+
+
+def _stack_cache(tree, n: int, abstract: bool):
+    def add(leaf):
+        if abstract:
+            return jax.ShapeDtypeStruct((n,) + leaf.shape, leaf.dtype)
+        return jnp.broadcast_to(leaf, (n,) + leaf.shape)
+    return jax.tree.map(add, tree)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                abstract: bool = False) -> dict:
+    g = cfg.grouped_pattern()
+    cross = cfg.is_encdec
+    mk = lambda s: _layer_cache(cfg, s, batch, max_seq, cross=cross,
+                                abstract=abstract)
+    return {
+        "prefix": [mk(s) for s in g.prefix],
+        "blocks": tuple(_stack_cache(mk(s), g.n_blocks, abstract)
+                        for s in g.block),
+        "suffix": [mk(s) for s in g.suffix],
+    }
+
+
+def _layer_cache_axes(cfg: ModelConfig, spec: LayerSpec, *, cross: bool):
+    c: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "swa"):
+        c["mixer"] = attention.cache_axes(cfg)
+    elif spec.mixer == "mla":
+        c["mixer"] = mla.cache_axes(cfg)
+    elif spec.mixer == "mamba":
+        c["mixer"] = mamba.cache_axes(cfg)
+    elif spec.mixer == "rwkv6":
+        c["mixer"] = rwkv6.cache_axes(cfg)
+    if cross:
+        c["cross"] = attention.cross_cache_axes(cfg)
+    return c
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, max_seq: int, mesh):
+    """PartitionSpec tree matching ``init_caches`` structure."""
+    from repro.runtime.shardings import mesh_sizes, spec_for_dims
+    sizes = mesh_sizes(mesh)
+    g = cfg.grouped_pattern()
+    cross = cfg.is_encdec
+    shapes = init_caches(cfg, batch, max_seq, abstract=True)
+
+    def one(axes_tree, shape_tree, stacked: bool):
+        def leaf(axes, sds):
+            dims = (("layers",) + tuple(axes)) if stacked else tuple(axes)
+            return spec_for_dims(dims, sds.shape, sizes)
+        return jax.tree.map(
+            leaf, axes_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    out = {
+        "prefix": [one(_layer_cache_axes(cfg, s, cross=cross),
+                       shapes["prefix"][i], False)
+                   for i, s in enumerate(g.prefix)],
+        "blocks": tuple(one(_layer_cache_axes(cfg, s, cross=cross),
+                            shapes["blocks"][j], True)
+                        for j, s in enumerate(g.block)),
+        "suffix": [one(_layer_cache_axes(cfg, s, cross=cross),
+                       shapes["suffix"][i], False)
+                   for i, s in enumerate(g.suffix)],
+    }
+    return out
+
+
+# ======================================================================
+# Layer application
+# ======================================================================
+def apply_layer(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array, *,
+                mode: str, cache, pos, enc_out=None, uniform: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.quant.int4 import dequant_tree
+    p = dequant_tree(p)     # no-op for bf16 trees; unpacks int4 serving trees
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer == "rwkv6":
+        mc = cache["mixer"] if cache is not None else None
+        x, nc = rwkv6.rwkv6_fwd(cfg, p["rwkv6"], x, mode=mode, cache=mc,
+                                pos=pos)
+        return x, (None if nc is None else {"mixer": nc}), aux
+
+    new_cache: Optional[dict] = {} if cache is not None else None
+    h = rmsnorm(x, p["mixer_norm"], cfg.norm_eps)
+    mc = cache["mixer"] if cache is not None else None
+    if spec.mixer in ("attn", "swa"):
+        y, nc = attention.attn_fwd(cfg, p["attn"], h,
+                                   sliding=(spec.mixer == "swa"),
+                                   mode=mode, cache=mc, pos=pos,
+                                   uniform=uniform)
+    elif spec.mixer == "mla":
+        y, nc = mla.mla_fwd(cfg, p["mla"], h, mode=mode, cache=mc, pos=pos,
+                            uniform=uniform)
+    elif spec.mixer == "mamba":
+        y, nc = mamba.mamba_fwd(cfg, p["mamba"], h, mode=mode, cache=mc,
+                                pos=pos)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    if new_cache is not None:
+        new_cache["mixer"] = nc if nc is not None else mc
+
+    if "cross" in p:
+        h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+        cc = cache.get("cross") if cache is not None else None
+        y, ncc = attention.attn_fwd(
+            cfg, p["cross"], h, sliding=False, mode=mode,
+            cache=cc, pos=pos, enc_out=enc_out, cross=True)
+        x = x + y
+        if new_cache is not None:
+            new_cache["cross"] = ncc if ncc is not None else cc
+
+    if spec.ffn == "dense":
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        x = x + mlp(h, p["ffn"], cfg.act)
+    elif spec.ffn == "moe":
+        h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+        y, a = moe.moe_fwd(cfg, p["moe"], h, dropless=(mode != "train"))
+        x = x + y
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def _run_stack(cfg: ModelConfig, g: GroupedPattern, params: dict,
+               caches: Optional[dict], x: jax.Array, *, mode: str,
+               pos, enc_out=None, remat: bool = False,
+               uniform: bool = False):
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": [], "blocks": (), "suffix": []}
+
+    def run_flat(specs, plist, clist, x, aux, out_key):
+        for i, spec in enumerate(specs):
+            c = clist[i] if clist is not None else None
+            x, nc, a = apply_layer(cfg, spec, plist[i], x, mode=mode,
+                                   cache=c, pos=pos, enc_out=enc_out,
+                                   uniform=uniform)
+            new_caches[out_key].append(nc)
+            aux = aux + a
+        return x, aux
+
+    x, aux = run_flat(g.prefix, params["prefix"],
+                      caches["prefix"] if caches else None, x, aux, "prefix")
+
+    if g.n_blocks:
+        def body(carry, xs):
+            xc, auxc = carry
+            p_js, c_js = xs
+            ncs = []
+            for j, spec in enumerate(g.block):
+                cj = c_js[j] if c_js is not None else None
+                xc, nc, a = apply_layer(cfg, spec, p_js[j], xc, mode=mode,
+                                        cache=cj, pos=pos, enc_out=enc_out,
+                                        uniform=uniform)
+                ncs.append(nc)
+                auxc = auxc + a
+            return (xc, auxc), tuple(ncs)
+
+        if remat:
+            body = jax.checkpoint(body)
+        cb = caches["blocks"] if caches else tuple(
+            None for _ in g.block)
+        (x, aux), ncb = jax.lax.scan(body, (x, aux),
+                                     (params["blocks"], cb))
+        new_caches["blocks"] = ncb
+
+    x, aux = run_flat(g.suffix, params["suffix"],
+                      caches["suffix"] if caches else None, x, aux, "suffix")
+    return x, (new_caches if caches is not None else None), aux
+
+
+# ======================================================================
+# Entry points
+# ======================================================================
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return shard_act(logits, "batch", None, "vocab")
+
+
+def _maybe_dequant(w):
+    from repro.quant.int4 import is_qtensor
+    return w.dequant() if is_qtensor(w) else w
+
+
+def _encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings [B, F, D]."""
+    x = frames @ _maybe_dequant(params["frontend_proj"])
+    enc_g = GroupedPattern((), (LayerSpec("attn", "dense"),),
+                           cfg.encoder.n_layers, ())
+    x, _, _ = _run_stack(cfg, enc_g, params["encoder"], None, x,
+                         mode="encode", pos=None)
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _inputs_to_hidden(cfg, params, tokens, embeds, mode):
+    """tokens [B,St]; embeds (vision) [B,P,D] prepended when present."""
+    x = _embed(cfg, params, tokens)
+    if cfg.frontend.kind == "vision" and embeds is not None:
+        pre = embeds @ _maybe_dequant(params["frontend_proj"])
+        x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+    return shard_act(x, "batch", None, None)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            embeds: Optional[jax.Array] = None, mode: str = "train",
+            caches: Optional[dict] = None,
+            pos: Optional[jax.Array] = None, remat: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    Returns (logits [B,S,V], new_caches | None, aux_loss scalar).
+    """
+    g = cfg.grouped_pattern()
+    enc_out = None
+    if cfg.is_encdec:
+        assert embeds is not None, "enc-dec needs frontend frames"
+        enc_out = _encode(cfg, params, embeds)
+        x = _embed(cfg, params, tokens)
+    else:
+        x = _inputs_to_hidden(cfg, params, tokens, embeds, mode)
+    x, new_caches, aux = _run_stack(
+        cfg, g, params["decoder"], caches, x, mode=mode, pos=pos,
+        enc_out=enc_out, remat=remat)
+    return _logits(cfg, params, x), new_caches, aux
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            caches: dict, *, embeds: Optional[jax.Array] = None):
+    return forward(cfg, params, tokens, embeds=embeds, mode="prefill",
+                   caches=caches)
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: dict,
+                token: jax.Array, pos: jax.Array, *,
+                enc_out: Optional[jax.Array] = None,
+                embeds: Optional[jax.Array] = None,
+                uniform_pos: bool = False):
+    """One-token decode.  token: [B, 1] int32; pos: [B] int32 positions.
+
+    Returns (logits [B, 1, V], new_caches).
+    """
+    g = cfg.grouped_pattern()
+    if cfg.is_encdec and enc_out is None and embeds is not None:
+        enc_out = _encode(cfg, params, embeds)
+    x = _embed(cfg, params, token)
+    x, new_caches, _ = _run_stack(cfg, g, params["decoder"], caches, x,
+                                  mode="decode", pos=pos, enc_out=enc_out,
+                                  uniform=uniform_pos)
+    return _logits(cfg, params, x), new_caches
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = False):
+    """Next-token cross-entropy; batch: tokens [B,S], labels [B,S],
+    optional embeds, optional loss_mask [B,S]."""
+    logits, _, aux = forward(cfg, params, batch["tokens"],
+                             embeds=batch.get("embeds"), mode="train",
+                             remat=remat)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    if cfg.frontend.kind == "vision" and batch.get("embeds") is not None:
+        logits = logits[:, -labels.shape[1]:]       # text positions only
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss
+
+
+# convenience ----------------------------------------------------------
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(params_def(cfg), key)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(params_def(cfg))

@@ -1,0 +1,193 @@
+"""ParamDef: declarative parameter trees with logical sharding axes.
+
+Modules declare their parameters once as a tree of :class:`ParamDef`
+(shape + dtype + initializer + logical axis names).  From that single
+source of truth we derive:
+
+* ``init_params``      — materialized arrays (deterministic per-path keys)
+* ``abstract_params``  — ``ShapeDtypeStruct`` tree for AOT lowering
+* ``param_pspecs``     — ``PartitionSpec`` tree via logical-axis rules,
+                          with divisibility checks against the mesh
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | uniform | const
+    scale: float = 0.02           # stddev for normal / bound for uniform
+    const: float = 0.0
+    axes: Tuple[Optional[str], ...] = ()   # logical axis name per dim
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[str, ParamDef], Any], defs) -> Any:
+    """Map over a defs tree with the flattened key-path string."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=is_pdef)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append(fn(name, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _path_key(root: jax.Array, name: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def init_one(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "const":
+        return jnp.full(d.shape, d.const, d.dtype)
+    if d.init == "uniform":
+        return jax.random.uniform(key, d.shape, jnp.float32,
+                                  -d.scale, d.scale).astype(d.dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * d.scale).astype(d.dtype)
+    raise ValueError(d.init)
+
+
+def init_params(defs, key: jax.Array):
+    return tree_map_defs(lambda n, d: init_one(d, _path_key(key, n)), defs)
+
+
+def abstract_params(defs):
+    return tree_map_defs(
+        lambda n, d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+# Default logical-axis -> mesh-axis rules (megatron-ish 2D).
+DEFAULT_RULES: Dict[str, str] = {
+    "vocab": "model",
+    "heads_flat": "model",      # flattened H*Dh projection output dims
+    "kv_flat": "model",
+    "heads": "model",           # activation head dims (divisibility-checked)
+    "kv_heads": "model",
+    "d_ff": "model",
+    "experts": "model",
+    "d_inner": "model",         # mamba inner dim / rwkv ffn
+    "layers": None,             # stacked-block leading dim: never sharded
+    "d_model": None,            # replicated (no sequence/weight 1D sharding)
+}
+
+
+def spec_for(d: ParamDef, rules: Dict[str, Optional[str]],
+             mesh_axis_sizes: Dict[str, int]) -> P:
+    """PartitionSpec for one param; replicate any non-divisible dim."""
+    if not d.axes:
+        return P()
+    parts = []
+    used = set()
+    for dim, ax in zip(d.shape, d.axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if (mesh_ax is None or mesh_ax in used
+                or mesh_ax not in mesh_axis_sizes
+                or dim % mesh_axis_sizes[mesh_ax] != 0):
+            parts.append(None)
+        else:
+            parts.append(mesh_ax)
+            used.add(mesh_ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_pspecs(defs, mesh, rules: Optional[Dict[str, str]] = None,
+                 fsdp: bool = False, fsdp_axes: tuple = ("data", "pod")):
+    """``fsdp=True`` additionally shards each weight's largest free dim over
+    the data(-parallel) axes — ZeRO-3 style.  Used for training, where the
+    fp32 AdamW states of the 100B+ configs cannot be data-replicated.
+    ``fsdp_axes`` may include "model" (expert-parallel training mode, where
+    non-expert weights are not tensor-sharded)."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(n: str, d: ParamDef) -> P:
+        spec = spec_for(d, rules, sizes)
+        if not fsdp or len(d.shape) < 2:
+            return spec
+        parts = list(spec) + [None] * (len(d.shape) - len(spec))
+        used = {ax for p in parts if p is not None
+                for ax in ((p,) if isinstance(p, str) else p)}
+        data_axes = [ax for ax in fsdp_axes
+                     if ax in sizes and ax not in used]
+        # pick the largest unassigned dim divisible by the data axes
+        order = sorted(range(len(d.shape)), key=lambda i: -d.shape[i])
+        for i in order:
+            if parts[i] is not None or (d.axes and d.axes[i] == "layers"):
+                continue
+            take, total = [], 1
+            for ax in data_axes:
+                if ax not in used and d.shape[i] % (total * sizes[ax]) == 0:
+                    take.append(ax)
+                    total *= sizes[ax]
+            if take:
+                parts[i] = tuple(take) if len(take) > 1 else take[0]
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    return tree_map_defs(one, defs)
+
+
+def count(defs) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(defs, is_leaf=is_pdef):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------
+# convenience builders
+# ---------------------------------------------------------------------
+def linear(din: int, dout: int, in_ax: Optional[str], out_ax: Optional[str],
+           *, scale: Optional[float] = None, dtype=jnp.bfloat16) -> ParamDef:
+    scale = 0.02 if scale is None else scale
+    return ParamDef((din, dout), dtype, "normal", scale,
+                    axes=(in_ax, out_ax))
+
+
+def bias(dout: int, ax: Optional[str] = None, dtype=jnp.bfloat16) -> ParamDef:
+    return ParamDef((dout,), dtype, "zeros", axes=(ax,))
+
+
+def norm_scale(d: int, dtype=jnp.float32) -> ParamDef:
+    return ParamDef((d,), dtype, "ones", axes=(None,))
+
+
+def stack_defs(defs, n: int):
+    """Add a leading 'layers' dim of size n to every leaf (scanned block)."""
+    def add(_, d: ParamDef) -> ParamDef:
+        axes = d.axes if d.axes else (None,) * len(d.shape)
+        return dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=("layers",) + axes)
+    return tree_map_defs(add, defs)

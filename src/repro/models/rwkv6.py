@@ -1,0 +1,197 @@
+"""RWKV-6 "Finch" block (time-mix + channel-mix), data-dependent decay.
+
+A full RWKV block is one layer here (the configs mark these layers
+``mixer='rwkv6', ffn='none'`` — channel-mix is part of the block, mirroring
+the reference implementation's structure).
+
+WKV6 recurrence per head (state ``S`` is [Dh, Dh], fp32)::
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with per-channel, data-dependent decay ``w_t = exp(-exp(w0 + lora(x)))``.
+
+Train/prefill run a ``lax.scan`` over time (the chunked-parallel form is a
+documented hillclimb target); decode is a single O(1) update.
+
+Decode state::
+
+    {"tshift_t": [B, D], "tshift_c": [B, D], "wkv": [B, H, Dh, Dh] f32}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import shard_act
+from repro.models.pdef import ParamDef, linear, norm_scale
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv6.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv6_def(cfg: ModelConfig) -> dict:
+    r = cfg.rwkv6
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    mix = {
+        # token-shift ddlerp parameters
+        "mu_x": ParamDef((d,), jnp.float32, "uniform", 0.5, axes=(None,)),
+        "mu": ParamDef((5, d), jnp.float32, "uniform", 0.5,
+                       axes=(None, None)),
+        "mix_w1": ParamDef((d, 5 * r.mix_lora_rank), jnp.bfloat16,
+                           "normal", 0.02, axes=("d_model", None)),
+        "mix_w2": ParamDef((5, r.mix_lora_rank, d), jnp.bfloat16,
+                           "normal", 0.02, axes=(None, None, "d_model")),
+        # projections
+        "wr": linear(d, d, "d_model", "heads_flat"),
+        "wk": linear(d, d, "d_model", "heads_flat"),
+        "wv": linear(d, d, "d_model", "heads_flat"),
+        "wg": linear(d, d, "d_model", "heads_flat"),
+        "wo": linear(d, d, "heads_flat", "d_model"),
+        # data-dependent decay
+        "w0": ParamDef((d,), jnp.float32, "const", const=-0.6, axes=(None,)),
+        "decay_w1": ParamDef((d, r.decay_lora_rank), jnp.bfloat16,
+                             "normal", 0.02, axes=("d_model", None)),
+        "decay_w2": ParamDef((r.decay_lora_rank, d), jnp.bfloat16,
+                             "normal", 0.02, axes=(None, "d_model")),
+        "u": ParamDef((H, hd), jnp.float32, "uniform", 0.5,
+                      axes=("heads", None)),
+        "ln_x": {"scale": norm_scale(d),
+                 "bias": ParamDef((d,), jnp.float32, "zeros", axes=(None,))},
+    }
+    cmix = {
+        "mu_k": ParamDef((d,), jnp.float32, "uniform", 0.5, axes=(None,)),
+        "mu_r": ParamDef((d,), jnp.float32, "uniform", 0.5, axes=(None,)),
+        "wk": linear(d, cfg.d_ff, "d_model", "d_ff"),
+        "wv": linear(cfg.d_ff, d, "d_ff", "d_model"),
+        "wr": linear(d, d, "d_model", None),
+    }
+    return {"tmix": mix, "cmix": cmix,
+            "ln1": norm_scale(d), "ln2": norm_scale(d)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> dict:
+    d = cfg.d_model
+    H, hd = _dims(cfg)
+    shapes = {"tshift_t": ((batch, d), dtype),
+              "tshift_c": ((batch, d), dtype),
+              "wkv": ((batch, H, hd, hd), jnp.float32)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(*v) for k, v in shapes.items()}
+    return {k: jnp.zeros(*v) for k, v in shapes.items()}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {"tshift_t": ("batch", None),
+            "tshift_c": ("batch", None),
+            "wkv": ("batch", "heads", None, None)}
+
+
+def _ddlerp(p: dict, x: jax.Array, sx: jax.Array):
+    """Finch data-dependent token-shift interpolation -> 5 mixed inputs."""
+    xxx = x + sx * p["mu_x"]
+    lora = jnp.tanh(xxx @ p["mix_w1"])                     # [...,5R]
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)           # [...,5,R]
+    dyn = jnp.einsum("...nr,nrd->...nd", lora, p["mix_w2"])  # [...,5,D]
+    mixed = (x[..., None, :].astype(jnp.float32)
+             + sx[..., None, :].astype(jnp.float32) * (p["mu"] + dyn))
+    mixed = mixed.astype(x.dtype)
+    return [mixed[..., i, :] for i in range(5)]            # w,k,v,r,g
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    lw = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return jnp.exp(-jnp.exp(
+        (p["w0"] + lw.astype(jnp.float32)).clip(-20.0, 10.0)))
+
+
+def _group_norm(p: dict, y: jax.Array, H: int, eps: float) -> jax.Array:
+    """LayerNorm per head (rwkv's ln_x), y: [..., H, Dh] -> [..., D]."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(*y.shape[:-2], -1)
+    return yn * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+
+
+def rwkv6_fwd(cfg: ModelConfig, p: dict, x: jax.Array, *, mode: str,
+              cache: Optional[dict], pos: Optional[jax.Array] = None):
+    """Full RWKV block: rmsnorm->time-mix->residual, rmsnorm->channel-mix."""
+    from repro.models.layers import rmsnorm                 # local import
+    H, hd = _dims(cfg)
+    B, S = x.shape[:2]
+    new_cache = dict(cache) if cache is not None else None
+
+    # ---------------- time mix ----------------
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        prev_t = cache["tshift_t"][:, None, :].astype(xn.dtype)
+    else:
+        prev_t = jnp.concatenate(
+            [jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+    sx = prev_t - xn
+    xw, xk, xv, xr, xg = _ddlerp(p["tmix"], xn, sx)
+    r = (xr @ p["tmix"]["wr"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["tmix"]["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["tmix"]["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["tmix"]["wg"])
+    w = _decay(p["tmix"], xw).reshape(B, S, H, hd)          # [B,S,H,Dh] f32
+    u = p["tmix"]["u"]                                      # [H,Dh]
+    r = shard_act(r, "batch", None, "heads", None)
+    k = shard_act(k, "batch", None, "heads", None)
+
+    if mode == "decode":
+        state = cache["wkv"]                                # [B,H,Dh,Dh]
+        kv = k[:, 0, :, :, None] * v[:, 0, :, None, :]      # [B,H,Dh,Dh]
+        y = jnp.einsum("bhk,bhkd->bhd", r[:, 0],
+                       state + u[None, :, :, None] * kv)
+        state = w[:, 0, :, :, None] * state + kv
+        y = y[:, None]                                      # [B,1,H,Dh]
+        new_cache["wkv"] = state
+        new_cache["tshift_t"] = xn[:, -1].astype(cache["tshift_t"].dtype)
+    else:
+        def step(state, inp):
+            r_t, k_t, v_t, w_t = inp                        # [B,H,Dh] each
+            kv = k_t[..., :, None] * v_t[..., None, :]      # [B,H,Dh,Dh]
+            y_t = jnp.einsum("bhk,bhkd->bhd", r_t,
+                             state + u[None, :, :, None] * kv)
+            state = w_t[..., :, None] * state + kv
+            return state, y_t
+
+        init = (cache["wkv"] if (mode == "prefill" and cache is not None)
+                else jnp.zeros((B, H, hd, hd), jnp.float32))
+        xs_t = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+        state, ys = jax.lax.scan(step, init, xs_t)
+        y = jnp.moveaxis(ys, 0, 1)                          # [B,S,H,Dh]
+        if mode == "prefill" and new_cache is not None:
+            new_cache["wkv"] = state
+            new_cache["tshift_t"] = xn[:, -1].astype(x.dtype)
+    y = _group_norm(p["tmix"], y, H, 1e-5).astype(x.dtype) * g
+    x = x + y.reshape(B, S, -1) @ p["tmix"]["wo"]
+
+    # ---------------- channel mix ----------------
+    xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if mode == "decode":
+        prev_c = cache["tshift_c"][:, None, :].astype(xn.dtype)
+    else:
+        prev_c = jnp.concatenate(
+            [jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+    sx = prev_c - xn
+    ck = (xn + sx * p["cmix"]["mu_k"]).astype(xn.dtype)
+    cr = (xn + sx * p["cmix"]["mu_r"]).astype(xn.dtype)
+    kk = jnp.square(jax.nn.relu(ck @ p["cmix"]["wk"]))
+    kk = shard_act(kk, "batch", None, "d_ff")
+    out = jax.nn.sigmoid(cr @ p["cmix"]["wr"]) * (kk @ p["cmix"]["wv"])
+    if mode in ("decode", "prefill") and new_cache is not None:
+        new_cache["tshift_c"] = xn[:, -1].astype(x.dtype)
+    return x + out, new_cache

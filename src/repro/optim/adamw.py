@@ -1,0 +1,65 @@
+"""AdamW in pure JAX (pytree-functional, dtype-configurable states)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # pytree like params
+    v: Any                   # pytree like params
+
+
+def adamw_init(params, *, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_abstract(params, *, state_dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, state_dtype)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """Returns (new_params, new_state).  ``lr`` may be a scalar array."""
+    step = state.step + 1
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = 1.0
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(m.dtype) * scale
+        m_n = b1 * m + (1 - b1) * g
+        v_n = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m_n / bc1
+        vh = v_n / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(m.dtype)
+        p_n = (p.astype(jnp.float32) - lr * delta.astype(jnp.float32))
+        return p_n.astype(p.dtype), m_n, v_n
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,3 @@
+from repro.quant.int4 import (QTensor, abstract_qtree, dequant_tree,  # noqa
+                              is_qtensor, qtree_pspecs, quantize_array,
+                              quantize_tree)

@@ -1,0 +1,93 @@
+"""Logical-dim -> mesh-axis assignment for activations, caches and batches.
+
+Assignment is greedy with divisibility checks and no axis reuse within one
+array.  Preferences (in priority order):
+
+    batch      -> ("pod", "data")        (whatever prefix divides)
+    kv_heads   -> ("model",)
+    heads      -> ("model",)
+    d_inner    -> ("model",)
+    experts    -> ("model",)
+    cache_seq  -> leftover free axes     (context parallelism: when batch
+                                          or heads can't use an axis, the
+                                          KV sequence dim absorbs it)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PRIORITY = ("batch", "kv_heads", "heads", "d_inner", "experts", "vocab")
+LOGICAL_PREF: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "kv_heads": ("model",),
+    "heads": ("model",),
+    "d_inner": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+}
+
+
+def mesh_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_dims(dims: Sequence[Optional[str]],
+                  shape: Sequence[int],
+                  sizes: Dict[str, int]) -> P:
+    """Assign mesh axes to dims by logical name."""
+    assert len(dims) == len(shape), (dims, shape)
+    assigned: Dict[int, Tuple[str, ...]] = {}
+    used: set = set()
+    # priority pass
+    for logical in PRIORITY:
+        for i, d in enumerate(dims):
+            if d != logical or i in assigned:
+                continue
+            take = []
+            total = 1
+            for ax in LOGICAL_PREF[logical]:
+                if ax in sizes and ax not in used \
+                        and shape[i] % (total * sizes[ax]) == 0:
+                    take.append(ax)
+                    total *= sizes[ax]
+            if take:
+                assigned[i] = tuple(take)
+                used.update(take)
+    # cache_seq absorbs leftover axes (largest first)
+    for i, d in enumerate(dims):
+        if d == "cache_seq" and i not in assigned:
+            take = []
+            total = 1
+            for ax in sorted(sizes, key=lambda a: -sizes[a]):
+                if ax not in used and shape[i] % (total * sizes[ax]) == 0:
+                    take.append(ax)
+                    total *= sizes[ax]
+            if take:
+                assigned[i] = tuple(take)
+                used.update(take)
+    parts = []
+    for i in range(len(dims)):
+        if i in assigned:
+            t = assigned[i]
+            parts.append(t if len(t) > 1 else t[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def batch_spec(shape: Sequence[int], mesh,
+               extra_dims: Sequence[Optional[str]] = ()) -> P:
+    """Spec for a [B, ...] host batch array."""
+    dims = ["batch"] + list(extra_dims) + [None] * (
+        len(shape) - 1 - len(extra_dims))
+    return spec_for_dims(dims[:len(shape)], shape, mesh_sizes(mesh))
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,2 @@
+from repro.tokenizer.bpe import ByteBPETokenizer  # noqa: F401
+from repro.tokenizer.streamer import DetokStreamer  # noqa: F401

@@ -1,0 +1,16 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# strictly for the dry-run tool) — assert nothing leaked in.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), "dry-run XLA_FLAGS leaked into tests"
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

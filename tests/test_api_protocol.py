@@ -1,0 +1,66 @@
+"""OpenAI-protocol types: JSON round-trips (hypothesis) and defaults."""
+import json
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import api
+
+_msg = st.builds(lambda r, c: {"role": r, "content": c},
+                 st.sampled_from(["system", "user", "assistant"]),
+                 st.text(max_size=50))
+
+_req = st.builds(
+    dict,
+    messages=st.lists(_msg, min_size=1, max_size=4),
+    model=st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                  min_size=1, max_size=8),
+    max_tokens=st.integers(1, 512),
+    temperature=st.floats(0, 2),
+    top_p=st.floats(0.01, 1.0),
+    stream=st.booleans(),
+    seed=st.one_of(st.none(), st.integers(0, 2**31 - 1)),
+    stop=st.lists(st.text(min_size=1, max_size=4), max_size=3),
+    logit_bias=st.dictionaries(
+        st.integers(0, 1000).map(str), st.floats(-10, 10), max_size=3),
+)
+
+
+@given(d=_req)
+@settings(max_examples=100, deadline=None)
+def test_request_roundtrip(d):
+    req = api.ChatCompletionRequest.from_dict(d)
+    wire = json.dumps(req.to_dict())                  # must be pure JSON
+    back = api.ChatCompletionRequest.from_dict(json.loads(wire))
+    assert back.to_dict() == req.to_dict()
+
+
+def test_request_accepts_plain_dicts():
+    req = api.ChatCompletionRequest(
+        messages=[{"role": "user", "content": "x"}],
+        response_format={"type": "json_object"})
+    assert req.messages[0].role == "user"
+    assert req.response_format.type == "json_object"
+
+
+def test_chunk_roundtrip():
+    c = api.ChatCompletionChunk(
+        id="chatcmpl-x", model="m",
+        choices=[api.ChunkChoice(delta=api.ChoiceDelta(content="hi"),
+                                 finish_reason="stop")],
+        usage=api.Usage(1, 2, 3, {"decode_tokens_per_s": 10.0}))
+    back = api.ChatCompletionChunk.from_dict(json.loads(
+        json.dumps(c.to_dict())))
+    assert back.choices[0].delta.content == "hi"
+    assert back.usage.extra["decode_tokens_per_s"] == 10.0
+
+
+def test_response_roundtrip():
+    r = api.ChatCompletionResponse(
+        id="chatcmpl-y", model="m",
+        choices=[api.Choice(message=api.ChatMessage("assistant", "ok"))],
+        usage=api.Usage(5, 6, 11))
+    back = api.ChatCompletionResponse.from_dict(json.loads(
+        json.dumps(r.to_dict())))
+    assert back.choices[0].message.content == "ok"
+    assert back.usage.total_tokens == 11

@@ -1,0 +1,75 @@
+"""Config registry / pattern grouping / parameter-count sanity."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import LayerSpec, group_pattern
+
+# param counts cross-checked against the papers'/cards' stated sizes.
+EXPECTED_PARAMS_B = {
+    "yi-6b": (5.5, 6.5),
+    "qwen1.5-110b": (100, 120),
+    "mistral-nemo-12b": (11, 13.5),
+    "jamba-1.5-large-398b": (330, 430),
+    "arctic-480b": (430, 520),
+    "deepseek-v2-lite-16b": (14, 18),
+    "gemma3-27b": (24, 30),
+    "rwkv6-1.6b": (1.4, 1.9),
+    "internvl2-1b": (0.4, 0.65),      # Qwen2-0.5B LLM backbone only
+                                      # (the ~0.3B InternViT is stubbed)
+    "whisper-base": (0.04, 0.11),     # transformer only (conv stubbed)
+    "llama-3.1-8b": (7.3, 8.6),
+    "phi-3.5-mini": (3.2, 4.2),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(ALL_ARCHS) == 12
+    assert len(INPUT_SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_config_loads_and_groups(arch):
+    cfg = get_config(arch)
+    g = cfg.grouped_pattern()
+    assert g.total == cfg.n_layers
+    # grouping must cover >= 80% of layers with the scanned block
+    if cfg.n_layers >= 6:
+        assert g.n_blocks * len(g.block) >= 0.8 * cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_PARAMS_B))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.num_params() / 1e9
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("arctic-480b")
+    act = cfg.num_active_params()
+    tot = cfg.num_params()
+    assert act < 0.2 * tot        # 128-expert top-2 => tiny active fraction
+    dense = get_config("yi-6b")
+    assert dense.num_active_params() == dense.num_params()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_configs_small(arch):
+    r = get_config(arch, reduced=True)
+    assert r.n_layers <= 4
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    # reduced keeps the family's distinct layer kinds
+    full_kinds = {(s.mixer, s.ffn) for s in get_config(arch).layer_pattern}
+    red_kinds = {(s.mixer, s.ffn) for s in r.layer_pattern}
+    assert full_kinds == red_kinds
+
+
+def test_group_pattern_handles_remainder():
+    pat = tuple(LayerSpec("swa" if (i + 1) % 6 else "attn")
+                for i in range(62))
+    g = group_pattern(pat)
+    assert g.total == 62 and g.n_blocks >= 10

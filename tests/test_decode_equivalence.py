@@ -1,0 +1,133 @@
+"""Prefill + one-token decode must reproduce the full forward pass —
+the core serving-correctness invariant, for every architecture family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model
+from repro.models.frontend import stub_embeds
+
+TOL = 0.06   # bf16 accumulation differences
+
+
+def _run(arch, rng_key, S=12, T=8, uniform=False):
+    cfg = get_config(arch, reduced=True)
+    params = model.init(cfg, rng_key)
+    B = 2
+    tokens = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    embeds = (stub_embeds(cfg, B, rng_key)
+              if cfg.frontend.kind != "none" else None)
+    offset = (cfg.frontend.num_embeds
+              if cfg.frontend.kind == "vision" else 0)
+    full, _, _ = model.forward(cfg, params, tokens, embeds=embeds,
+                               mode="prefill")
+    caches = model.init_caches(cfg, B, S + offset)
+    pl, caches, _ = model.prefill(cfg, params, tokens[:, :T],
+                                  caches=caches, embeds=embeds)
+    errs = [float(jnp.max(jnp.abs(
+        pl[:, -1].astype(jnp.float32)
+        - full[:, offset + T - 1].astype(jnp.float32))))]
+    for t in range(T, S):
+        pos = jnp.full((B,), t + offset, jnp.int32)
+        lg, caches = model.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], pos,
+                                       uniform_pos=uniform)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32)
+            - full[:, offset + t].astype(jnp.float32)))))
+    return max(errs)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch, rng_key):
+    assert _run(arch, rng_key) < TOL
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-lite-16b"])
+def test_uniform_pos_decode_matches(arch, rng_key):
+    """The dry-run's synchronized-slot decode is numerically identical."""
+    assert _run(arch, rng_key, uniform=True) < TOL
+
+
+def test_swa_ring_buffer_beyond_window(rng_key):
+    """Sliding-window decode with context far beyond the window: the ring
+    buffer must agree with the full (masked) forward."""
+    cfg = get_config("gemma3-27b", reduced=True)
+    assert cfg.sliding_window and cfg.sliding_window <= 64
+    S, T = 3 * cfg.sliding_window, cfg.sliding_window
+    params = model.init(cfg, rng_key)
+    B = 1
+    tokens = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    full, _, _ = model.forward(cfg, params, tokens, mode="prefill")
+    caches = model.init_caches(cfg, B, S)
+    # ring cache is smaller than S for swa layers (reduced gemma3 pattern
+    # is unrolled: layer 0 = swa in the prefix)
+    assert cfg.layer_pattern[0].mixer == "swa"
+    swa_cache = caches["prefix"][0]["mixer"]["k"]
+    assert swa_cache.shape[1] == cfg.sliding_window
+    pl, caches, _ = model.prefill(cfg, params, tokens[:, :T], caches=caches)
+    errs = []
+    for t in range(T, S):
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, caches = model.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], pos)
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32)
+            - full[:, t].astype(jnp.float32)))))
+    assert max(errs) < TOL, max(errs)
+
+
+def test_swa_ring_prefill_longer_than_window(rng_key):
+    """Prefill longer than the window must land the right ring contents."""
+    cfg = get_config("gemma3-27b", reduced=True)
+    W = cfg.sliding_window
+    S = 2 * W + 7
+    params = model.init(cfg, rng_key)
+    tokens = jax.random.randint(rng_key, (1, S + 4), 0, cfg.vocab_size)
+    full, _, _ = model.forward(cfg, params, tokens, mode="prefill")
+    caches = model.init_caches(cfg, 1, S + 4)
+    _, caches, _ = model.prefill(cfg, params, tokens[:, :S], caches=caches)
+    for t in range(S, S + 4):
+        pos = jnp.full((1,), t, jnp.int32)
+        lg, caches = model.decode_step(cfg, params, caches,
+                                       tokens[:, t:t + 1], pos)
+        err = float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32)
+            - full[:, t].astype(jnp.float32))))
+        assert err < TOL, (t, err)
+
+
+def test_ragged_positions_decode(rng_key):
+    """Per-sequence (ragged) decode positions: each row must match its own
+    teacher-forced logits."""
+    cfg = get_config("yi-6b", reduced=True)
+    params = model.init(cfg, rng_key)
+    S = 12
+    tokens = jax.random.randint(rng_key, (2, S), 0, cfg.vocab_size)
+    full, _, _ = model.forward(cfg, params, tokens, mode="prefill")
+    # row 0 prefilled to 6, row 1 prefilled to 9 (separately), then decode
+    caches = model.init_caches(cfg, 2, S)
+    for row, T in ((0, 6), (1, 9)):
+        c1 = model.init_caches(cfg, 1, S)
+        _, c1, _ = model.prefill(cfg, params, tokens[row:row + 1, :T],
+                                 caches=c1)
+        def put(dst, src, axis):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), row, axis=axis)
+        caches = {
+            "prefix": [jax.tree.map(lambda d, s: put(d, s, 0), a, b)
+                       for a, b in zip(caches["prefix"], c1["prefix"])],
+            "blocks": tuple(jax.tree.map(lambda d, s: put(d, s, 1), a, b)
+                            for a, b in zip(caches["blocks"], c1["blocks"])),
+            "suffix": [jax.tree.map(lambda d, s: put(d, s, 0), a, b)
+                       for a, b in zip(caches["suffix"], c1["suffix"])],
+        }
+    pos = jnp.array([6, 9], jnp.int32)
+    tok = jnp.stack([tokens[0, 6:7], tokens[1, 9:10]])
+    lg, _ = model.decode_step(cfg, params, caches, tok, pos)
+    err0 = float(jnp.max(jnp.abs(lg[0, 0].astype(jnp.float32)
+                                 - full[0, 6].astype(jnp.float32))))
+    err1 = float(jnp.max(jnp.abs(lg[1, 0].astype(jnp.float32)
+                                 - full[1, 9].astype(jnp.float32))))
+    assert err0 < TOL and err1 < TOL, (err0, err1)

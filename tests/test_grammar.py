@@ -1,0 +1,141 @@
+"""Grammar engine: GBNF parsing, JSON/schema acceptance, and the core
+masking property — a token is in the mask iff committing it succeeds."""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.grammar import GrammarMatcher, parse_gbnf, schema_to_gbnf
+from repro.grammar.gbnf import JSON_GBNF
+from repro.tokenizer import ByteBPETokenizer
+
+TOK = ByteBPETokenizer.train(
+    ['{"name": "alice", "age": 30, "ok": true, "xs": [1, 2.5]} '] * 2 +
+    ["hello world text"] * 2, vocab_size=400)
+JSON_G = parse_gbnf(JSON_GBNF)
+
+
+@pytest.mark.parametrize("ok", [
+    "123", "-4.5e2", '"str"', "true", "false", "null",
+    "[1, 2, 3]", '{"k": "v"}', '{"a": {"b": [true, null]}}', '  [ ]  ',
+])
+def test_json_accepts(ok):
+    m = GrammarMatcher(JSON_G, TOK)
+    assert m.accept_bytes(ok.encode()) and m.can_terminate(), ok
+
+
+@pytest.mark.parametrize("bad", [
+    "01", "{,}", "[1,]", "tru", '{"a" 1}', "{1: 2}", '"\n"', "+-3",
+])
+def test_json_rejects(bad):
+    m = GrammarMatcher(JSON_G, TOK)
+    assert not (m.accept_bytes(bad.encode()) and m.can_terminate()), bad
+
+
+# the JSON-value strategy: build real JSON docs, assert acceptance
+_json_val = st.recursive(
+    st.one_of(st.integers(-1000, 1000), st.booleans(), st.none(),
+              st.floats(-1e6, 1e6, allow_nan=False).map(
+                  lambda x: round(x, 4)),
+              st.text(st.characters(min_codepoint=32, max_codepoint=126,
+                                    exclude_characters='"\\'),
+                      max_size=10)),
+    lambda ch: st.one_of(st.lists(ch, max_size=3),
+                         st.dictionaries(st.text(
+                             st.characters(min_codepoint=97,
+                                           max_codepoint=122),
+                             min_size=1, max_size=5), ch, max_size=3)),
+    max_leaves=8)
+
+
+@given(val=_json_val)
+@settings(max_examples=60, deadline=None)
+def test_accepts_all_real_json(val):
+    text = json.dumps(val)
+    m = GrammarMatcher(JSON_G, TOK)
+    assert m.accept_bytes(text.encode()), text
+    assert m.can_terminate()
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_mask_is_sound_and_complete(data):
+    """Property: mask[t] == True  <=>  accepting t's bytes succeeds."""
+    m = GrammarMatcher(JSON_G, TOK)
+    prefix = data.draw(st.sampled_from(
+        ["", "{", '{"k', '{"key": ', "[1, ", '{"a": [tr', "-1", '"s']))
+    assert m.accept_bytes(prefix.encode())
+    mask = m.token_mask()
+    # soundness + completeness on a random sample of tokens
+    ids = data.draw(st.lists(
+        st.integers(TOK.n_special, TOK.vocab_size - 1),
+        min_size=20, max_size=40))
+    for t in ids:
+        m2 = GrammarMatcher(JSON_G, TOK)
+        m2.accept_bytes(prefix.encode())
+        committed = m2.accept_bytes(TOK.token_bytes(t))
+        assert bool(mask[t]) == bool(committed), \
+            (prefix, t, TOK.token_bytes(t))
+
+
+def test_constrained_generation_yields_valid_json():
+    """Drive generation with the mask + a closing bias: result parses."""
+    rng = np.random.default_rng(0)
+    m = GrammarMatcher(JSON_G, TOK)
+    out = b""
+    closers = [t for t in range(TOK.n_special, TOK.vocab_size)
+               if TOK.token_bytes(t) in (b"}", b"]", b'"', b"1", b"true")]
+    for step in range(200):
+        mask = m.token_mask()
+        if step > 6 and mask[TOK.eos_id] and m.can_terminate():
+            break
+        cand = [t for t in np.nonzero(mask)[0] if t != TOK.eos_id]
+        assert cand, "mask empty mid-generation"
+        prefer = [t for t in cand if t in closers]
+        pool = prefer if (step > 6 and prefer) else cand
+        t = int(rng.choice(pool))
+        assert m.accept_token(t)
+        out += TOK.token_bytes(t)
+    else:
+        pytest.skip("generation did not converge (random walk)")
+    json.loads(out.decode("utf-8", errors="strict"))
+
+
+def test_schema_grammar():
+    schema = {"type": "object",
+              "properties": {"name": {"type": "string"},
+                             "age": {"type": "integer"},
+                             "tags": {"type": "array",
+                                      "items": {"type": "string"}}},
+              "required": ["name", "age"]}
+    g = parse_gbnf(schema_to_gbnf(schema))
+    m = GrammarMatcher(g, TOK)
+    assert m.accept_bytes(b'{"name": "bob", "age": 3, "tags": ["x"]}')
+    assert m.can_terminate()
+    m.reset()
+    assert not m.accept_bytes(b'{"age": 3}')        # missing required name
+    m.reset()
+    assert not m.accept_bytes(b'{"name": "b", "age": "x"')  # wrong type
+
+
+def test_enum_schema():
+    g = parse_gbnf(schema_to_gbnf(
+        {"type": "object",
+         "properties": {"color": {"enum": ["red", "green"]}},
+         "required": ["color"]}))
+    m = GrammarMatcher(g, TOK)
+    assert m.accept_bytes(b'{"color": "red"}') and m.can_terminate()
+    m.reset()
+    assert not (m.accept_bytes(b'{"color": "blue"}') and m.can_terminate())
+
+
+def test_custom_gbnf():
+    g = parse_gbnf('root ::= "yes" | "no" | "maybe " [0-9]+')
+    m = GrammarMatcher(g, TOK)
+    assert m.accept_bytes(b"maybe 42") and m.can_terminate()
+    m.reset()
+    assert m.accept_bytes(b"yes") and m.can_terminate()
+    m.reset()
+    assert not m.accept_bytes(b"nope")

@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant.int4 import quantize_array
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("B,S,H,Kv,D", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 8, 8, 128),
+    (2, 512, 4, 1, 64),
+    (1, 256, 6, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_sweep(B, S, H, Kv, D, dtype, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = _rand(ks[0], (B, S, H, D), dtype)
+    k = _rand(ks[1], (B, S, Kv, D), dtype)
+    v = _rand(ks[2], (B, S, Kv, D), dtype)
+    out = ops.flash_attention(q, k, v, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    tol = 0.06 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding(window, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    B, S, H, Kv, D = 1, 512, 4, 2, 64
+    q = _rand(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = _rand(ks[1], (B, S, Kv, D), jnp.bfloat16)
+    v = _rand(ks[2], (B, S, Kv, D), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, window=window, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0.06)
+
+
+@pytest.mark.parametrize("B,H,Kv,D,pages,psz,pps", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (3, 4, 4, 128, 32, 8, 6),
+    (1, 16, 2, 64, 64, 32, 8),
+    (4, 2, 1, 128, 8, 16, 2),
+])
+def test_paged_attention_sweep(B, H, Kv, D, pages, psz, pps, rng_key):
+    ks = jax.random.split(rng_key, 5)
+    q = _rand(ks[0], (B, H, D), jnp.bfloat16)
+    kp = _rand(ks[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks[3], (B, pps), 0, pages)
+    lens = jax.random.randint(ks[4], (B,), 1, pps * psz + 1)
+    out = ops.paged_attention(q, kp, vp, pt, lens, interpret=True)
+    expect = ref.paged_attention_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0.06)
+
+
+def test_paged_attention_single_token_context(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = _rand(ks[0], (1, 4, 64), jnp.bfloat16)
+    kp = _rand(ks[1], (4, 8, 2, 64), jnp.bfloat16)
+    vp = _rand(ks[2], (4, 8, 2, 64), jnp.bfloat16)
+    pt = jnp.zeros((1, 2), jnp.int32)
+    lens = jnp.ones((1,), jnp.int32)
+    out = ops.paged_attention(q, kp, vp, pt, lens, interpret=True)
+    expect = ref.paged_attention_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0.06)
+
+
+@pytest.mark.parametrize("M,K,N,G", [
+    (128, 256, 128, 64),
+    (256, 512, 256, 64),
+    (128, 128, 384, 32),
+    (64, 1024, 128, 128),
+])
+def test_w4a16_gemm_sweep(M, K, N, G, rng_key):
+    ks = jax.random.split(rng_key, 2)
+    x = _rand(ks[0], (M, K), jnp.bfloat16, 0.1)
+    w = _rand(ks[1], (K, N), jnp.bfloat16, 0.05)
+    qt = quantize_array(w, G)
+    out = ops.w4a16_gemm(x, qt.data, qt.scales, group=G, interpret=True)
+    expect = ref.w4a16_gemm_ref(x, qt.data, qt.scales, G)
+    scale = float(jnp.max(jnp.abs(expect.astype(jnp.float32)))) + 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32) / scale,
+                               np.asarray(expect, np.float32) / scale,
+                               atol=0.02)
+
+
+def test_w4a16_matches_dequant_matmul(rng_key):
+    """Kernel == dequantize-then-matmul (the model's XLA fallback path)."""
+    ks = jax.random.split(rng_key, 2)
+    x = _rand(ks[0], (128, 256), jnp.bfloat16, 0.1)
+    w = _rand(ks[1], (256, 128), jnp.bfloat16, 0.05)
+    qt = quantize_array(w, 64)
+    a = ops.w4a16_gemm(x, qt.data, qt.scales, group=64, interpret=True)
+    b = x @ qt.dequant()
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=0.05)
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 512), (2, 128, 256), (1, 8, 896)])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_rmsnorm_sweep(shape, with_residual, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    x = _rand(ks[0], shape, jnp.bfloat16)
+    s = _rand(ks[1], shape[-1:], jnp.float32) + 1.0
+    r = _rand(ks[2], shape, jnp.bfloat16) if with_residual else None
+    out = ops.rmsnorm(x, s, residual=r, interpret=True)
+    expect = ref.rmsnorm_ref(x, s, residual=r)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=0.05, rtol=0.02)   # bf16 output ulp
+
+
+def test_flash_attention_used_like_model(rng_key):
+    """Kernel output matches the model's attention math (GQA reshape)."""
+    from repro.configs import get_config
+    cfg = get_config("yi-6b", reduced=True)
+    B, S = 1, 128
+    ks = jax.random.split(rng_key, 3)
+    q = _rand(ks[0], (B, S, cfg.n_heads, cfg.head_dim), jnp.bfloat16)
+    k = _rand(ks[1], (B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    v = _rand(ks[2], (B, S, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=0.06)

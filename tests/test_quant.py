@@ -1,0 +1,98 @@
+"""int4 group quantization: roundtrip, pytree behaviour, model fidelity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.pdef import init_params
+from repro.quant.int4 import (QTensor, abstract_qtree, choose_group,
+                              dequant_tree, quantize_array, quantize_tree)
+
+
+def test_roundtrip_error_bounded(rng_key):
+    w = (jax.random.normal(rng_key, (512, 256), jnp.float32)
+         * 0.05).astype(jnp.bfloat16)
+    qt = quantize_array(w, 64)
+    back = qt.dequant()
+    err = np.abs(np.asarray(w, np.float32) - np.asarray(back, np.float32))
+    # symmetric int4: error <= scale/2 = max|group|/14 per group
+    wf = np.asarray(w, np.float32).reshape(8, 64, 256)
+    bound = np.abs(wf).max(axis=1, keepdims=True) / 7.0
+    assert (err.reshape(8, 64, 256) <= bound + 1e-3).all()
+
+
+def test_qtensor_is_pytree(rng_key):
+    w = (jax.random.normal(rng_key, (128, 64)) * 0.1).astype(jnp.bfloat16)
+    qt = quantize_array(w, 64)
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+    rebuilt = jax.tree.unflatten(jax.tree.structure(qt), leaves)
+    assert isinstance(rebuilt, QTensor) and rebuilt.group == 64
+    # flows through jit
+    out = jax.jit(lambda q, x: x @ q.dequant())(qt, w[:, :128].T * 0)
+    assert out.shape == (64, 64)
+
+
+@given(k=st.integers(64, 4096).map(lambda x: 2 * x),
+       sharded=st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_choose_group_divides(k, sharded):
+    g = choose_group(k, sharded)
+    if g is not None:
+        assert k % g == 0
+        if sharded:
+            assert k % (g * 16) == 0
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-lite-16b",
+                                  "rwkv6-1.6b"])
+def test_quantized_model_close(arch, rng_key):
+    cfg = get_config(arch, reduced=True)
+    defs = model.params_def(cfg)
+    params = init_params(defs, rng_key)
+    qparams = quantize_tree(params, defs)
+    tokens = jax.random.randint(rng_key, (2, 12), 0, cfg.vocab_size)
+    l1, _, _ = model.forward(cfg, params, tokens, mode="prefill")
+    l2, _, _ = model.forward(cfg, qparams, tokens, mode="prefill")
+    p1 = jax.nn.softmax(l1.astype(jnp.float32), -1)
+    p2 = jax.nn.softmax(l2.astype(jnp.float32), -1)
+    # distributions stay close-ish under int4 (random weights)
+    tv = float(0.5 * jnp.abs(p1 - p2).sum(-1).mean())
+    assert tv < 0.45, tv
+    assert bool(jnp.all(jnp.isfinite(l2.astype(jnp.float32))))
+
+
+def test_abstract_qtree_matches_concrete(rng_key):
+    cfg = get_config("yi-6b", reduced=True)
+    defs = model.params_def(cfg)
+    params = init_params(defs, rng_key)
+    qparams = quantize_tree(params, defs)
+    qabs = abstract_qtree(defs)
+    concrete = jax.tree.leaves(qparams)
+    abstract = jax.tree.leaves(qabs)
+    assert len(concrete) == len(abstract)
+    for c, a in zip(concrete, abstract):
+        assert c.shape == a.shape and c.dtype == a.dtype
+
+
+def test_embed_not_quantized(rng_key):
+    cfg = get_config("yi-6b", reduced=True)
+    defs = model.params_def(cfg)
+    qabs = abstract_qtree(defs)
+    assert not isinstance(qabs["embed"], QTensor)
+    assert not isinstance(qabs["lm_head"], QTensor)
+    assert isinstance(qabs["decoder"]["blocks"][0]["ffn"]["wi"], QTensor)
+
+
+def test_dequant_tree_mixed(rng_key):
+    cfg = get_config("yi-6b", reduced=True)
+    defs = model.params_def(cfg)
+    params = init_params(defs, rng_key)
+    q = quantize_tree(params, defs)
+    d = dequant_tree(q)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(d)):
+        assert a.shape == b.shape

@@ -1,0 +1,74 @@
+"""Roofline analytics: sharded byte accounting and analytic FLOPs."""
+import math
+
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.roofline import (_FakeMesh, analytic_flops_per_device,
+                                   analytic_hbm_bytes, cache_bytes_per_device,
+                                   param_bytes_per_device)
+
+
+def test_param_bytes_int4_vs_bf16():
+    cfg = get_config("qwen1.5-110b")
+    mesh = _FakeMesh(False)
+    q = param_bytes_per_device(cfg, mesh, quantized=True)
+    f = param_bytes_per_device(cfg, mesh, quantized=False)
+    # int4+scales ~= 0.28x of bf16
+    assert 0.2 < q / f < 0.4
+    # bf16 params/device ~= 2 bytes * N / model_axis(16) (embed shards too)
+    expect = 2 * cfg.num_params() / 16
+    assert abs(f - expect) / expect < 0.15
+
+
+def test_cache_bytes_swa_ring():
+    gem = get_config("gemma3-27b")
+    mesh = _FakeMesh(False)
+    ring = cache_bytes_per_device(gem, 1, 524288, mesh)
+    # hypothetical full-attention variant of the same dims
+    import dataclasses
+    from repro.configs.base import LayerSpec
+    full = dataclasses.replace(
+        gem, layer_pattern=tuple(LayerSpec("attn", "dense")
+                                 for _ in range(gem.n_layers)),
+        sliding_window=0)
+    dense = cache_bytes_per_device(full, 1, 524288, mesh)
+    # 52/62 layers keep 1024 entries; the 10 global layers keep the full
+    # 524288 -> expected ratio ~= (52*1024 + 10*S) / (62*S) ~= 0.163
+    assert ring < 0.2 * dense
+
+
+def test_kv_int8_halves_cache():
+    import dataclasses
+    cfg = get_config("qwen1.5-110b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    mesh = _FakeMesh(False)
+    b16 = cache_bytes_per_device(cfg, 128, 32768, mesh)
+    i8 = cache_bytes_per_device(cfg8, 128, 32768, mesh)
+    assert 0.5 < i8 / b16 < 0.6      # half + per-vector scales
+
+
+def test_analytic_flops_train_6nd():
+    cfg = get_config("yi-6b")
+    shape = INPUT_SHAPES["train_4k"]
+    af = analytic_flops_per_device(cfg, shape, 256)
+    six_nd = 6.0 * cfg.num_params() * shape.global_batch * shape.seq_len
+    assert abs(af["model_flops_total"] - six_nd) / six_nd < 1e-6
+
+
+def test_moe_active_flops():
+    cfg = get_config("arctic-480b")
+    shape = INPUT_SHAPES["decode_32k"]
+    af = analytic_flops_per_device(cfg, shape, 256)
+    # decode weight flops = 2 * N_active * B tokens
+    expect = 2.0 * cfg.num_active_params() * shape.global_batch
+    assert abs(af["model_flops_total"] - expect) / expect < 1e-6
+
+
+def test_decode_memory_dominated_by_weights_and_cache():
+    cfg = get_config("qwen1.5-110b")
+    mesh = _FakeMesh(False)
+    ab = analytic_hbm_bytes(cfg, INPUT_SHAPES["decode_32k"], mesh,
+                            quantized=True)
+    assert ab["param_bytes"] + ab["cache_bytes"] > \
+        0.95 * ab["hbm_bytes_per_device"]

@@ -1,0 +1,77 @@
+"""RequestSampler properties."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sampler import RequestSampler
+
+
+def test_greedy():
+    s = RequestSampler(temperature=0.0)
+    logits = np.array([0.1, 3.0, -1.0, 2.9])
+    assert s.sample(logits) == 1
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_top_k_support(seed, k):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=32)
+    s = RequestSampler(temperature=1.0, top_k=k, seed=seed)
+    topk = set(np.argsort(-logits)[:k])
+    for _ in range(10):
+        assert s.sample(logits) in topk
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       p=st.floats(0.1, 0.999))
+@settings(max_examples=40, deadline=None)
+def test_top_p_support(seed, p):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=32) * 3
+    s = RequestSampler(temperature=1.0, top_p=p, seed=seed)
+    probs = np.exp(logits - logits.max())
+    probs /= probs.sum()
+    order = np.argsort(-probs)
+    cutoff = int(np.searchsorted(np.cumsum(probs[order]), p) + 1)
+    nucleus = set(order[:cutoff])
+    for _ in range(10):
+        assert s.sample(logits) in nucleus
+
+
+def test_seed_determinism():
+    logits = np.random.default_rng(1).normal(size=64)
+    a = RequestSampler(seed=42)
+    b = RequestSampler(seed=42)
+    assert [a.sample(logits) for _ in range(20)] \
+        == [b.sample(logits) for _ in range(20)]
+
+
+def test_grammar_mask_respected():
+    logits = np.zeros(16)
+    mask = np.zeros(16, bool)
+    mask[[3, 7]] = True
+    s = RequestSampler(temperature=1.0, seed=0)
+    for _ in range(20):
+        assert s.sample(logits, mask) in (3, 7)
+
+
+def test_repetition_penalty_disfavors_repeats():
+    logits = np.array([2.0, 1.9, 0.0])
+    s = RequestSampler(temperature=0.0, repetition_penalty=5.0)
+    for _ in range(3):
+        s.observe(0)
+    assert s.sample(logits) == 1
+
+
+def test_logit_bias():
+    s = RequestSampler(temperature=0.0, logit_bias={5: 100.0})
+    assert s.sample(np.zeros(8)) == 5
+
+
+def test_frequency_penalty_accumulates():
+    logits = np.array([1.0, 0.95, 0.0])
+    s = RequestSampler(temperature=0.0, frequency_penalty=0.5)
+    assert s.sample(logits) == 0
+    s.observe(0)
+    assert s.sample(logits) == 1

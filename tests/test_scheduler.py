@@ -1,0 +1,96 @@
+"""Scheduler + PageManager invariants (hypothesis stateful-ish)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.paged_cache import OutOfPages, PageManager
+from repro.core.scheduler import Scheduler
+
+
+def test_page_manager_basic():
+    pm = PageManager(num_pages=16, page_size=4, max_slots=4,
+                     pages_per_seq=8)
+    a = pm.new_seq()
+    pm.append_tokens(a.seq_id, 5)          # needs 2 pages
+    assert len(pm.seqs[a.seq_id].pages) == 2
+    assert pm.num_free_pages == 14
+    table = pm.page_table([a.seq_id])
+    assert table.shape == (1, 8)
+    assert pm.context_lens([a.seq_id])[0] == 5
+    pm.free_seq(a.seq_id)
+    assert pm.num_free_pages == 16
+
+
+def test_page_exhaustion():
+    pm = PageManager(num_pages=4, page_size=4, max_slots=8,
+                     pages_per_seq=8)
+    a = pm.new_seq()
+    pm.append_tokens(a.seq_id, 16)         # all 4 pages
+    b = pm.new_seq()
+    with pytest.raises(OutOfPages):
+        pm.append_tokens(b.seq_id, 1)
+
+
+def test_pages_per_seq_cap():
+    pm = PageManager(num_pages=100, page_size=4, max_slots=4,
+                     pages_per_seq=2)
+    a = pm.new_seq()
+    with pytest.raises(OutOfPages):
+        pm.append_tokens(a.seq_id, 9)      # needs 3 > 2 pages
+
+
+@given(ops=st.lists(st.tuples(st.sampled_from(["new", "append", "free"]),
+                              st.integers(0, 7), st.integers(1, 6)),
+                    max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_page_conservation(ops):
+    """Pages are never lost or double-allocated."""
+    pm = PageManager(num_pages=12, page_size=4, max_slots=4,
+                     pages_per_seq=6)
+    live = {}
+    for kind, idx, n in ops:
+        try:
+            if kind == "new":
+                a = pm.new_seq()
+                live[a.seq_id] = a
+            elif kind == "append" and live:
+                sid = sorted(live)[idx % len(live)]
+                pm.append_tokens(sid, n)
+            elif kind == "free" and live:
+                sid = sorted(live)[idx % len(live)]
+                pm.free_seq(sid)
+                del live[sid]
+        except OutOfPages:
+            pass
+        allocated = sum(len(a.pages) for a in pm.seqs.values())
+        assert allocated + pm.num_free_pages == 12
+        all_pages = [p for a in pm.seqs.values() for p in a.pages] \
+            + pm.free_pages
+        assert len(all_pages) == len(set(all_pages)), "page double-booked"
+
+
+def test_scheduler_admit_release():
+    s = Scheduler(max_slots=2, max_context=64)
+    s.enqueue("a")
+    s.enqueue("b")
+    s.enqueue("c")
+    assert s.can_admit(10)
+    s1 = s.admit(s.waiting.popleft())
+    s2 = s.admit(s.waiting.popleft())
+    assert not s.free_slots
+    assert not s.can_admit(10)
+    s.release(s1)
+    assert s.can_admit(10)
+    assert s.stats()["waiting"] == 1
+
+
+def test_scheduler_preemption():
+    s = Scheduler(max_slots=2, max_context=64)
+    for x in ("a", "b"):
+        s.enqueue(x)
+    s.admit(s.waiting.popleft())
+    s.admit(s.waiting.popleft())
+    slot, item = s.preempt_newest()
+    assert item == "b"
+    assert s.waiting[0] == "b"             # requeued at the FRONT
+    assert len(s.free_slots) == 1

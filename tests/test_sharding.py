@@ -1,0 +1,130 @@
+"""Sharding-spec derivation properties (no multi-device needed)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.pdef import (DEFAULT_RULES, ParamDef, param_pspecs,
+                               spec_for)
+from repro.runtime.shardings import spec_for_dims
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+SIZES = {"data": 16, "model": 16}
+SIZES3 = {"pod": 2, "data": 16, "model": 16}
+
+
+@given(dim=st.integers(1, 4096), kv=st.integers(1, 64))
+@settings(max_examples=80, deadline=None)
+def test_spec_divisibility_always_respected(dim, kv):
+    spec = spec_for_dims(("batch", "cache_seq", "kv_heads", None),
+                         (dim, 32768, kv, 128), SIZES3)
+    # reconstruct shard counts and check divisibility
+    shape = (dim, 32768, kv, 128)
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        total = 1
+        for ax in ((part,) if isinstance(part, str) else part):
+            total *= SIZES3[ax]
+        assert shape[i] % total == 0
+
+
+def test_no_axis_reused_within_array():
+    spec = spec_for_dims(("batch", "cache_seq", "kv_heads", None),
+                         (128, 32768, 16, 128), SIZES)
+    used = []
+    for part in spec:
+        if part is None:
+            continue
+        used.extend((part,) if isinstance(part, str) else part)
+    assert len(used) == len(set(used))
+
+
+def test_cache_seq_absorbs_free_axes_when_batch_1():
+    spec = spec_for_dims(("batch", "cache_seq", "kv_heads", None),
+                         (1, 524288, 16, 128), SIZES)
+    # batch=1 unshardable; kv_heads takes model; cache_seq takes data
+    assert spec[1] is not None
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "jamba-1.5-large-398b",
+                                  "deepseek-v2-lite-16b"])
+def test_param_pspecs_structure(arch):
+    cfg = get_config(arch)
+    defs = model.params_def(cfg)
+    specs = param_pspecs(defs, MESH)
+    import jax
+    flat_d = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_d) == len(flat_s)
+    for d, s in zip(flat_d, flat_s):
+        for i, part in enumerate(s):
+            if part is None:
+                continue
+            total = 1
+            for ax in ((part,) if isinstance(part, str) else part):
+                total *= dict(zip(MESH.axis_names,
+                                  MESH.devices.shape))[ax]
+            assert d.shape[i] % total == 0, (d.shape, s)
+
+
+def test_fsdp_adds_data_sharding():
+    cfg = get_config("qwen1.5-110b")
+    defs = model.params_def(cfg)
+    base = param_pspecs(defs, MESH)
+    fsdp = param_pspecs(defs, MESH, fsdp=True)
+    import jax
+    flat_b = jax.tree.leaves(base, is_leaf=lambda x: isinstance(x, P))
+    flat_f = jax.tree.leaves(fsdp, is_leaf=lambda x: isinstance(x, P))
+
+    def axes(s):
+        out = set()
+        for part in s:
+            if part is None:
+                continue
+            out.update((part,) if isinstance(part, str) else part)
+        return out
+
+    flat_defs = jax.tree.leaves(
+        model.params_def(cfg),
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "init"))
+    def real_dims(d):
+        axes = d.axes or ()
+        return len(d.shape) - (1 if "layers" in axes else 0)
+
+    big = [s for d, s in zip(flat_defs, flat_f) if real_dims(d) >= 2]
+    n_data = sum("data" in axes(s) for s in big)
+    assert n_data == len(big)     # every >=2D weight gets data-sharded
+    assert sum("data" in axes(s) for s in flat_b) == 0
+
+
+def test_layers_dim_never_sharded():
+    cfg = get_config("yi-6b")
+    defs = model.params_def(cfg)
+    specs = param_pspecs(defs, MESH3, fsdp=True)
+    blocks = specs["decoder"]["blocks"][0]
+    import jax
+    for s in jax.tree.leaves(blocks, is_leaf=lambda x: isinstance(x, P)):
+        if len(s) > 0:
+            assert s[0] is None     # leading stacked-layer dim replicated
+
+
+def test_cache_pspecs_cover_tree():
+    import jax
+    cfg = get_config("jamba-1.5-large-398b")
+    a = model.init_caches(cfg, 128, 1024, abstract=True)
+    s = model.cache_pspecs(cfg, 128, 1024, MESH)
+    la = jax.tree.leaves(a)
+    ls = jax.tree.leaves(s, is_leaf=lambda x: isinstance(x, P))
+    assert len(la) == len(ls)

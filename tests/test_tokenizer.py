@@ -1,0 +1,68 @@
+"""Tokenizer + streaming detokenizer properties (hypothesis)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.tokenizer import ByteBPETokenizer, DetokStreamer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return ByteBPETokenizer.train(
+        ["hello world the quick brown fox", '{"json": [1, true, "x"]}'] * 3,
+        vocab_size=400)
+
+
+@given(text=st.text(max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip_any_unicode(text):
+    tok = _CACHED
+    ids = tok.encode(text, allow_specials=False)
+    assert tok.decode(ids) == text
+
+
+@given(data=st.binary(max_size=100))
+@settings(max_examples=50, deadline=None)
+def test_byte_fallback_total(data):
+    """Every byte string tokenizes (byte fallback is total)."""
+    tok = _CACHED
+    s = data.decode("latin-1")
+    ids = tok.encode(s, allow_specials=False)
+    assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+@given(text=st.text(max_size=120))
+@settings(max_examples=100, deadline=None)
+def test_streamer_equals_decode(text):
+    tok = _CACHED
+    ids = tok.encode(text, allow_specials=False)
+    st_ = DetokStreamer(tok)
+    out = "".join(st_.put(i) for i in ids) + st_.flush()
+    assert out == text
+
+
+def test_specials(tok):
+    ids = tok.encode("<|im_start|>user\nhi<|im_end|>")
+    assert ids[0] == tok._special_ids["<|im_start|>"]
+    assert tok.eos_id == 2
+    # specials never produced by byte-level encoding of their surface form
+    ids2 = tok.encode("<|im_start|>", allow_specials=False)
+    assert all(i >= tok.n_special for i in ids2)
+
+
+def test_chat_template(tok):
+    p = tok.apply_chat_template([{"role": "user", "content": "hi"}])
+    assert p.endswith("<|im_start|>assistant\n")
+
+
+def test_save_load(tok, tmp_path):
+    f = tmp_path / "tok.json"
+    tok.save(str(f))
+    tok2 = ByteBPETokenizer.load(str(f))
+    s = "the quick brown fox says hello"
+    assert tok.encode(s) == tok2.encode(s)
+
+
+_CACHED = ByteBPETokenizer.train(
+    ["hello world the quick brown fox", '{"json": [1, true, "x"]}'] * 3,
+    vocab_size=400)
