@@ -1,0 +1,77 @@
+"""Prefix-cache benefit: turn-2 prefill latency and aggregate tok/s,
+cached vs cold — the WebLLM multi-round-chat workload the radix cache
+targets.  A 64+-token conversation prefix is shared between turns; the
+cached run adopts its pages and computes only the new-message suffix.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.paged_runner import PagedModelRunner
+
+PREFIX_LEN = 96          # shared conversation history (tokens)
+SUFFIX_LEN = 8           # turn-2 user message (tokens)
+DECODE_LEN = 16          # turn-2 completion length
+
+
+def _prefill_time(pr, toks) -> tuple:
+    t0 = time.perf_counter()
+    sid = pr.prefill_seq(toks)
+    dt = time.perf_counter() - t0
+    return sid, dt
+
+
+def run() -> list:
+    rows = []
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    pr = PagedModelRunner(cfg, num_pages=64, page_size=16, max_slots=4,
+                          pages_per_seq=8, seed=0)
+    prefix = [2 + (i % 200) for i in range(PREFIX_LEN)]
+    turn2 = prefix + [300 + i for i in range(SUFFIX_LEN)]
+
+    # warm up both compile paths (dense prefill at this length + decode)
+    w = pr.prefill_seq(turn2)
+    for t in range(4):
+        pr.decode({w: 5 + t})
+    pr.free(w)
+
+    # -- cold: full dense prefill of the turn-2 prompt ------------------
+    sid, cold_s = _prefill_time(pr, turn2)
+    t0 = time.perf_counter()
+    for t in range(DECODE_LEN):
+        pr.decode({sid: 7 + t})
+    cold_decode_s = time.perf_counter() - t0
+    pr.free(sid)
+    cold_total = cold_s + cold_decode_s
+    rows.append(("prefix_cache/cold_prefill",
+                 round(cold_s * 1e6, 1),
+                 f"{len(turn2)/cold_s:.1f}tok/s_prefill"))
+
+    # -- cached: publish turn 1, adopt its pages on turn 2 --------------
+    t1 = pr.prefill_seq(prefix)
+    pr.free(t1, publish=True)
+    sid, warm_s = _prefill_time(pr, turn2)
+    cached = pr.last_prefill_info["prefix_cached_tokens"]
+    t0 = time.perf_counter()
+    for t in range(DECODE_LEN):
+        pr.decode({sid: 7 + t})
+    warm_decode_s = time.perf_counter() - t0
+    pr.free(sid)
+    warm_total = warm_s + warm_decode_s
+    rows.append(("prefix_cache/cached_prefill",
+                 round(warm_s * 1e6, 1),
+                 f"{cached}tok_cached"))
+    rows.append(("prefix_cache/prefill_speedup",
+                 round(warm_s * 1e6, 1),
+                 f"{cold_s/warm_s:.2f}x_vs_cold"))
+    rows.append(("prefix_cache/turn2_aggregate",
+                 round(warm_total * 1e6 / (len(turn2) + DECODE_LEN), 1),
+                 f"{(len(turn2)+DECODE_LEN)/warm_total:.1f}tok/s_cached_vs_"
+                 f"{(len(turn2)+DECODE_LEN)/cold_total:.1f}tok/s_cold"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -19,6 +19,8 @@ REGISTRY = [
      "structured generation: per-step token-mask latency"),
     ("benchmarks.kernel_bench",
      "kernel classes: flash/paged attention, w4a16 gemm, rmsnorm"),
+    ("benchmarks.prefix_cache_bench",
+     "radix prefix cache: turn-2 prefill latency + tok/s, cached vs cold"),
     ("benchmarks.roofline_report",
      "dry-run roofline table summary (reads benchmarks/dryrun_results)"),
 ]

@@ -8,8 +8,16 @@ from __future__ import annotations
 
 import time
 import uuid
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, fields
 from typing import Any, Dict, List, Optional
+
+
+def _known(cls, d: Dict[str, Any]) -> Dict[str, Any]:
+    """Drop keys a dataclass doesn't declare — OpenAI-style clients send
+    fields we don't implement (``n``, ``tools``, ...) and forward-compat
+    means ignoring them rather than raising TypeError."""
+    names = {f.name for f in fields(cls)}
+    return {k: v for k, v in d.items() if k in names}
 
 
 @dataclass
@@ -45,10 +53,12 @@ class ChatCompletionRequest:
     image_embeds: Optional[str] = None
 
     def __post_init__(self):
-        self.messages = [ChatMessage(**m) if isinstance(m, dict) else m
+        self.messages = [ChatMessage(**_known(ChatMessage, m))
+                         if isinstance(m, dict) else m
                          for m in self.messages]
         if isinstance(self.response_format, dict):
-            self.response_format = ResponseFormat(**self.response_format)
+            self.response_format = ResponseFormat(
+                **_known(ResponseFormat, self.response_format))
         self.logit_bias = {int(k): float(v)
                            for k, v in (self.logit_bias or {}).items()}
 
@@ -57,10 +67,11 @@ class ChatCompletionRequest:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ChatCompletionRequest":
-        d = dict(d)
-        d["messages"] = [ChatMessage(**m) for m in d.get("messages", [])]
+        d = _known(cls, dict(d))
+        d["messages"] = [ChatMessage(**_known(ChatMessage, m))
+                         for m in d.get("messages", [])]
         rf = d.get("response_format") or {}
-        d["response_format"] = ResponseFormat(**rf)
+        d["response_format"] = ResponseFormat(**_known(ResponseFormat, rf))
         d["logit_bias"] = {int(k): float(v)
                            for k, v in (d.get("logit_bias") or {}).items()}
         return cls(**d)

@@ -21,6 +21,8 @@ from typing import Dict, Iterator, List, Optional, Union
 import numpy as np
 
 from repro.core import api
+from repro.core.paged_cache import OutOfPages
+from repro.core.paged_runner import PagedEngineBackend, paged_supported
 from repro.core.runner import ModelRunner
 from repro.core.sampler import RequestSampler
 from repro.core.scheduler import Scheduler
@@ -52,13 +54,17 @@ class _Live:
     t_first: float = 0.0
     t_done: float = 0.0
     next_token: Optional[int] = None
+    role_sent: bool = False           # assistant-role chunk already emitted
+    cached_tokens: int = 0            # prompt tokens served from prefix cache
+    prefill_s: float = 0.0
 
 
 @dataclass
 class _LoadedModel:
-    runner: ModelRunner
+    runner: ModelRunner               # or PagedEngineBackend (same interface)
     tokenizer: ByteBPETokenizer
     scheduler: Scheduler
+    backend: str = "dense"
     image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
 
 
@@ -76,7 +82,9 @@ class MLCEngine:
     def load_model(self, name: str, cfg, *, params=None, tokenizer=None,
                    max_slots: int = 4, max_context: int = 256,
                    seed: int = 0, quantize: bool = False,
-                   artifact_cache=None):
+                   artifact_cache=None, backend: str = "dense",
+                   page_size: int = 16, num_pages: Optional[int] = None,
+                   enable_prefix_cache: bool = True):
         if tokenizer is None:
             tokenizer = ByteBPETokenizer.train(
                 ["hello world this is a tiny corpus for the demo engine "
@@ -84,14 +92,29 @@ class MLCEngine:
                 vocab_size=min(cfg.vocab_size, 512))
         assert tokenizer.vocab_size <= cfg.vocab_size, \
             (tokenizer.vocab_size, cfg.vocab_size)
-        runner = ModelRunner(cfg, params, max_slots=max_slots,
-                             max_context=max_context, seed=seed,
-                             quantize=quantize,
-                             artifact_cache=artifact_cache)
+        if backend == "paged":
+            assert paged_supported(cfg), \
+                f"{cfg.name}: paged backend needs a pure-GQA decoder"
+            assert not quantize, "paged backend: quantize unsupported"
+            runner = PagedEngineBackend(
+                cfg, params, max_slots=max_slots, max_context=max_context,
+                page_size=page_size, num_pages=num_pages, seed=seed,
+                enable_prefix_cache=enable_prefix_cache)
+            scheduler = Scheduler(max_slots=max_slots,
+                                  max_context=max_context,
+                                  page_manager=runner.pm)
+        elif backend == "dense":
+            runner = ModelRunner(cfg, params, max_slots=max_slots,
+                                 max_context=max_context, seed=seed,
+                                 quantize=quantize,
+                                 artifact_cache=artifact_cache)
+            scheduler = Scheduler(max_slots=max_slots,
+                                  max_context=max_context)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
         self.models[name] = _LoadedModel(
-            runner=runner, tokenizer=tokenizer,
-            scheduler=Scheduler(max_slots=max_slots,
-                                max_context=max_context))
+            runner=runner, tokenizer=tokenizer, scheduler=scheduler,
+            backend=backend)
 
     def unload_model(self, name: str):
         with self._lock:
@@ -140,6 +163,10 @@ class MLCEngine:
             matcher = GrammarMatcher(parse_gbnf(rf.grammar or ""), tok)
         embeds = None
         if req.image_embeds:
+            if lm.backend == "paged":
+                raise ValueError(
+                    "paged backend does not support image inputs; load the "
+                    "model with backend='dense' for vision requests")
             embeds = lm.image_embeds[req.image_embeds]
         return _Live(
             req=req, rid=api.new_request_id(), model=req.model,
@@ -154,9 +181,14 @@ class MLCEngine:
 
     # -- loop --------------------------------------------------------------
     def _ensure_loop(self):
-        if self._thread is None or not self._thread.is_alive():
-            self._thread = threading.Thread(target=self._loop, daemon=True)
-            self._thread.start()
+        # atomic check-and-spawn: concurrent first requests must not race
+        # a second loop thread into existence — the jitted steps donate
+        # their cache/page buffers, so two steppers corrupt each other
+        with self._lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._loop,
+                                                daemon=True)
+                self._thread.start()
 
     def _loop(self):
         idle_since = time.time()
@@ -166,7 +198,15 @@ class MLCEngine:
                 idle_since = time.time()
             else:
                 if time.time() - idle_since > 5.0:
-                    return                       # loop thread retires
+                    # retire — but re-check for work under the lock so a
+                    # request enqueued this instant is not stranded
+                    with self._lock:
+                        if any(lm.scheduler.waiting or lm.scheduler.running
+                               for lm in self.models.values()):
+                            idle_since = time.time()
+                            continue
+                        self._thread = None
+                        return
                 self._wake.wait(timeout=0.05)
                 self._wake.clear()
 
@@ -183,28 +223,75 @@ class MLCEngine:
         sched = lm.scheduler
         busy = False
         # ---- admission + prefill (one per step, WebLLM-style) ----
+        # ``can_admit`` covers both slot and page-pool accounting (paged
+        # backend: prefix-cache-evictable pages count as available).
         if sched.waiting and sched.free_slots:
-            live: _Live = sched.waiting.popleft()
-            slot = sched.admit(live)
-            live.slot = slot
-            t0 = time.time()
-            logits = lm.runner.prefill(slot, live.prompt_ids, live.embeds)
-            live.pos = len(live.prompt_ids) + (
-                lm.runner.cfg.frontend.num_embeds
-                if (lm.runner.cfg.frontend.kind == "vision"
-                    and live.embeds is not None) else 0)
-            live.t_first = time.time()
-            live._prefill_s = live.t_first - t0
-            self._emit_role(live)
-            self._consume_logits(lm, live, logits)
-            busy = True
+            head: _Live = sched.waiting[0]
+            # a preempted request resumes with its generated tokens
+            # re-prefixed (the prefix cache usually makes this cheap)
+            ids = head.prompt_ids + head.generated
+            if not sched.fits_ever(len(ids)):
+                # would livelock through preempt/re-prefill — fail it now
+                sched.waiting.popleft()
+                head.out.put(RuntimeError(
+                    "prompt does not fit in the KV page pool"))
+                return True
+            if sched.can_admit(len(ids)):
+                busy = True
+                live = sched.waiting.popleft()
+                live.slot = sched.admit(live)
+                t0 = time.time()
+                try:
+                    logits = lm.runner.prefill(live.slot, ids, live.embeds)
+                except OutOfPages:
+                    sched.release(live.slot)
+                    live.slot = -1
+                    if sched.running:
+                        sched.waiting.appendleft(live)   # retry when freed
+                    else:
+                        live.out.put(RuntimeError(
+                            "prompt does not fit in the KV page pool"))
+                    return busy
+                except Exception as e:
+                    # a poisoned request must not kill the loop thread or
+                    # leak its slot — surface the error to its caller
+                    lm.runner.release(live.slot, publish=False)
+                    sched.release(live.slot)
+                    live.slot = -1
+                    live.out.put(e)
+                    return busy
+                live.cached_tokens = max(
+                    live.cached_tokens,
+                    int(lm.runner.last_prefill_info.get(
+                        "prefix_cached_tokens", 0)))
+                live.pos = len(ids) + (
+                    lm.runner.cfg.frontend.num_embeds
+                    if (lm.runner.cfg.frontend.kind == "vision"
+                        and live.embeds is not None) else 0)
+                if live.t_first == 0.0:
+                    live.t_first = time.time()
+                    live.prefill_s = live.t_first - t0
+                if not live.role_sent:
+                    self._emit_role(live)
+                    live.role_sent = True
+                if live.next_token is None:      # fresh (not resumed) seq
+                    self._consume_logits(lm, live, logits)
         # ---- batched decode over active slots ----
         active = [sched.running[s] for s in sched.active_slots
                   if sched.running[s].next_token is not None]
         if active:
             toks = {lv.slot: lv.next_token for lv in active}
             poss = {lv.slot: lv.pos for lv in active}
-            logits = lm.runner.decode(toks, poss)
+            try:
+                logits = lm.runner.decode(toks, poss)
+            except OutOfPages:
+                # graceful degradation: kick the newest sequence back to
+                # the queue and drop its pages (refcounts handled by the
+                # runner); the survivors retry next step
+                slot, item = sched.preempt_newest()
+                lm.runner.release(slot, publish=False)
+                item.slot = -1
+                return True
             for lv in active:
                 lv.generated.append(lv.next_token)
                 lv.pos += 1
@@ -224,7 +311,10 @@ class MLCEngine:
         live.sampler.observe(t)
 
         if t == tok.eos_id:
-            return self._finish(lm, live, "stop", consume_pending=True)
+            # EOS contributes no text but is a sampled completion token —
+            # count it, mirroring the length path below
+            live.generated.append(t)
+            return self._finish(lm, live, "stop")
         live.next_token = t
         delta = live.streamer.put(t)
         live.text += delta
@@ -235,7 +325,8 @@ class MLCEngine:
                       if s in live.text)
             live.text = live.text[:cut]
             return self._finish(lm, live, "stop")
-        if n_gen >= live.req.max_tokens:
+        if (n_gen >= live.req.max_tokens
+                or live.pos + 1 >= lm.runner.max_context):
             live.generated.append(t)
             return self._finish(lm, live, "length")
 
@@ -264,8 +355,7 @@ class MLCEngine:
                         content=live.text[live.emitted:safe]))]))
             live.emitted = safe
 
-    def _finish(self, lm: _LoadedModel, live: _Live, reason: str,
-                consume_pending: bool = False):
+    def _finish(self, lm: _LoadedModel, live: _Live, reason: str):
         live.text += live.streamer.flush()
         # the flush may surface a stop string that was buffered as
         # incomplete UTF-8 — truncate again
@@ -276,6 +366,7 @@ class MLCEngine:
         live.finish_reason = reason
         live.t_done = time.time()
         live.next_token = None
+        lm.runner.release(live.slot)       # paged: publish to prefix cache
         lm.scheduler.release(live.slot)
         n_prompt = len(live.prompt_ids)
         n_gen = len(live.generated)
@@ -285,10 +376,10 @@ class MLCEngine:
             total_tokens=n_prompt + n_gen,
             extra={
                 "prefill_tokens_per_s": round(
-                    n_prompt / max(getattr(live, "_prefill_s", 1e-9), 1e-9),
-                    2),
+                    n_prompt / max(live.prefill_s, 1e-9), 2),
                 "decode_tokens_per_s": round(n_gen / decode_s, 2),
                 "e2e_latency_s": round(live.t_done - live.t_submit, 4),
+                "prefix_cached_tokens": live.cached_tokens,
             })
         if live.req.stream:
             final_delta = live.text[live.emitted:]
@@ -314,14 +405,26 @@ class MLCEngine:
             item = live.out.get(timeout=120)
             if item is _SENTINEL:
                 return
+            if isinstance(item, Exception):
+                raise item
             yield item
 
     def _collect(self, live: _Live) -> api.ChatCompletionResponse:
         item = live.out.get(timeout=120)
-        out = item
+        if isinstance(item, Exception):
+            raise item
         rest = live.out.get(timeout=120)
         assert rest is _SENTINEL
-        return out
+        return item
+
+    def stats(self, model: Optional[str] = None) -> dict:
+        """Engine/runner/cache counters, per model (or all models)."""
+        if model is None:
+            return {name: self.stats(name) for name in list(self.models)}
+        lm = self.models[model]
+        return {"backend": lm.backend,
+                "scheduler": lm.scheduler.stats(),
+                "runner": lm.runner.stats()}
 
     def shutdown(self):
         self._shutdown = True

@@ -6,13 +6,21 @@ support (free a whole sequence).  ``PagedKVState`` owns the jax-side page
 pools for every attention layer of a model and performs token writes +
 paged-attention reads (via the Pallas kernel on TPU / interpret on CPU).
 
+Pages are reference-counted so they can be shared between live sequences
+and the prefix cache (``repro.core.prefix_cache``): a page returns to the
+free list only when its last reference drops.  ``share_pages`` adopts
+already-filled pages into a sequence (+1 ref each) and ``fork_page``
+implements copy-on-write of a partially filled tail page — the sequence
+gets a private physical page it may write into, while the shared source
+page stays immutable.
+
 Non-attention state (SSM/RWKV/conv, MLA latents) is slot-based: O(1) per
 sequence, managed by the same slot ids.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -30,7 +38,7 @@ class SeqAlloc:
 
 
 class PageManager:
-    """Free-list page allocator + per-sequence page tables."""
+    """Free-list page allocator + refcounted per-sequence page tables."""
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
                  pages_per_seq: int):
@@ -40,7 +48,45 @@ class PageManager:
         self.free_pages: List[int] = list(range(num_pages))
         self.free_slots: List[int] = list(range(max_slots))
         self.seqs: Dict[int, SeqAlloc] = {}
+        self.ref: Dict[int, int] = {}          # physical page -> refcount
         self._next_id = 0
+        # hooks installed by the prefix cache: reclaim(n) tries to evict
+        # cached pages back to the free list; evictable() reports how many
+        # it could free on demand (for admission accounting).
+        self.reclaim: Optional[Callable[[int], int]] = None
+        self.evictable: Optional[Callable[[], int]] = None
+
+    # -- refcounting --------------------------------------------------
+    def ref_page(self, page: int):
+        self.ref[page] = self.ref.get(page, 0) + 1
+
+    def deref_page(self, page: int):
+        n = self.ref.get(page, 0) - 1
+        if n > 0:
+            self.ref[page] = n
+        else:
+            self.ref.pop(page, None)
+            self.free_pages.append(page)
+
+    def _alloc_page(self) -> int:
+        if not self.free_pages and self.reclaim is not None:
+            self.reclaim(1)
+        if not self.free_pages:
+            raise OutOfPages("page pool exhausted")
+        p = self.free_pages.pop()
+        self.ref[p] = 1
+        return p
+
+    def require_pages(self, n: int):
+        """Raise OutOfPages *before* any state mutation unless ``n`` pages
+        can be produced (free list + prefix-cache eviction)."""
+        if len(self.free_pages) >= n:
+            return
+        if self.reclaim is not None:
+            self.reclaim(n - len(self.free_pages))
+        if len(self.free_pages) < n:
+            raise OutOfPages(
+                f"need {n} pages, have {len(self.free_pages)}")
 
     # -- lifecycle ----------------------------------------------------
     def new_seq(self) -> SeqAlloc:
@@ -54,8 +100,35 @@ class PageManager:
 
     def free_seq(self, seq_id: int):
         alloc = self.seqs.pop(seq_id)
-        self.free_pages.extend(alloc.pages)
+        for p in alloc.pages:
+            self.deref_page(p)
         self.free_slots.append(alloc.slot)
+
+    # -- sharing / copy-on-write ----------------------------------------
+    def share_pages(self, seq_id: int, pages: List[int], n_tokens: int):
+        """Adopt already-filled ``pages`` (e.g. a cached prefix) into a
+        sequence: +1 ref each, no data movement.  The adopted pages must
+        be full and must precede any page the sequence will write."""
+        alloc = self.seqs[seq_id]
+        if len(alloc.pages) + len(pages) > self.pages_per_seq:
+            raise OutOfPages("shared prefix exceeds pages_per_seq")
+        for p in pages:
+            self.ref_page(p)
+            alloc.pages.append(p)
+        alloc.length += n_tokens
+
+    def fork_page(self, seq_id: int, n_tokens: int) -> int:
+        """Copy-on-write bookkeeping for a partially filled tail page:
+        allocate a private destination page, append it to the sequence,
+        and account ``n_tokens`` adopted tokens.  The caller is
+        responsible for copying the KV payload src -> returned page."""
+        alloc = self.seqs[seq_id]
+        if len(alloc.pages) + 1 > self.pages_per_seq:
+            raise OutOfPages("fork exceeds pages_per_seq")
+        dst = self._alloc_page()
+        alloc.pages.append(dst)
+        alloc.length += n_tokens
+        return dst
 
     # -- growth ---------------------------------------------------------
     def ensure_capacity(self, seq_id: int, new_length: int):
@@ -67,9 +140,7 @@ class PageManager:
                 f"sequence needs {need} pages > pages_per_seq "
                 f"{self.pages_per_seq}")
         while len(alloc.pages) < need:
-            if not self.free_pages:
-                raise OutOfPages("page pool exhausted")
-            alloc.pages.append(self.free_pages.pop())
+            alloc.pages.append(self._alloc_page())
 
     def append_tokens(self, seq_id: int, n: int = 1):
         alloc = self.seqs[seq_id]
@@ -94,6 +165,12 @@ class PageManager:
     @property
     def num_free_pages(self) -> int:
         return len(self.free_pages)
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages plus pages the prefix cache could evict on demand."""
+        extra = self.evictable() if self.evictable is not None else 0
+        return len(self.free_pages) + extra
 
     def stats(self) -> dict:
         return {"free_pages": len(self.free_pages),

@@ -7,8 +7,15 @@ attention runs via ``kernels.paged_attention`` (scalar-prefetched page
 tables).  Pure-GQA decoder-only models (llama/phi/yi/qwen/nemo/internvl)
 are supported; hybrid/SSM/MLA families use the dense-slot runner.
 
-Page bookkeeping lives in :class:`repro.core.paged_cache.PageManager`;
-this runner owns the jax-side pools and a jitted step.
+Page bookkeeping lives in :class:`repro.core.paged_cache.PageManager`.
+A :class:`repro.core.prefix_cache.PrefixCache` sits on top: finished
+sequences publish their pages, and ``prefill_seq`` adopts the longest
+cached prefix (sharing full pages zero-copy, forking a partial tail page
+copy-on-write) so only the uncached suffix is computed.
+
+:class:`PagedEngineBackend` wraps the runner in the slot-keyed unified
+runner interface ``MLCEngine`` drives, making the paged path a
+first-class engine backend (``load_model(..., backend="paged")``).
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.paged_cache import PageManager
+from repro.core.paged_cache import OutOfPages, PageManager
+from repro.core.prefix_cache import PrefixCache
 from repro.kernels.ops import paged_attention
 from repro.models import model
 from repro.models.attention import _project, _qk_norm
@@ -39,13 +47,18 @@ class PagedModelRunner:
 
     def __init__(self, cfg: ModelConfig, params=None, *, num_pages: int = 64,
                  page_size: int = 16, max_slots: int = 4,
-                 pages_per_seq: int = 8, seed: int = 0):
+                 pages_per_seq: int = 8, seed: int = 0,
+                 enable_prefix_cache: bool = True):
         assert paged_supported(cfg), f"{cfg.name}: paged path needs pure GQA"
         self.cfg = cfg
         self.page_size = page_size
         self.pages_per_seq = pages_per_seq
         self.max_slots = max_slots
         self.pm = PageManager(num_pages, page_size, max_slots, pages_per_seq)
+        self.prefix_cache = (PrefixCache(self.pm) if enable_prefix_cache
+                             else None)
+        self.seq_tokens: Dict[int, List[int]] = {}   # tokens whose KV is paged
+        self.last_prefill_info: Dict[str, int] = {"prefix_cached_tokens": 0}
         if params is None:
             params = init_params(model.params_def(cfg),
                                  jax.random.PRNGKey(seed))
@@ -55,6 +68,14 @@ class PagedModelRunner:
                                  jnp.bfloat16)
         self.v_pages = jnp.zeros_like(self.k_pages)
         self._step = jax.jit(self._decode_step, donate_argnums=(1, 2))
+
+        def _copy(k, v, src, dst):
+            return (k.at[:, dst].set(k[:, src]),
+                    v.at[:, dst].set(v[:, src]))
+
+        # donated so XLA updates the pools in place instead of copying
+        # the whole K/V buffers per CoW fork
+        self._copy_jit = jax.jit(_copy, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------
     def _layer_params(self):
@@ -116,10 +137,57 @@ class PagedModelRunner:
 
     # -- host-side API ---------------------------------------------------
     def prefill_seq(self, prompt_ids: List[int]) -> int:
-        """Prefill a new sequence via the dense path, scatter its KV into
-        freshly allocated pages.  Returns seq_id."""
-        cfg = self.cfg
+        """Prefill a new sequence.  The longest prefix already present in
+        the prefix cache is adopted (full pages shared in place, a
+        partial tail page forked copy-on-write); only the uncached suffix
+        is computed — densely when the whole prompt is cold, via the
+        paged decode step otherwise.  Returns seq_id."""
+        prompt_ids = [int(t) for t in prompt_ids]
         alloc = self.pm.new_seq()
+        sid = alloc.seq_id
+        cached = 0
+        if self.prefix_cache is not None and len(prompt_ids) > 1:
+            # always leave >= 1 suffix token so prefill yields logits
+            full_pages, tail = self.prefix_cache.match(prompt_ids[:-1])
+            try:
+                if full_pages:
+                    self.pm.share_pages(sid, full_pages,
+                                        len(full_pages) * self.page_size)
+                if tail is not None:
+                    src, n_tok = tail
+                    dst = self.pm.fork_page(sid, n_tok)
+                    self._copy_page(src, dst)
+            except Exception:
+                self.pm.free_seq(sid)
+                raise
+            cached = alloc.length
+        self.last_prefill_info = {"prefix_cached_tokens": cached}
+        self.seq_tokens[sid] = prompt_ids[:cached]
+        if cached > 0:
+            try:
+                for t in prompt_ids[cached:]:
+                    out = self.decode({sid: t})
+            except Exception:
+                self.free(sid)
+                raise
+            self._last_logits_np = out[sid]
+            return sid
+        try:
+            self._dense_prefill(alloc, prompt_ids)
+        except Exception:
+            self.free(sid)
+            raise
+        self.seq_tokens[sid] = list(prompt_ids)
+        return sid
+
+    def _copy_page(self, src: int, dst: int):
+        """Copy one physical page's K/V payload across every layer."""
+        self.k_pages, self.v_pages = self._copy_jit(
+            self.k_pages, self.v_pages, src, dst)
+
+    def _dense_prefill(self, alloc, prompt_ids: List[int]):
+        """Cold path: dense prefill, scatter KV into fresh pages."""
+        cfg = self.cfg
         T = len(prompt_ids)
         self.pm.append_tokens(alloc.seq_id, T)
         caches = model.init_caches(cfg, 1, T)
@@ -157,15 +225,27 @@ class PagedModelRunner:
             put(li, c["mixer"]["k"][0, :T], c["mixer"]["v"][0, :T])
             li += 1
         self.k_pages, self.v_pages = k_pages, v_pages
-        return alloc.seq_id
+        self._last_logits_np = np.asarray(
+            self._last_logits[0, -1].astype(jnp.float32))
 
     def last_prefill_logits(self) -> np.ndarray:
-        return np.asarray(self._last_logits[0, -1].astype(jnp.float32))
+        return self._last_logits_np
 
     def decode(self, seq_tokens: Dict[int, int]) -> Dict[int, np.ndarray]:
         """One batched decode step for {seq_id: token}."""
         sids = sorted(seq_tokens)
         B = len(sids)
+        # capacity pre-check: fail *before* touching any sequence state so
+        # the engine can preempt and retry without corrupted bookkeeping
+        growing = sum(1 for s in sids
+                      if self.pm.seqs[s].length % self.page_size == 0
+                      and self.pm.seqs[s].length // self.page_size
+                      == len(self.pm.seqs[s].pages))
+        self.pm.require_pages(growing)
+        for s in sids:
+            if -(-(self.pm.seqs[s].length + 1) // self.page_size) \
+                    > self.pm.pages_per_seq:
+                raise OutOfPages(f"seq {s} at pages_per_seq cap")
         pos = self.pm.context_lens(sids)               # write position
         for sid in sids:
             self.pm.append_tokens(sid, 1)
@@ -180,8 +260,82 @@ class PagedModelRunner:
             self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
             jnp.asarray(pos.astype(np.int32)), jnp.asarray(table),
             jnp.asarray(lens), jnp.asarray(page_idx), jnp.asarray(page_off))
+        for s in sids:
+            if s in self.seq_tokens:
+                self.seq_tokens[s].append(int(seq_tokens[s]))
         out = np.asarray(logits[:, 0].astype(jnp.float32))
         return {s: out[i] for i, s in enumerate(sids)}
 
-    def free(self, seq_id: int):
+    def free(self, seq_id: int, publish: bool = False):
+        """Release a sequence.  With ``publish=True`` (and the prefix
+        cache enabled) its pages are first inserted into the cache so a
+        later request sharing the prefix can adopt them."""
+        tokens = self.seq_tokens.pop(seq_id, None)
+        if (publish and self.prefix_cache is not None and tokens
+                and len(tokens) == self.pm.seqs[seq_id].length):
+            self.prefix_cache.insert(tokens, self.pm.seqs[seq_id].pages)
         self.pm.free_seq(seq_id)
+
+    def stats(self) -> dict:
+        out = {"pages": self.pm.stats()}
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.stats()
+        return out
+
+
+class PagedEngineBackend:
+    """Slot-keyed unified-runner facade over :class:`PagedModelRunner`.
+
+    ``MLCEngine`` drives every backend through the same four calls —
+    ``prefill(slot, ids)``, ``decode(tokens_by_slot, pos_by_slot)``,
+    ``release(slot)``, ``stats()`` — so the scheduler/engine code is
+    backend-agnostic.  This facade maps engine slots onto paged seq_ids,
+    publishes finished sequences into the prefix cache, and frees
+    preempted ones without publishing (their pages may be mid-write).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 4,
+                 max_context: int = 256, page_size: int = 16,
+                 num_pages: Optional[int] = None, seed: int = 0,
+                 enable_prefix_cache: bool = True):
+        pages_per_seq = -(-max_context // page_size)
+        if num_pages is None:
+            # room for every slot at full context plus cache headroom
+            num_pages = (max_slots + 2) * pages_per_seq
+        self.runner = PagedModelRunner(
+            cfg, params, num_pages=num_pages, page_size=page_size,
+            max_slots=max_slots, pages_per_seq=pages_per_seq, seed=seed,
+            enable_prefix_cache=enable_prefix_cache)
+        self.cfg = cfg
+        self.max_context = max_context
+        self.max_slots = max_slots
+        self.pm = self.runner.pm
+        self.prefix_cache = self.runner.prefix_cache
+        self._slot_seq: Dict[int, int] = {}
+
+    @property
+    def last_prefill_info(self) -> Dict[str, int]:
+        return self.runner.last_prefill_info
+
+    def prefill(self, slot: int, prompt_ids: List[int],
+                embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        assert embeds is None, "paged backend: vision embeds unsupported"
+        assert slot not in self._slot_seq, f"slot {slot} already bound"
+        sid = self.runner.prefill_seq(prompt_ids)
+        self._slot_seq[slot] = sid
+        return self.runner.last_prefill_logits()
+
+    def decode(self, tokens_by_slot: Dict[int, int],
+               pos_by_slot: Dict[int, int]) -> Dict[int, np.ndarray]:
+        del pos_by_slot                    # positions tracked by PageManager
+        seq_tok = {self._slot_seq[s]: t for s, t in tokens_by_slot.items()}
+        out = self.runner.decode(seq_tok)
+        return {s: out[self._slot_seq[s]] for s in tokens_by_slot}
+
+    def release(self, slot: int, publish: bool = True):
+        sid = self._slot_seq.pop(slot, None)
+        if sid is not None:
+            self.runner.free(sid, publish=publish)
+
+    def stats(self) -> dict:
+        return self.runner.stats()

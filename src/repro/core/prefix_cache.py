@@ -1,0 +1,243 @@
+"""Radix-tree prefix cache over paged KV (WebLLM multi-round chat reuse).
+
+The dominant browser-serving workload is multi-round chat: every turn
+resubmits the whole conversation, so consecutive requests share a long
+token prefix (system prompt + history).  This module caches the KV pages
+of finished sequences in a radix tree keyed by token ids so a later
+request can *adopt* the longest cached prefix instead of re-prefilling
+it.
+
+Structure
+---------
+* One tree node per **full page**: the edge into a node is the exact
+  ``page_size``-token tuple stored in that physical page.  Full pages are
+  immutable once written, so adopters share them zero-copy (+1 refcount
+  via :class:`PageManager`).
+* Each node additionally holds **partial tails**: a page whose final
+  tokens stop mid-page.  Tails cannot be shared in place (the adopter
+  must keep appending into that page), so adoption forks them
+  copy-on-write: a private physical page is allocated and the payload is
+  copied by the runner.
+* Eviction is LRU over leaves (nodes with no children/tails, and tails),
+  triggered on demand through the ``PageManager.reclaim`` hook when the
+  free list runs dry.  Evicting a page still referenced by a live
+  sequence merely drops the cache's reference — the page returns to the
+  free list when the sequence finishes.
+
+The cache is pure bookkeeping: page *payloads* live in the runner's jax
+page pools and are never touched here.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.paged_cache import PageManager
+
+
+def _common_prefix(a, b) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class _Node:
+    """One full cached page; the edge into the node is ``key``."""
+
+    __slots__ = ("parent", "key", "page", "children", "tails",
+                 "last_access")
+
+    def __init__(self, parent: Optional["_Node"], key: Tuple[int, ...],
+                 page: Optional[int], clock: int):
+        self.parent = parent
+        self.key = key
+        self.page = page                     # physical page id (root: None)
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.tails: List["_Tail"] = []
+        self.last_access = clock
+
+
+class _Tail:
+    """A partially filled final page hanging off a node."""
+
+    __slots__ = ("tokens", "page", "last_access")
+
+    def __init__(self, tokens: Tuple[int, ...], page: int, clock: int):
+        self.tokens = tokens
+        self.page = page
+        self.last_access = clock
+
+
+class PrefixCache:
+    """Radix tree token-ids -> physical KV pages, with LRU eviction."""
+
+    def __init__(self, pm: PageManager):
+        self.pm = pm
+        self.page_size = pm.page_size
+        self.root = _Node(None, (), None, 0)
+        self._clock = 0
+        self._pages: set = set()             # pages the cache holds a ref on
+        # counters (surfaced via engine stats / usage.extra)
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.inserted_pages = 0
+        # install the on-demand eviction hooks
+        pm.reclaim = self.reclaim
+        pm.evictable = self.evictable_pages
+
+    # -- lookup ----------------------------------------------------------
+    def match(self, ids: List[int]) -> Tuple[List[int],
+                                             Optional[Tuple[int, int]]]:
+        """Longest cached prefix of ``ids``.
+
+        Returns ``(full_pages, tail)`` where ``full_pages`` are physical
+        pages covering ``len(full_pages) * page_size`` leading tokens
+        (shareable in place) and ``tail`` is an optional
+        ``(page, n_tokens)`` partial page that must be forked
+        copy-on-write by the adopter.
+        """
+        self._clock += 1
+        ps = self.page_size
+        node = self.root
+        pages: List[int] = []
+        i = 0
+        while i + ps <= len(ids):
+            child = node.children.get(tuple(ids[i:i + ps]))
+            if child is None:
+                break
+            child.last_access = self._clock
+            pages.append(child.page)
+            node = child
+            i += ps
+        best: Optional[_Tail] = None
+        best_n = 0
+        rest = ids[i:]
+        for t in node.tails:
+            n = _common_prefix(t.tokens, rest)
+            if n > best_n:
+                best, best_n = t, n
+        tail = None
+        if best is not None:
+            best.last_access = self._clock
+            tail = (best.page, best_n)
+        total = i + best_n
+        if total:
+            self.hits += 1
+            self.hit_tokens += total
+        else:
+            self.misses += 1
+        return pages, tail
+
+    # -- publication -----------------------------------------------------
+    def insert(self, ids: List[int], pages: List[int]):
+        """Publish a finished sequence's tokens/pages into the tree.
+
+        ``pages`` must back ``ids`` contiguously (``pages[j]`` holds
+        tokens ``[j*ps, (j+1)*ps)``).  Pages backing already-cached nodes
+        are left alone (the existing physical page stays canonical);
+        pages that create new nodes/tails gain a cache reference so they
+        survive ``free_seq``.
+        """
+        self._clock += 1
+        ps = self.page_size
+        node = self.root
+        n_full = len(ids) // ps
+        for j in range(n_full):
+            key = tuple(ids[j * ps:(j + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(node, key, pages[j], self._clock)
+                node.children[key] = child
+                self._take(pages[j])
+            child.last_access = self._clock
+            node = child
+        rem = len(ids) - n_full * ps
+        if rem == 0:
+            return
+        tt = tuple(ids[n_full * ps:])
+        for t in node.tails:
+            # an existing tail already covers this one -> nothing to add
+            if len(t.tokens) >= rem and t.tokens[:rem] == tt:
+                t.last_access = self._clock
+                return
+        # drop tails that the new, longer tail strictly extends
+        keep = []
+        for t in node.tails:
+            if tt[:len(t.tokens)] == t.tokens:
+                self._drop(t.page)
+            else:
+                keep.append(t)
+        keep.append(_Tail(tt, pages[n_full], self._clock))
+        node.tails = keep
+        self._take(pages[n_full])
+
+    def _take(self, page: int):
+        self.pm.ref_page(page)
+        self._pages.add(page)
+        self.inserted_pages += 1
+
+    def _drop(self, page: int):
+        self._pages.discard(page)
+        self.pm.deref_page(page)
+
+    # -- eviction --------------------------------------------------------
+    def evictable_pages(self) -> int:
+        """Pages that would return to the free list if evicted now."""
+        return sum(1 for p in self._pages if self.pm.ref.get(p, 0) == 1)
+
+    def reclaim(self, n: int) -> int:
+        """Evict LRU leaves until ``n`` pages landed on the free list (or
+        the cache is empty).  Returns the number actually freed."""
+        freed = 0
+        while freed < n:
+            victim = self._lru_leaf()
+            if victim is None:
+                break
+            freed += self._evict(victim)
+        return freed
+
+    def _lru_leaf(self):
+        """Oldest evictable unit: a tail, or a childless/tailless node."""
+        best = None
+        best_t = None
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for t in node.tails:
+                if best_t is None or t.last_access < best_t:
+                    best, best_t = (node, t), t.last_access
+            for c in node.children.values():
+                if not c.children and not c.tails:
+                    if best_t is None or c.last_access < best_t:
+                        best, best_t = (node, c), c.last_access
+                else:
+                    stack.append(c)
+        return best
+
+    def _evict(self, victim) -> int:
+        parent, unit = victim
+        page = unit.page
+        if isinstance(unit, _Tail):
+            parent.tails.remove(unit)
+        else:
+            del parent.children[unit.key]
+        was_last_ref = self.pm.ref.get(page, 0) == 1
+        self._drop(page)
+        self.evictions += 1
+        return 1 if was_last_ref else 0
+
+    # -- stats -----------------------------------------------------------
+    @property
+    def cached_pages(self) -> int:
+        return len(self._pages)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_tokens": self.hit_tokens,
+                "evictions": self.evictions,
+                "cached_pages": self.cached_pages,
+                "evictable_pages": self.evictable_pages()}

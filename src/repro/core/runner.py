@@ -48,6 +48,8 @@ class ModelRunner:
         self.bucket = (_attn_only(cfg) if bucket_prefill is None
                        else bucket_prefill)
         self._prefill_fns: Dict[int, object] = {}
+        # unified runner interface (shared with PagedEngineBackend)
+        self.last_prefill_info: Dict[str, int] = {"prefix_cached_tokens": 0}
 
         cfgc = cfg
 
@@ -133,3 +135,11 @@ class ModelRunner:
             self.params, self.caches, jnp.asarray(tok), jnp.asarray(pos))
         out_np = np.asarray(logits[:, 0].astype(jnp.float32))
         return {s: out_np[s] for s in tokens_by_slot}
+
+    def release(self, slot: int, publish: bool = True):
+        """Unified runner interface: dense slots are reused in place, so
+        releasing is a no-op (the next prefill overwrites the slot)."""
+
+    def stats(self) -> dict:
+        return {"backend": "dense", "max_slots": self.max_slots,
+                "max_context": self.max_context}

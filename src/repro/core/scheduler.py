@@ -34,9 +34,24 @@ class Scheduler:
         if not self.free_slots or not self.waiting:
             return False
         if self.pm is not None:
-            pages_needed = -(-prompt_len // self.pm.page_size) + 1
-            return self.pm.num_free_pages >= pages_needed
+            # decode-growth headroom: one page for this request plus one
+            # per already-running sequence, so admission is strictly
+            # harder than the next decode step (avoids preempt/readmit
+            # thrash).  Prefix-cache-evictable pages count as available;
+            # eviction happens lazily on allocation.
+            pages_needed = (-(-prompt_len // self.pm.page_size)
+                            + 1 + len(self.running))
+            return self.pm.available_pages >= pages_needed
         return True
+
+    def fits_ever(self, prompt_len: int) -> bool:
+        """False iff the request could not run even with the whole page
+        pool to itself (prefill + one decode-growth page) — admitting it
+        anyway would preempt/re-prefill forever."""
+        if self.pm is None:
+            return True
+        return (-(-prompt_len // self.pm.page_size) + 1
+                <= self.pm.num_pages)
 
     def admit(self, item) -> int:
         slot = self.free_slots.pop()
@@ -66,5 +81,8 @@ class Scheduler:
         return sorted(self.running)
 
     def stats(self) -> dict:
-        return {"waiting": len(self.waiting), "running": len(self.running),
-                "free_slots": len(self.free_slots)}
+        out = {"waiting": len(self.waiting), "running": len(self.running),
+               "free_slots": len(self.free_slots)}
+        if self.pm is not None:
+            out["pages"] = self.pm.stats()
+        return out

@@ -108,13 +108,16 @@ class ServiceWorkerMLCEngine:
                     "request": request})
         if request.get("stream"):
             return self._stream(mid, q)
-        msg = q.get(timeout=180)
-        if msg["kind"] == "error":
-            raise RuntimeError(msg["message"])
-        done = q.get(timeout=180)
-        assert done["kind"] == "done"
-        self._drop(mid)
-        return api.ChatCompletionResponse.from_dict(msg["data"])
+        try:
+            msg = q.get(timeout=180)
+            if msg["kind"] == "error":
+                # no trailing "done" follows an error — just surface it
+                raise RuntimeError(msg["message"])
+            done = q.get(timeout=180)
+            assert done["kind"] == "done"
+            return api.ChatCompletionResponse.from_dict(msg["data"])
+        finally:
+            self._drop(mid)
 
     def _stream(self, mid: str,
                 q: "queue.Queue[dict]") -> Iterator[api.ChatCompletionChunk]:

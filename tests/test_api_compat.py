@@ -1,0 +1,37 @@
+"""Forward-compat: OpenAI-style clients send fields we don't implement —
+request parsing must ignore them, not raise TypeError.  (Runs without
+hypothesis, unlike test_api_protocol.)"""
+from repro.core import api
+
+
+def test_from_dict_ignores_unknown_keys():
+    req = api.ChatCompletionRequest.from_dict({
+        "messages": [{"role": "user", "content": "hi",
+                      "name": "alice"}],            # OpenAI message.name
+        "model": "m",
+        "max_tokens": 4,
+        "n": 1,                                     # unsupported OpenAI knob
+        "tools": [{"type": "function"}],
+        "response_format": {"type": "json_object",
+                            "strict": True},        # unknown rf key
+    })
+    assert req.model == "m"
+    assert req.max_tokens == 4
+    assert req.messages[0].content == "hi"
+    assert req.response_format.type == "json_object"
+
+
+def test_constructor_ignores_unknown_nested_keys():
+    req = api.ChatCompletionRequest(
+        messages=[{"role": "user", "content": "x", "name": "bob"}],
+        response_format={"type": "text", "schema_version": 2})
+    assert req.messages[0].role == "user"
+    assert req.response_format.type == "text"
+
+
+def test_known_keys_roundtrip_unchanged():
+    d = {"messages": [{"role": "user", "content": "y"}],
+         "model": "m", "temperature": 0.5, "stream": True}
+    req = api.ChatCompletionRequest.from_dict(d)
+    back = api.ChatCompletionRequest.from_dict(req.to_dict())
+    assert back.to_dict() == req.to_dict()

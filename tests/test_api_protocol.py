@@ -1,4 +1,8 @@
 """OpenAI-protocol types: JSON round-trips (hypothesis) and defaults."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip without it
+
 import json
 
 from hypothesis import given, settings

@@ -1,4 +1,8 @@
 """RequestSampler properties."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip without it
+
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st

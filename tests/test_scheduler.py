@@ -1,5 +1,7 @@
 """Scheduler + PageManager invariants (hypothesis stateful-ish)."""
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip without it
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

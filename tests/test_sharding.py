@@ -1,6 +1,8 @@
 """Sharding-spec derivation properties (no multi-device needed)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip without it
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P

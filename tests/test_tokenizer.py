@@ -1,5 +1,7 @@
 """Tokenizer + streaming detokenizer properties (hypothesis)."""
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip without it
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
