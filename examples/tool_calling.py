@@ -1,0 +1,68 @@
+"""Tool calling (WebLLM agentic scenario): the OpenAI agent loop.
+
+Declare ``tools``, force a call with ``tool_choice="required"`` (the
+function's JSON schema is compiled into the grammar engine, so the call
+is well-formed by construction), execute it, feed the result back as a
+``role="tool"`` message, and let the model answer.
+
+    PYTHONPATH=src python examples/tool_calling.py
+"""
+import json
+from dataclasses import asdict
+
+from repro.configs import get_config
+from repro.core import MLCEngine
+
+TOOLS = [{
+    "type": "function",
+    "function": {
+        "name": "get_weather",
+        "description": "Current weather for a city",
+        "parameters": {
+            "type": "object",
+            "properties": {"city": {"enum": ["paris", "tokyo"]}},
+            "required": ["city"],
+        },
+    },
+}]
+
+
+def get_weather(city: str) -> dict:
+    return {"city": city, "temp_c": 19, "sky": "clear"}
+
+
+def main():
+    engine = MLCEngine()
+    engine.load_model("m", get_config("phi-3.5-mini", reduced=True),
+                      max_slots=2, max_context=256)
+
+    messages = [{"role": "user", "content": "What is the weather in paris?"}]
+    resp = engine.chat_completions_create({
+        "messages": messages, "model": "m", "max_tokens": 160,
+        "temperature": 0.8, "seed": 9,
+        "tools": TOOLS, "tool_choice": "required"})
+    choice = resp.choices[0]
+    print("finish_reason:", choice.finish_reason)
+    assert choice.finish_reason == "tool_calls", choice.finish_reason
+
+    call = choice.message.tool_calls[0]
+    args = json.loads(call.function.arguments)
+    print("tool call:", call.function.name, args)
+    result = get_weather(**args)
+    print("tool result:", result)
+
+    # agent loop turn 2: echo the call + result, let the model answer
+    messages.append({"role": "assistant", "content": None,
+                     "tool_calls": [asdict(call)]})
+    messages.append({"role": "tool", "tool_call_id": call.id,
+                     "content": json.dumps(result)})
+    final = engine.chat_completions_create({
+        "messages": messages, "model": "m", "max_tokens": 24,
+        "temperature": 0.8, "seed": 10,
+        "tools": TOOLS, "tool_choice": "none"})
+    print("assistant:", final.choices[0].message.content)
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tree hygiene gate (tier-1): no tracked bytecode, and src compiles.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bad=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' || true)
+if [ -n "$bad" ]; then
+    echo "ERROR: tracked bytecode files:" >&2
+    echo "$bad" >&2
+    exit 1
+fi
+
+python -m compileall -q src
+echo "check_tree: OK"

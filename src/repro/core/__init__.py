@@ -1,5 +1,6 @@
 from repro.core.api import (ChatCompletionRequest, ChatCompletionResponse,  # noqa
-                            ChatMessage, ResponseFormat)
+                            ChatMessage, FunctionCall, Logprobs,
+                            ResponseFormat, ToolCall)
 from repro.core.engine import MLCEngine  # noqa: F401
 from repro.core.paged_runner import PagedEngineBackend  # noqa: F401
 from repro.core.prefix_cache import PrefixCache  # noqa: F401

@@ -5,6 +5,20 @@ chat completions, structured generation via the grammar engine,
 multi-model support, and usage stats (incl. decode tok/s — the paper's
 Table-1 metric).
 
+Request lifecycle: one request owns ``n`` independent choice sequences
+(:class:`_Request` -> ``n`` x :class:`_Seq`).  On the paged backend the
+prompt is prefilled ONCE and its KV pages are copy-on-write forked into
+the sibling choices (full pages shared zero-copy, the partial tail page
+copied), so best-of-n sampling costs one prefill plus n decode streams;
+the dense backend falls back to n full prefills.  Each choice carries
+its own sampler (seeded ``seed + index``), grammar matcher, and
+detokenizer; chunks/choices are indexed and usage is aggregated when the
+last choice finishes.  ``tools``/``tool_choice`` constrain decoding to a
+tool-call JSON via the grammar engine (``finish_reason="tool_calls"``),
+``logprobs`` records per-token log-probabilities, and
+``abort(request_id)`` — also triggered by closing a streaming iterator —
+frees the request's slots and pages mid-flight.
+
 The engine is synchronous-core + thread-loop: ``chat_completions_create``
 enqueues a request and returns an iterator over chunks; a single loop
 thread steps all models while any request is live (the UI-thread /
@@ -12,9 +26,11 @@ worker-thread split of the paper lives one level up, in core/worker.py).
 """
 from __future__ import annotations
 
+import json
 import queue
 import threading
 import time
+import uuid
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Union
 
@@ -26,7 +42,8 @@ from repro.core.paged_runner import PagedEngineBackend, paged_supported
 from repro.core.runner import ModelRunner
 from repro.core.sampler import RequestSampler
 from repro.core.scheduler import Scheduler
-from repro.grammar import GrammarMatcher, parse_gbnf, schema_to_gbnf
+from repro.grammar import (GrammarMatcher, parse_gbnf, schema_to_gbnf,
+                           tools_to_gbnf)
 from repro.grammar.gbnf import JSON_GBNF
 from repro.tokenizer import ByteBPETokenizer, DetokStreamer
 
@@ -34,29 +51,50 @@ _SENTINEL = object()
 
 
 @dataclass
-class _Live:
-    req: api.ChatCompletionRequest
-    rid: str
-    model: str
-    prompt_ids: List[int]
-    out: "queue.Queue"
-    sampler: RequestSampler = None
+class _Seq:
+    """One choice (``choices[index]``) of a request: its own sampler,
+    grammar matcher, detokenizer, and decode slot."""
+    index: int
+    sampler: RequestSampler
+    streamer: DetokStreamer
     matcher: Optional[GrammarMatcher] = None
-    streamer: DetokStreamer = None
-    embeds: Optional[np.ndarray] = None
+    request: "_Request" = None
     slot: int = -1
     pos: int = 0                      # next write position
     generated: List[int] = field(default_factory=list)
     text: str = ""
     emitted: int = 0                  # chars already streamed
     finish_reason: Optional[str] = None
-    t_submit: float = field(default_factory=time.time)
-    t_first: float = 0.0
-    t_done: float = 0.0
     next_token: Optional[int] = None
     role_sent: bool = False           # assistant-role chunk already emitted
-    cached_tokens: int = 0            # prompt tokens served from prefix cache
+    tool_calls: Optional[List[api.ToolCall]] = None
+    logprobs: List[api.TokenLogprob] = field(default_factory=list)
+    lp_emitted: int = 0               # logprob entries already streamed
+    t_done: float = 0.0
+
+
+@dataclass
+class _Request:
+    """A chat-completion request owning ``n`` choice sequences."""
+    req: api.ChatCompletionRequest
+    rid: str
+    model: str
+    prompt_ids: List[int]
+    out: "queue.Queue"
+    seqs: List[_Seq] = field(default_factory=list)
+    tool_grammar: bool = False        # decode constrained to a tool call
+    embeds: Optional[np.ndarray] = None
+    aborted: bool = False
+    t_submit: float = field(default_factory=time.time)
+    t_first: float = 0.0
     prefill_s: float = 0.0
+    cached_tokens: int = 0            # prompt tokens served from prefix cache
+
+    def pending(self) -> List[_Seq]:
+        return [s for s in self.seqs if s.finish_reason is None]
+
+    def done(self) -> bool:
+        return all(s.finish_reason is not None for s in self.seqs)
 
 
 @dataclass
@@ -71,12 +109,17 @@ class _LoadedModel:
 class MLCEngine:
     """Backend engine.  See ServiceWorkerMLCEngine for the frontend."""
 
+    #: seconds of engine-wide inactivity before a waiting caller gives up
+    STALL_TIMEOUT_S = 300.0
+
     def __init__(self):
         self.models: Dict[str, _LoadedModel] = {}
+        self._requests: Dict[str, _Request] = {}      # live, by request id
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._shutdown = False
+        self._t_activity = time.time()    # last time any step made progress
 
     # -- model management ----------------------------------------------
     def load_model(self, name: str, cfg, *, params=None, tokenizer=None,
@@ -126,24 +169,48 @@ class MLCEngine:
 
     # -- public API ------------------------------------------------------
     def chat_completions_create(
-            self, request: Union[api.ChatCompletionRequest, dict]):
+            self, request: Union[api.ChatCompletionRequest, dict],
+            request_id: Optional[str] = None):
         if isinstance(request, dict):
             request = api.ChatCompletionRequest.from_dict(request)
-        live = self._make_live(request)
+        r = self._make_request(request, request_id)
         with self._lock:
-            self.models[request.model].scheduler.enqueue(live)
+            self.models[request.model].scheduler.enqueue(r)
+            self._requests[r.rid] = r
+            self._t_activity = time.time()
         self._ensure_loop()
         self._wake.set()
         if request.stream:
-            return self._iter_chunks(live)
-        return self._collect(live)
+            return self._iter_chunks(r)
+        return self._collect(r)
+
+    def abort(self, request_id: str) -> bool:
+        """Cancel an in-flight request: its unfinished choices finish
+        with ``finish_reason="abort"`` and every slot/page they hold is
+        freed.  No-op (returns False) if the id is unknown or already
+        finished.  Closing a streaming iterator calls this implicitly —
+        a browser tab's "stop generating" actually frees resources."""
+        with self._lock:
+            r = self._requests.get(request_id)
+            if r is None:
+                return False
+            r.aborted = True
+        self._wake.set()
+        return True
 
     # -- request setup ----------------------------------------------------
-    def _make_live(self, req: api.ChatCompletionRequest) -> _Live:
+    def _make_request(self, req: api.ChatCompletionRequest,
+                      request_id: Optional[str] = None) -> _Request:
         if req.model not in self.models:
             raise KeyError(f"model {req.model!r} not loaded")
         lm = self.models[req.model]
         tok = lm.tokenizer
+        if req.n < 1:
+            raise ValueError(f"n must be >= 1, got {req.n}")
+        if req.n > lm.scheduler.max_slots:
+            raise ValueError(
+                f"n={req.n} exceeds max_slots={lm.scheduler.max_slots}: "
+                "the choice set could never be admitted all-or-nothing")
         prompt = tok.apply_chat_template([m.__dict__ for m in req.messages])
         ids = tok.encode(prompt)
         room = lm.runner.max_context - (
@@ -152,15 +219,28 @@ class MLCEngine:
             else 0)
         max_prompt = room - max(1, min(req.max_tokens, 16))
         ids = ids[-max_prompt:]
-        matcher = None
-        rf = req.response_format
-        if rf.type == "json_object":
-            matcher = GrammarMatcher(parse_gbnf(JSON_GBNF), tok)
-        elif rf.type == "json_schema":
-            matcher = GrammarMatcher(
-                parse_gbnf(schema_to_gbnf(rf.json_schema or {})), tok)
-        elif rf.type == "grammar":
-            matcher = GrammarMatcher(parse_gbnf(rf.grammar or ""), tok)
+        # grammar: a forced tool call takes precedence over response_format
+        gbnf = None
+        tool_grammar = False
+        if req.tools and req.tool_choice != "none":
+            forced = None
+            if isinstance(req.tool_choice, dict):
+                forced = (req.tool_choice.get("function") or {}).get("name")
+                if not forced:
+                    raise ValueError(
+                        "tool_choice object must name a function")
+            if forced is not None or req.tool_choice == "required":
+                gbnf = tools_to_gbnf(req.tools, only=forced)
+                tool_grammar = True
+        if gbnf is None:
+            rf = req.response_format
+            if rf.type == "json_object":
+                gbnf = JSON_GBNF
+            elif rf.type == "json_schema":
+                gbnf = schema_to_gbnf(rf.json_schema or {})
+            elif rf.type == "grammar":
+                gbnf = rf.grammar or ""
+        grammar = parse_gbnf(gbnf) if gbnf is not None else None
         embeds = None
         if req.image_embeds:
             if lm.backend == "paged":
@@ -168,16 +248,26 @@ class MLCEngine:
                     "paged backend does not support image inputs; load the "
                     "model with backend='dense' for vision requests")
             embeds = lm.image_embeds[req.image_embeds]
-        return _Live(
-            req=req, rid=api.new_request_id(), model=req.model,
-            prompt_ids=ids, out=queue.Queue(),
-            sampler=RequestSampler(
-                temperature=req.temperature, top_p=req.top_p,
-                top_k=req.top_k, frequency_penalty=req.frequency_penalty,
-                presence_penalty=req.presence_penalty,
-                repetition_penalty=req.repetition_penalty,
-                logit_bias=req.logit_bias, seed=req.seed),
-            matcher=matcher, streamer=DetokStreamer(tok), embeds=embeds)
+        r = _Request(req=req, rid=request_id or api.new_request_id(),
+                     model=req.model, prompt_ids=ids, out=queue.Queue(),
+                     tool_grammar=tool_grammar, embeds=embeds)
+        for i in range(req.n):
+            seq = _Seq(
+                index=i,
+                sampler=RequestSampler(
+                    temperature=req.temperature, top_p=req.top_p,
+                    top_k=req.top_k,
+                    frequency_penalty=req.frequency_penalty,
+                    presence_penalty=req.presence_penalty,
+                    repetition_penalty=req.repetition_penalty,
+                    logit_bias=req.logit_bias,
+                    seed=None if req.seed is None else req.seed + i),
+                matcher=(GrammarMatcher(grammar, tok)
+                         if grammar is not None else None),
+                streamer=DetokStreamer(tok))
+            seq.request = r
+            r.seqs.append(seq)
+        return r
 
     # -- loop --------------------------------------------------------------
     def _ensure_loop(self):
@@ -217,203 +307,385 @@ class MLCEngine:
             models = list(self.models.items())
         for name, lm in models:
             busy |= self._step_model(name, lm)
+        if busy:
+            self._t_activity = time.time()
         return busy
 
     def _step_model(self, name: str, lm: _LoadedModel) -> bool:
         sched = lm.scheduler
-        busy = False
-        # ---- admission + prefill (one per step, WebLLM-style) ----
-        # ``can_admit`` covers both slot and page-pool accounting (paged
-        # backend: prefix-cache-evictable pages count as available).
-        if sched.waiting and sched.free_slots:
-            head: _Live = sched.waiting[0]
-            # a preempted request resumes with its generated tokens
-            # re-prefixed (the prefix cache usually makes this cheap)
-            ids = head.prompt_ids + head.generated
-            if not sched.fits_ever(len(ids)):
+        busy = self._reap_aborted(lm)
+        # ---- admission + prefill (one request per step, WebLLM-style).
+        # Admission is all-or-nothing over the request's unfinished choice
+        # set; ``can_admit`` covers both slot and page-pool accounting
+        # (paged: prompt pages + per-sibling CoW tail forks; prefix-cache-
+        # evictable pages count as available).
+        if sched.waiting:
+            head: _Request = sched.waiting[0]
+            pending = head.pending()
+            if not pending:                    # e.g. aborted while queued
+                sched.waiting.popleft()
+                return True
+            # a preempted choice resumes with its generated tokens
+            # re-prefixed (the prefix cache usually makes this cheap);
+            # resumed choices have diverged, so each holds its own full
+            # prompt copy rather than CoW-sharing one prefill
+            need = max(len(head.prompt_ids) + len(s.generated)
+                       for s in pending)
+            shared = self._sharable(lm, pending)
+            if not sched.fits_ever(need, len(pending), shared):
                 # would livelock through preempt/re-prefill — fail it now
                 sched.waiting.popleft()
-                head.out.put(RuntimeError(
+                self._fail(head, RuntimeError(
                     "prompt does not fit in the KV page pool"))
                 return True
-            if sched.can_admit(len(ids)):
+            if sched.can_admit(need, len(pending), shared):
                 busy = True
-                live = sched.waiting.popleft()
-                live.slot = sched.admit(live)
-                t0 = time.time()
-                try:
-                    logits = lm.runner.prefill(live.slot, ids, live.embeds)
-                except OutOfPages:
-                    sched.release(live.slot)
-                    live.slot = -1
-                    if sched.running:
-                        sched.waiting.appendleft(live)   # retry when freed
-                    else:
-                        live.out.put(RuntimeError(
-                            "prompt does not fit in the KV page pool"))
-                    return busy
-                except Exception as e:
-                    # a poisoned request must not kill the loop thread or
-                    # leak its slot — surface the error to its caller
-                    lm.runner.release(live.slot, publish=False)
-                    sched.release(live.slot)
-                    live.slot = -1
-                    live.out.put(e)
-                    return busy
-                live.cached_tokens = max(
-                    live.cached_tokens,
-                    int(lm.runner.last_prefill_info.get(
-                        "prefix_cached_tokens", 0)))
-                live.pos = len(ids) + (
-                    lm.runner.cfg.frontend.num_embeds
-                    if (lm.runner.cfg.frontend.kind == "vision"
-                        and live.embeds is not None) else 0)
-                if live.t_first == 0.0:
-                    live.t_first = time.time()
-                    live.prefill_s = live.t_first - t0
-                if not live.role_sent:
-                    self._emit_role(live)
-                    live.role_sent = True
-                if live.next_token is None:      # fresh (not resumed) seq
-                    self._consume_logits(lm, live, logits)
+                sched.waiting.popleft()
+                self._prefill_request(lm, head, pending)
         # ---- batched decode over active slots ----
         active = [sched.running[s] for s in sched.active_slots
                   if sched.running[s].next_token is not None]
         if active:
-            toks = {lv.slot: lv.next_token for lv in active}
-            poss = {lv.slot: lv.pos for lv in active}
+            toks = {s.slot: s.next_token for s in active}
+            poss = {s.slot: s.pos for s in active}
             try:
                 logits = lm.runner.decode(toks, poss)
             except OutOfPages:
-                # graceful degradation: kick the newest sequence back to
-                # the queue and drop its pages (refcounts handled by the
-                # runner); the survivors retry next step
-                slot, item = sched.preempt_newest()
-                lm.runner.release(slot, publish=False)
-                item.slot = -1
+                # graceful degradation: kick the newest request (ALL of
+                # its sibling choices, so they stay consistent) back to
+                # the queue and drop its pages; survivors retry next step
+                _, released = sched.preempt_newest()
+                for slot, seq in released:
+                    lm.runner.release(slot, publish=False)
+                    seq.slot = -1
                 return True
-            for lv in active:
-                lv.generated.append(lv.next_token)
-                lv.pos += 1
-                self._consume_logits(lm, lv, logits[lv.slot])
+            for seq in active:
+                if seq.finish_reason is not None or seq.slot < 0:
+                    continue                   # finished/preempted mid-loop
+                seq.generated.append(seq.next_token)
+                seq.pos += 1
+                self._consume_logits(lm, seq, logits[seq.slot])
             busy = True
         return busy
 
+    def _reap_aborted(self, lm: _LoadedModel) -> bool:
+        """Finish every choice of aborted requests: running ones release
+        their slots and pages, queued ones just resolve."""
+        sched = lm.scheduler
+        busy = False
+        for slot in list(sched.running):
+            seq = sched.running.get(slot)
+            if (seq is not None and seq.request.aborted
+                    and seq.finish_reason is None):
+                self._finish_seq(lm, seq, "abort")
+                busy = True
+        for r in [w for w in list(sched.waiting) if w.aborted]:
+            try:
+                sched.waiting.remove(r)
+            except ValueError:
+                continue
+            for seq in r.pending():
+                self._finish_seq(lm, seq, "abort")
+            busy = True
+        return busy
+
+    @staticmethod
+    def _sharable(lm: _LoadedModel, pending: List[_Seq]) -> bool:
+        """One shared prompt prefill + CoW forks?  Only on the paged
+        backend, and only while the choices are fresh (a preempted
+        request's choices have diverged generated suffixes)."""
+        return (lm.backend == "paged" and len(pending) > 1
+                and all(not s.generated and s.next_token is None
+                        for s in pending))
+
+    def _prefill_request(self, lm: _LoadedModel, r: _Request,
+                         pending: List[_Seq]):
+        """Admit and prefill a request's unfinished choice set.
+
+        Paged fast path for fresh multi-choice requests: ONE prompt
+        prefill, then CoW forks of the prompt KV into each sibling.
+        Dense backend (and resumed, diverged choices): one prefill per
+        sequence."""
+        sched = lm.scheduler
+        sharable = self._sharable(lm, pending)
+        admitted: List[_Seq] = []
+        t0 = time.time()
+        try:
+            seq_logits: Dict[int, np.ndarray] = {}
+            if sharable:
+                s0 = pending[0]
+                s0.slot = sched.admit(s0, group=r)
+                admitted.append(s0)
+                logits = lm.runner.prefill(s0.slot, r.prompt_ids, None)
+                for s in pending[1:]:
+                    s.slot = sched.admit(s, group=r)
+                    admitted.append(s)
+                    lm.runner.fork_slot(s0.slot, s.slot)
+                for s in pending:
+                    seq_logits[s.index] = logits
+            else:
+                for s in pending:
+                    ids = r.prompt_ids + s.generated
+                    s.slot = sched.admit(s, group=r)
+                    admitted.append(s)
+                    seq_logits[s.index] = lm.runner.prefill(
+                        s.slot, ids, r.embeds)
+        except OutOfPages:
+            for s in admitted:
+                lm.runner.release(s.slot, publish=False)
+                sched.release(s.slot)
+                s.slot = -1
+            if sched.running:
+                sched.waiting.appendleft(r)    # retry when pages free up
+            else:
+                self._fail(r, RuntimeError(
+                    "prompt does not fit in the KV page pool"))
+            return
+        except Exception as e:
+            # a poisoned request must not kill the loop thread or leak
+            # its slots — surface the error to its caller
+            for s in admitted:
+                lm.runner.release(s.slot, publish=False)
+                sched.release(s.slot)
+                s.slot = -1
+            self._fail(r, e)
+            return
+        r.cached_tokens = max(
+            r.cached_tokens,
+            int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
+        extra = (lm.runner.cfg.frontend.num_embeds
+                 if (lm.runner.cfg.frontend.kind == "vision"
+                     and r.embeds is not None) else 0)
+        if r.t_first == 0.0:
+            r.t_first = time.time()
+            r.prefill_s = r.t_first - t0
+        for s in pending:
+            s.pos = len(r.prompt_ids) + len(s.generated) + extra
+            if not s.role_sent:
+                self._emit_role(r, s)
+                s.role_sent = True
+            if s.next_token is None:           # fresh (not resumed) seq
+                self._consume_logits(lm, s, seq_logits[s.index])
+
+    def _fail(self, r: _Request, exc: Exception):
+        with self._lock:
+            self._requests.pop(r.rid, None)
+        r.out.put(exc)
+
     # -- token consumption ---------------------------------------------
-    def _consume_logits(self, lm: _LoadedModel, live: _Live,
+    def _consume_logits(self, lm: _LoadedModel, seq: _Seq,
                         logits: np.ndarray):
+        r = seq.request
+        req = r.req
         tok = lm.tokenizer
         V = tok.vocab_size
-        mask = live.matcher.token_mask() if live.matcher else None
-        t = live.sampler.sample(logits[:V], mask)
-        if live.matcher is not None:
-            live.matcher.accept_token(t)
-        live.sampler.observe(t)
+        mask = seq.matcher.token_mask() if seq.matcher else None
+        t = seq.sampler.sample(logits[:V], mask)
+        if req.logprobs:
+            self._record_logprob(tok, seq, logits[:V], t, req.top_logprobs)
+        if seq.matcher is not None:
+            seq.matcher.accept_token(t)
+        seq.sampler.observe(t)
 
         if t == tok.eos_id:
             # EOS contributes no text but is a sampled completion token —
             # count it, mirroring the length path below
-            live.generated.append(t)
-            return self._finish(lm, live, "stop")
-        live.next_token = t
-        delta = live.streamer.put(t)
-        live.text += delta
-        self._emit_progress(lm, live)
-        n_gen = len(live.generated) + 1          # incl. pending next_token
-        if live.req.stop and any(s in live.text for s in live.req.stop):
-            cut = min(live.text.find(s) for s in live.req.stop
-                      if s in live.text)
-            live.text = live.text[:cut]
-            return self._finish(lm, live, "stop")
-        if (n_gen >= live.req.max_tokens
-                or live.pos + 1 >= lm.runner.max_context):
-            live.generated.append(t)
-            return self._finish(lm, live, "length")
+            seq.generated.append(t)
+            return self._finish_seq(lm, seq, "stop")
+        seq.next_token = t
+        delta = seq.streamer.put(t)
+        seq.text += delta
+        self._emit_progress(r, seq)
+        n_gen = len(seq.generated) + 1           # incl. pending next_token
+        if req.stop and any(s in seq.text for s in req.stop):
+            cut = min(seq.text.find(s) for s in req.stop if s in seq.text)
+            seq.text = seq.text[:cut]
+            return self._finish_seq(lm, seq, "stop")
+        if (n_gen >= req.max_tokens
+                or seq.pos + 1 >= lm.runner.max_context):
+            seq.generated.append(t)
+            return self._finish_seq(lm, seq, "length")
 
-    def _safe_len(self, live: _Live) -> int:
-        if not live.req.stop:
-            return len(live.text)
-        hold = max(len(s) for s in live.req.stop) - 1
-        return max(live.emitted, len(live.text) - hold)
+    def _record_logprob(self, tok, seq: _Seq, logits: np.ndarray,
+                        t: int, top_k: int):
+        ls = logits.astype(np.float64)
+        m = ls.max()
+        ls = ls - m - np.log(np.exp(ls - m).sum())
 
-    def _emit_role(self, live: _Live):
-        if live.req.stream:
-            live.out.put(api.ChatCompletionChunk(
-                id=live.rid, model=live.model,
+        def entry(cls, i):
+            return cls(token=tok.decode([i]), logprob=float(ls[i]),
+                       bytes=(list(tok.token_bytes(i))
+                              if i >= tok.n_special else None))
+
+        top = ([entry(api.TopLogprob, int(i))
+                for i in np.argsort(-ls)[:top_k]] if top_k > 0 else [])
+        e = entry(api.TokenLogprob, int(t))
+        e.top_logprobs = top
+        seq.logprobs.append(e)
+
+    def _safe_len(self, req: api.ChatCompletionRequest, seq: _Seq) -> int:
+        if not req.stop:
+            return len(seq.text)
+        hold = max(len(s) for s in req.stop) - 1
+        return max(seq.emitted, len(seq.text) - hold)
+
+    # -- chunk emission -------------------------------------------------
+    def _emit_role(self, r: _Request, seq: _Seq):
+        if r.req.stream:
+            r.out.put(api.ChatCompletionChunk(
+                id=r.rid, model=r.model,
                 choices=[api.ChunkChoice(
-                    delta=api.ChoiceDelta(content="", role="assistant"))]))
+                    delta=api.ChoiceDelta(content="", role="assistant"),
+                    index=seq.index)]))
 
-    def _emit_progress(self, lm: _LoadedModel, live: _Live):
-        if not live.req.stream:
+    def _emit_progress(self, r: _Request, seq: _Seq):
+        # forced tool calls stream nothing until the call is complete —
+        # the arguments JSON arrives whole, in the final chunk
+        if not r.req.stream or r.tool_grammar:
             return
-        safe = self._safe_len(live)
-        if safe > live.emitted:
-            live.out.put(api.ChatCompletionChunk(
-                id=live.rid, model=live.model,
-                choices=[api.ChunkChoice(
-                    delta=api.ChoiceDelta(
-                        content=live.text[live.emitted:safe]))]))
-            live.emitted = safe
+        safe = self._safe_len(r.req, seq)
+        if safe > seq.emitted:
+            choice = api.ChunkChoice(
+                delta=api.ChoiceDelta(content=seq.text[seq.emitted:safe]),
+                index=seq.index)
+            if r.req.logprobs:
+                choice.logprobs = api.Logprobs(
+                    content=seq.logprobs[seq.lp_emitted:])
+                seq.lp_emitted = len(seq.logprobs)
+            r.out.put(api.ChatCompletionChunk(
+                id=r.rid, model=r.model, choices=[choice]))
+            seq.emitted = safe
 
-    def _finish(self, lm: _LoadedModel, live: _Live, reason: str):
-        live.text += live.streamer.flush()
+    # -- completion ------------------------------------------------------
+    def _finish_seq(self, lm: _LoadedModel, seq: _Seq, reason: str):
+        r = seq.request
+        req = r.req
+        seq.text += seq.streamer.flush()
         # the flush may surface a stop string that was buffered as
         # incomplete UTF-8 — truncate again
-        for s in live.req.stop:
-            if s in live.text:
-                live.text = live.text[:live.text.find(s)]
+        for s in req.stop:
+            if s in seq.text:
+                seq.text = seq.text[:seq.text.find(s)]
                 reason = "stop"
-        live.finish_reason = reason
-        live.t_done = time.time()
-        live.next_token = None
-        lm.runner.release(live.slot)       # paged: publish to prefix cache
-        lm.scheduler.release(live.slot)
-        n_prompt = len(live.prompt_ids)
-        n_gen = len(live.generated)
-        decode_s = max(live.t_done - live.t_first, 1e-9)
-        usage = api.Usage(
+        if (reason == "stop" and req.tools and req.tool_choice != "none"):
+            calls = _parse_tool_calls(seq.text, req.tools)
+            if calls is not None:
+                seq.tool_calls = calls
+                reason = "tool_calls"
+        seq.finish_reason = reason
+        seq.t_done = time.time()
+        seq.next_token = None
+        if seq.slot >= 0:
+            # aborted sequences may hold mid-write pages — never publish
+            lm.runner.release(seq.slot, publish=(reason != "abort"))
+            lm.scheduler.release(seq.slot)
+            seq.slot = -1
+        last = r.done()
+        if req.stream:
+            delta = api.ChoiceDelta(
+                content="" if reason == "tool_calls"
+                else seq.text[seq.emitted:])
+            if reason == "tool_calls":
+                delta.tool_calls = seq.tool_calls
+            choice = api.ChunkChoice(delta=delta, index=seq.index,
+                                     finish_reason=reason)
+            if req.logprobs:
+                choice.logprobs = api.Logprobs(
+                    content=seq.logprobs[seq.lp_emitted:])
+                seq.lp_emitted = len(seq.logprobs)
+            usage = (self._usage(r) if last and self._include_usage(req)
+                     else None)
+            r.out.put(api.ChatCompletionChunk(
+                id=r.rid, model=r.model, choices=[choice], usage=usage))
+        if last:
+            self._finish_request(r)
+
+    @staticmethod
+    def _include_usage(req: api.ChatCompletionRequest) -> bool:
+        if req.stream_options is None:
+            return True
+        return bool(req.stream_options.get("include_usage", True))
+
+    def _usage(self, r: _Request) -> api.Usage:
+        t_done = max((s.t_done for s in r.seqs), default=time.time())
+        n_prompt = len(r.prompt_ids)
+        n_gen = sum(len(s.generated) for s in r.seqs)
+        if r.t_first > 0.0:               # aborted-before-prefill: no rates
+            prefill_tps = round(n_prompt / max(r.prefill_s, 1e-9), 2)
+            decode_tps = round(n_gen / max(t_done - r.t_first, 1e-9), 2)
+        else:
+            prefill_tps = decode_tps = 0.0
+        return api.Usage(
             prompt_tokens=n_prompt, completion_tokens=n_gen,
             total_tokens=n_prompt + n_gen,
             extra={
-                "prefill_tokens_per_s": round(
-                    n_prompt / max(live.prefill_s, 1e-9), 2),
-                "decode_tokens_per_s": round(n_gen / decode_s, 2),
-                "e2e_latency_s": round(live.t_done - live.t_submit, 4),
-                "prefix_cached_tokens": live.cached_tokens,
+                "prefill_tokens_per_s": prefill_tps,
+                "decode_tokens_per_s": decode_tps,
+                "e2e_latency_s": round(t_done - r.t_submit, 4),
+                "prefix_cached_tokens": r.cached_tokens,
             })
-        if live.req.stream:
-            final_delta = live.text[live.emitted:]
-            live.out.put(api.ChatCompletionChunk(
-                id=live.rid, model=live.model,
-                choices=[api.ChunkChoice(
-                    delta=api.ChoiceDelta(content=final_delta),
-                    finish_reason=reason)],
-                usage=usage))
-            live.out.put(_SENTINEL)
+
+    def _finish_request(self, r: _Request):
+        """All choices done: emit the aggregate result + sentinel."""
+        req = r.req
+        if req.stream:
+            r.out.put(_SENTINEL)
         else:
-            live.out.put(api.ChatCompletionResponse(
-                id=live.rid, model=live.model,
-                choices=[api.Choice(
-                    message=api.ChatMessage("assistant", live.text),
-                    finish_reason=reason)],
-                usage=usage))
-            live.out.put(_SENTINEL)
+            choices = []
+            for s in sorted(r.seqs, key=lambda s: s.index):
+                msg = api.ChatMessage(
+                    "assistant",
+                    None if s.finish_reason == "tool_calls" else s.text,
+                    tool_calls=s.tool_calls)
+                choice = api.Choice(message=msg, index=s.index,
+                                    finish_reason=s.finish_reason)
+                if req.logprobs:
+                    choice.logprobs = api.Logprobs(content=s.logprobs)
+                choices.append(choice)
+            r.out.put(api.ChatCompletionResponse(
+                id=r.rid, model=r.model, choices=choices,
+                usage=self._usage(r)))
+            r.out.put(_SENTINEL)
+        with self._lock:
+            self._requests.pop(r.rid, None)
 
     # -- result plumbing ---------------------------------------------------
-    def _iter_chunks(self, live: _Live) -> Iterator[api.ChatCompletionChunk]:
+    def _next_item(self, r: _Request):
+        """Next queue item for a request; a clear TimeoutError naming
+        the request id when the ENGINE stalls.  Slow-but-alive decoding
+        (e.g. grammar-masked steps) keeps the wait open: we only give up
+        after ``STALL_TIMEOUT_S`` with no engine progress at all."""
         while True:
-            item = live.out.get(timeout=120)
-            if item is _SENTINEL:
-                return
-            if isinstance(item, Exception):
-                raise item
-            yield item
+            try:
+                return r.out.get(timeout=30)
+            except queue.Empty:
+                idle = time.time() - self._t_activity
+                if idle > self.STALL_TIMEOUT_S:
+                    raise TimeoutError(
+                        f"engine stalled: no output for request {r.rid} "
+                        f"and no engine progress for {idle:.0f} s") \
+                        from None
 
-    def _collect(self, live: _Live) -> api.ChatCompletionResponse:
-        item = live.out.get(timeout=120)
+    def _iter_chunks(self, r: _Request) -> Iterator[api.ChatCompletionChunk]:
+        try:
+            while True:
+                item = self._next_item(r)
+                if item is _SENTINEL:
+                    return
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            # closing the iterator mid-stream cancels the request (the
+            # worker boundary maps a closed frontend stream to this);
+            # after normal completion this is a no-op
+            self.abort(r.rid)
+
+    def _collect(self, r: _Request) -> api.ChatCompletionResponse:
+        item = self._next_item(r)
         if isinstance(item, Exception):
             raise item
-        rest = live.out.get(timeout=120)
+        rest = self._next_item(r)
         assert rest is _SENTINEL
         return item
 
@@ -429,3 +701,31 @@ class MLCEngine:
     def shutdown(self):
         self._shutdown = True
         self._wake.set()
+
+
+def _parse_tool_calls(text: str,
+                      tools: List[dict]) -> Optional[List[api.ToolCall]]:
+    """Parse generated text as tool-call JSON ``{"name", "arguments"}``
+    (or a list of them) against the declared tools; None if it isn't one."""
+    names = set()
+    for t in tools or []:
+        fn = t.get("function", t) if isinstance(t, dict) else {}
+        if fn.get("name"):
+            names.add(fn["name"])
+    try:
+        obj = json.loads(text)
+    except (TypeError, ValueError):
+        return None
+    calls = obj if isinstance(obj, list) else [obj]
+    out = []
+    for c in calls:
+        if not (isinstance(c, dict) and c.get("name") in names):
+            return None
+        args = c.get("arguments", {})
+        out.append(api.ToolCall(
+            id="call_" + uuid.uuid4().hex[:12],
+            function=api.FunctionCall(
+                name=c["name"],
+                arguments=args if isinstance(args, str)
+                else json.dumps(args))))
+    return out or None

@@ -50,6 +50,8 @@ class PageManager:
         self.seqs: Dict[int, SeqAlloc] = {}
         self.ref: Dict[int, int] = {}          # physical page -> refcount
         self._next_id = 0
+        self.n_shared = 0                      # pages adopted zero-copy
+        self.n_cow_forks = 0                   # tail pages forked CoW
         # hooks installed by the prefix cache: reclaim(n) tries to evict
         # cached pages back to the free list; evictable() reports how many
         # it could free on demand (for admission accounting).
@@ -116,6 +118,7 @@ class PageManager:
             self.ref_page(p)
             alloc.pages.append(p)
         alloc.length += n_tokens
+        self.n_shared += len(pages)
 
     def fork_page(self, seq_id: int, n_tokens: int) -> int:
         """Copy-on-write bookkeeping for a partially filled tail page:
@@ -128,6 +131,7 @@ class PageManager:
         dst = self._alloc_page()
         alloc.pages.append(dst)
         alloc.length += n_tokens
+        self.n_cow_forks += 1
         return dst
 
     # -- growth ---------------------------------------------------------
@@ -175,4 +179,6 @@ class PageManager:
     def stats(self) -> dict:
         return {"free_pages": len(self.free_pages),
                 "used_pages": self.num_pages - len(self.free_pages),
-                "active_seqs": len(self.seqs)}
+                "active_seqs": len(self.seqs),
+                "shared_pages": self.n_shared,
+                "cow_forks": self.n_cow_forks}

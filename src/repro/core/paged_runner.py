@@ -59,6 +59,8 @@ class PagedModelRunner:
                              else None)
         self.seq_tokens: Dict[int, List[int]] = {}   # tokens whose KV is paged
         self.last_prefill_info: Dict[str, int] = {"prefix_cached_tokens": 0}
+        self.n_prefills = 0               # prompt prefills (not forks)
+        self.n_forks = 0                  # CoW sequence forks
         if params is None:
             params = init_params(model.params_def(cfg),
                                  jax.random.PRNGKey(seed))
@@ -143,6 +145,7 @@ class PagedModelRunner:
         is computed — densely when the whole prompt is cold, via the
         paged decode step otherwise.  Returns seq_id."""
         prompt_ids = [int(t) for t in prompt_ids]
+        self.n_prefills += 1
         alloc = self.pm.new_seq()
         sid = alloc.seq_id
         cached = 0
@@ -178,6 +181,33 @@ class PagedModelRunner:
             self.free(sid)
             raise
         self.seq_tokens[sid] = list(prompt_ids)
+        return sid
+
+    def fork_seq(self, src_sid: int) -> int:
+        """Copy-on-write fork of a live sequence: the new sequence shares
+        every *full* page of the source in place (+1 refcount, zero data
+        movement) and gets a private copy of the partially filled tail
+        page only.  This is what makes ``n``-way sampling nearly free on
+        the paged backend — one shared prompt prefill, then n forked
+        decode streams.  Returns the new seq_id."""
+        src = self.pm.seqs[src_sid]
+        alloc = self.pm.new_seq()
+        sid = alloc.seq_id
+        n_full = src.length // self.page_size
+        tail = src.length - n_full * self.page_size
+        try:
+            if n_full:
+                self.pm.share_pages(sid, src.pages[:n_full],
+                                    n_full * self.page_size)
+            if tail:
+                dst = self.pm.fork_page(sid, tail)
+                self._copy_page(src.pages[n_full], dst)
+        except Exception:
+            self.pm.free_seq(sid)
+            raise
+        self.seq_tokens[sid] = list(
+            self.seq_tokens.get(src_sid, ()))[:src.length]
+        self.n_forks += 1
         return sid
 
     def _copy_page(self, src: int, dst: int):
@@ -277,7 +307,9 @@ class PagedModelRunner:
         self.pm.free_seq(seq_id)
 
     def stats(self) -> dict:
-        out = {"pages": self.pm.stats()}
+        out = {"pages": self.pm.stats(),
+               "prefills": self.n_prefills,
+               "forks": self.n_forks}
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out
@@ -324,6 +356,14 @@ class PagedEngineBackend:
         sid = self.runner.prefill_seq(prompt_ids)
         self._slot_seq[slot] = sid
         return self.runner.last_prefill_logits()
+
+    def fork_slot(self, src_slot: int, dst_slot: int):
+        """CoW-fork ``src_slot``'s sequence into ``dst_slot`` (shared
+        prompt KV, private tail) — the n-way sampling fast path."""
+        assert dst_slot not in self._slot_seq, \
+            f"slot {dst_slot} already bound"
+        self._slot_seq[dst_slot] = self.runner.fork_seq(
+            self._slot_seq[src_slot])
 
     def decode(self, tokens_by_slot: Dict[int, int],
                pos_by_slot: Dict[int, int]) -> Dict[int, np.ndarray]:

@@ -1,16 +1,20 @@
 """Continuous-batching scheduler: FCFS admission into a fixed set of
 decode slots, with page accounting and preemption.
 
-The dense backend reserves ``max_context`` per slot up front (slots are
-the unit of admission); the paged backend admits as long as the page pool
-can cover the prompt and preempts the newest sequence when an append
-fails mid-decode (its request is re-queued, WebLLM-style graceful
-degradation rather than a crash).
+Admission is in units of *sequences*: a multi-choice request (``n > 1``)
+admits all of its choice sequences or none of them, so siblings always
+decode together.  The dense backend reserves ``max_context`` per slot up
+front; the paged backend admits as long as the page pool can cover the
+prompt plus per-sibling copy-on-write tail forks, and preempts when an
+append fails mid-decode.  Preemption evicts a whole *group* (every slot
+admitted under the same request), so sibling choices stay consistent —
+the request is re-queued at the front, WebLLM-style graceful degradation
+rather than a crash.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.paged_cache import OutOfPages, PageManager
 
@@ -22,59 +26,93 @@ class Scheduler:
         self.max_context = max_context
         self.pm = page_manager
         self.waiting: Deque = deque()
-        self.running: Dict[int, object] = {}       # slot -> request state
+        self.running: Dict[int, object] = {}       # slot -> sequence state
         self.free_slots: List[int] = list(range(max_slots))
         self._admit_seq = 0
         self._admitted_at: Dict[int, int] = {}     # slot -> admission order
+        self._group_of: Dict[int, object] = {}     # slot -> owning request
 
     def enqueue(self, item):
         self.waiting.append(item)
 
-    def can_admit(self, prompt_len: int) -> bool:
-        if not self.free_slots or not self.waiting:
+    def _prompt_pages(self, prompt_len: int, n: int, shared: bool) -> int:
+        """Pages a choice set's prompts occupy.  ``shared``: one prompt
+        prefill CoW-forked into the siblings (a tail fork page each);
+        otherwise (resumed, diverged choices — or the dense fallback's
+        accounting) every sequence holds its own full copy."""
+        per_seq = -(-prompt_len // self.pm.page_size)
+        if shared:
+            return per_seq + (n - 1)
+        return per_seq * n
+
+    def can_admit(self, prompt_len: int, n: int = 1,
+                  shared: bool = True) -> bool:
+        """Room for ``n`` sequences of (at most) ``prompt_len`` tokens —
+        all-or-nothing for a request's whole choice set."""
+        if len(self.free_slots) < n or not self.waiting:
             return False
         if self.pm is not None:
-            # decode-growth headroom: one page for this request plus one
-            # per already-running sequence, so admission is strictly
-            # harder than the next decode step (avoids preempt/readmit
-            # thrash).  Prefix-cache-evictable pages count as available;
-            # eviction happens lazily on allocation.
-            pages_needed = (-(-prompt_len // self.pm.page_size)
-                            + 1 + len(self.running))
+            # prompt pages plus decode-growth headroom: one page for each
+            # new sequence and one per already-running sequence, so
+            # admission is strictly harder than the next decode step
+            # (avoids preempt/readmit thrash).  Prefix-cache-evictable
+            # pages count as available; eviction happens lazily on
+            # allocation.
+            pages_needed = (self._prompt_pages(prompt_len, n, shared)
+                            + n + len(self.running))
             return self.pm.available_pages >= pages_needed
         return True
 
-    def fits_ever(self, prompt_len: int) -> bool:
+    def fits_ever(self, prompt_len: int, n: int = 1,
+                  shared: bool = True) -> bool:
         """False iff the request could not run even with the whole page
-        pool to itself (prefill + one decode-growth page) — admitting it
-        anyway would preempt/re-prefill forever."""
+        pool to itself (prompt copies + one decode-growth page each) —
+        admitting it anyway would preempt/re-prefill forever."""
+        if n > self.max_slots:
+            return False
         if self.pm is None:
             return True
-        return (-(-prompt_len // self.pm.page_size) + 1
+        return (self._prompt_pages(prompt_len, n, shared) + n
                 <= self.pm.num_pages)
 
-    def admit(self, item) -> int:
+    def admit(self, item, group=None) -> int:
+        """Bind one sequence to a slot.  ``group`` ties sibling choices
+        of one request together for preemption; it defaults to the item
+        itself (single-sequence requests)."""
         slot = self.free_slots.pop()
         self.running[slot] = item
         self._admit_seq += 1
         self._admitted_at[slot] = self._admit_seq
+        self._group_of[slot] = group if group is not None else item
         return slot
 
     def release(self, slot: int):
         self.running.pop(slot, None)
         self._admitted_at.pop(slot, None)
+        self._group_of.pop(slot, None)
         self.free_slots.append(slot)
 
-    def preempt_newest(self):
-        """Kick the most recently admitted sequence back to the queue."""
+    def preempt_newest(self) -> Tuple[object, List[Tuple[int, object]]]:
+        """Kick the most recently admitted *group* back to the queue.
+
+        Every slot admitted under the same group is released together so
+        sibling choices stay consistent.  Returns ``(group, released)``
+        where ``released`` is the ``(slot, item)`` list the caller must
+        free runner-side."""
         if not self.running:
             raise OutOfPages("nothing to preempt")
-        slot = max(self.running, key=lambda s: self._admitted_at[s])
-        item = self.running.pop(slot)
-        self._admitted_at.pop(slot, None)
-        self.free_slots.append(slot)
-        self.waiting.appendleft(item)
-        return slot, item
+        newest = max(self.running, key=lambda s: self._admitted_at[s])
+        group = self._group_of[newest]
+        released: List[Tuple[int, object]] = []
+        for slot in sorted(s for s in list(self.running)
+                           if self._group_of.get(s) is group):
+            item = self.running.pop(slot)
+            self._admitted_at.pop(slot, None)
+            self._group_of.pop(slot, None)
+            self.free_slots.append(slot)
+            released.append((slot, item))
+        self.waiting.appendleft(group)
+        return group, released
 
     @property
     def active_slots(self) -> List[int]:

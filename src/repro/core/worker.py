@@ -5,6 +5,9 @@ worker and exchanging ONLY OpenAI-style JSON messages over postMessage.
 Here the backend engine runs in a worker thread; the frontend handle
 serializes every request to a JSON string, the backend replies with JSON
 chunks — nothing else crosses the boundary (asserted in tests).
+Cancellation crosses it too: closing a frontend stream iterator posts an
+``{"kind": "abort"}`` message, so a browser tab's "stop generating"
+actually frees the backend's decode slots and KV pages.
 """
 from __future__ import annotations
 
@@ -26,12 +29,28 @@ class _MessagePort:
         self.to_client: "queue.Queue[str]" = queue.Queue()
 
 
+def _get(q: "queue.Queue[dict]", mid: str, what: str) -> dict:
+    """Frontend-side wait.  Longer than the backend's own stall window
+    (MLCEngine.STALL_TIMEOUT_S = 300 s): a genuinely stalled backend
+    reports itself through an {"kind": "error"} message first, so a slow
+    grammar-constrained generation that streams no chunks for minutes is
+    not killed — and a dead worker still surfaces a clear error instead
+    of a bare queue.Empty."""
+    try:
+        return q.get(timeout=600)
+    except queue.Empty:
+        raise TimeoutError(
+            f"worker unresponsive: no {what} for message {mid} "
+            "within 600 s") from None
+
+
 class BackendWorker:
     """Owns the real MLCEngine; speaks only JSON over the port."""
 
     def __init__(self, port: _MessagePort, engine: Optional[MLCEngine] = None):
         self.port = port
         self.engine = engine or MLCEngine()
+        self._rids: Dict[str, str] = {}     # message id -> engine request id
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -44,28 +63,44 @@ class BackendWorker:
                 self.engine.shutdown()
                 return
             if kind == "chat_completion":
+                # register the request id HERE, not in the spawned
+                # thread: an abort arriving right behind the request must
+                # find the mapping (messages are handled in port order)
+                self._rids[msg["id"]] = api.new_request_id()
                 threading.Thread(
                     target=self._run_completion, args=(msg,),
                     daemon=True).start()
+            elif kind == "abort":
+                # the frontend closed its stream iterator ("stop
+                # generating"): cancel the engine request so its slots
+                # and KV pages are actually freed
+                rid = self._rids.get(msg.get("id"))
+                if rid is not None:
+                    self.engine.abort(rid)
             elif kind == "ping":
                 self._post({"kind": "pong", "id": msg.get("id")})
 
     def _run_completion(self, msg: dict):
         mid = msg["id"]
+        rid = self._rids.get(mid) or api.new_request_id()
         try:
             req = api.ChatCompletionRequest.from_dict(msg["request"])
             if req.stream:
-                for chunk in self.engine.chat_completions_create(req):
+                for chunk in self.engine.chat_completions_create(
+                        req, request_id=rid):
                     self._post({"kind": "chunk", "id": mid,
                                 "data": chunk.to_dict()})
                 self._post({"kind": "done", "id": mid})
             else:
-                resp = self.engine.chat_completions_create(req)
+                resp = self.engine.chat_completions_create(
+                    req, request_id=rid)
                 self._post({"kind": "response", "id": mid,
                             "data": resp.to_dict()})
                 self._post({"kind": "done", "id": mid})
         except Exception as e:                      # surfaced to frontend
             self._post({"kind": "error", "id": mid, "message": str(e)})
+        finally:
+            self._rids.pop(mid, None)
 
     def _post(self, obj: dict):
         self.port.to_client.put(json.dumps(obj))
@@ -109,11 +144,11 @@ class ServiceWorkerMLCEngine:
         if request.get("stream"):
             return self._stream(mid, q)
         try:
-            msg = q.get(timeout=180)
+            msg = _get(q, mid, "response")
             if msg["kind"] == "error":
                 # no trailing "done" follows an error — just surface it
                 raise RuntimeError(msg["message"])
-            done = q.get(timeout=180)
+            done = _get(q, mid, "done marker")
             assert done["kind"] == "done"
             return api.ChatCompletionResponse.from_dict(msg["data"])
         finally:
@@ -121,15 +156,23 @@ class ServiceWorkerMLCEngine:
 
     def _stream(self, mid: str,
                 q: "queue.Queue[dict]") -> Iterator[api.ChatCompletionChunk]:
+        done = False
         try:
             while True:
-                msg = q.get(timeout=180)
+                msg = _get(q, mid, "chunk")
                 if msg["kind"] == "done":
+                    done = True
                     return
                 if msg["kind"] == "error":
+                    done = True
                     raise RuntimeError(msg["message"])
                 yield api.ChatCompletionChunk.from_dict(msg["data"])
         finally:
+            # closing the iterator mid-stream aborts the backend request
+            # (the browser "stop generating" path): slots and KV pages
+            # are freed, not just the local queue
+            if not done:
+                self._send({"kind": "abort", "id": mid})
             self._drop(mid)
 
     def _drop(self, mid: str):

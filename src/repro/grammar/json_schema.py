@@ -87,16 +87,51 @@ class _Gen:
         return name
 
 
-def schema_to_gbnf(schema: Dict) -> str:
-    g = _Gen()
-    g.emit(schema, "root")
-    rules = "\n".join(g.rules)
-    any_needed = "anyvalue" in rules
+def _assemble(rules: List[str]) -> str:
+    text = "\n".join(rules)
     base = _BASE
-    if any_needed:
+    if "anyvalue" in text:
         base += (
             'anyvalue ::= string | number | boolean | nullv | anyobj | anyarr\n'
             'anyobj ::= "{" ws ( string ws ":" ws anyvalue ws '
             '( "," ws string ws ":" ws anyvalue ws )* )? "}"\n'
             'anyarr ::= "[" ws ( anyvalue ws ( "," ws anyvalue ws )* )? "]"\n')
-    return rules + "\n" + base
+    return text + "\n" + base
+
+
+def schema_to_gbnf(schema: Dict) -> str:
+    g = _Gen()
+    g.emit(schema, "root")
+    return _assemble(g.rules)
+
+
+def tools_to_gbnf(tools: List[Dict], only: str = None) -> str:
+    """OpenAI ``tools`` declarations -> GBNF constraining decode to a
+    tool-call object ``{"name": <fn>, "arguments": {...}}`` whose
+    ``arguments`` satisfy that function's ``parameters`` JSON schema.
+
+    ``only`` restricts the alternation to one declared function (the
+    ``tool_choice={"type": "function", ...}`` path); otherwise any
+    declared tool may be called (``tool_choice="required"``)."""
+    g = _Gen()
+    alts = []
+    for t in tools or []:
+        fn = t.get("function", t) if isinstance(t, dict) else {}
+        name = fn.get("name")
+        if not name or (only is not None and name != only):
+            continue
+        args = g.emit(fn.get("parameters") or {"type": "object"},
+                      g.fresh("args"))
+        rule = g.fresh("call")
+        g.rules.append(
+            f'{rule} ::= "{{" ws {json.dumps(json.dumps("name"))} ws ":" ws '
+            f'{json.dumps(json.dumps(name))} ws "," ws '
+            f'{json.dumps(json.dumps("arguments"))} ws ":" ws '
+            f'{args} ws "}}"')
+        alts.append(rule)
+    if not alts:
+        raise ValueError(
+            f"tools_to_gbnf: no matching function declaration"
+            + (f" for {only!r}" if only else ""))
+    g.rules.append(f"root ::= {' | '.join(alts)}")
+    return _assemble(g.rules)

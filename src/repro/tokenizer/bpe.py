@@ -146,7 +146,22 @@ class ByteBPETokenizer:
     def apply_chat_template(self, messages: Sequence[dict]) -> str:
         parts = []
         for m in messages:
-            parts.append(f"<|im_start|>{m['role']}\n{m['content']}<|im_end|>")
+            content = m.get("content")
+            if content is None:
+                # assistant tool-call turns carry no text; render the
+                # calls as JSON so the model sees its own actions
+                calls = []
+                for c in m.get("tool_calls") or []:
+                    fn = (c.function if hasattr(c, "function")
+                          else (c or {}).get("function", {}))
+                    calls.append({
+                        "name": getattr(fn, "name", None)
+                        if not isinstance(fn, dict) else fn.get("name"),
+                        "arguments": getattr(fn, "arguments", None)
+                        if not isinstance(fn, dict) else fn.get("arguments"),
+                    })
+                content = json.dumps(calls) if calls else ""
+            parts.append(f"<|im_start|>{m['role']}\n{content}<|im_end|>")
         parts.append("<|im_start|>assistant\n")
         return "".join(parts)
 

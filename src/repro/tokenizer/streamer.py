@@ -1,33 +1,22 @@
 """Streaming detokenizer: emits the longest valid UTF-8 prefix as tokens
-arrive (multi-byte codepoints split across tokens stay buffered)."""
+arrive.  Incomplete multi-byte codepoints split across tokens stay
+buffered; permanently-invalid bytes are emitted as replacement chars
+immediately (they can never be repaired by future bytes, and holding
+them would starve streaming of progress chunks forever)."""
 from __future__ import annotations
 
-from typing import List, Optional
+import codecs
 
 
 class DetokStreamer:
     def __init__(self, tokenizer):
         self.tok = tokenizer
-        self.buf = b""
+        self._dec = codecs.getincrementaldecoder("utf-8")("replace")
 
     def put(self, token_id: int) -> str:
         if token_id < self.tok.n_special:
             return ""                      # specials never stream out
-        self.buf += self.tok.token_bytes(token_id)
-        return self._drain()
-
-    def _drain(self) -> str:
-        # find the longest prefix that decodes cleanly
-        for cut in range(len(self.buf), max(len(self.buf) - 4, -1), -1):
-            try:
-                text = self.buf[:cut].decode("utf-8")
-            except UnicodeDecodeError:
-                continue
-            self.buf = self.buf[cut:]
-            return text
-        return ""
+        return self._dec.decode(self.tok.token_bytes(token_id))
 
     def flush(self) -> str:
-        text = self.buf.decode("utf-8", errors="replace")
-        self.buf = b""
-        return text
+        return self._dec.decode(b"", final=True)

@@ -29,6 +29,74 @@ def test_constructor_ignores_unknown_nested_keys():
     assert req.response_format.type == "text"
 
 
+def test_chunk_from_dict_ignores_unknown_keys():
+    """Chunks cross the worker boundary too — a newer backend must not
+    crash an older frontend (chunk/choice/delta/usage all tolerant)."""
+    chunk = api.ChatCompletionChunk.from_dict({
+        "id": "chatcmpl-1", "model": "m",
+        "system_fingerprint": "fp_x",           # unknown chunk key
+        "choices": [{"index": 0,
+                     "delta": {"content": "hi", "refusal": None},
+                     "finish_reason": None,
+                     "content_filter_results": {}}],
+        "usage": {"prompt_tokens": 1, "completion_tokens": 2,
+                  "total_tokens": 3, "prompt_tokens_details": {}},
+    })
+    assert chunk.choices[0].delta.content == "hi"
+    assert chunk.usage.total_tokens == 3
+
+
+def test_response_from_dict_ignores_unknown_keys():
+    resp = api.ChatCompletionResponse.from_dict({
+        "id": "chatcmpl-2", "model": "m",
+        "system_fingerprint": "fp_y",
+        "choices": [{"index": 0,
+                     "message": {"role": "assistant", "content": "ok",
+                                 "refusal": None, "annotations": []},
+                     "finish_reason": "stop",
+                     "logprobs": {"content": [
+                         {"token": "o", "logprob": -0.1, "extra": 1,
+                          "top_logprobs": [{"token": "o", "logprob": -0.1,
+                                            "surprise": True}]}],
+                         "refusal": None}}],
+        "usage": {"prompt_tokens": 1, "completion_tokens": 1,
+                  "total_tokens": 2, "completion_tokens_details": {}},
+    })
+    assert resp.choices[0].message.content == "ok"
+    assert resp.choices[0].logprobs.content[0].token == "o"
+    assert resp.choices[0].logprobs.content[0].top_logprobs[0].logprob == -0.1
+
+
+def test_tool_call_message_roundtrip():
+    """Assistant tool-call messages (content=None) survive the wire in
+    both request and response directions."""
+    resp = api.ChatCompletionResponse.from_dict({
+        "id": "chatcmpl-3", "model": "m",
+        "choices": [{"index": 0, "finish_reason": "tool_calls",
+                     "message": {"role": "assistant", "content": None,
+                                 "tool_calls": [{
+                                     "id": "call_1", "type": "function",
+                                     "function": {"name": "f",
+                                                  "arguments": "{\"x\": 1}",
+                                                  "unknown": 0}}]}}],
+        "usage": {"prompt_tokens": 1, "completion_tokens": 1,
+                  "total_tokens": 2},
+    })
+    call = resp.choices[0].message.tool_calls[0]
+    assert call.function.name == "f"
+    # and back into a request (the agent loop echoes the message)
+    req = api.ChatCompletionRequest.from_dict({
+        "messages": [{"role": "assistant", "content": None,
+                      "tool_calls": [resp.to_dict()
+                                     ["choices"][0]["message"]
+                                     ["tool_calls"][0]]},
+                     {"role": "tool", "tool_call_id": "call_1",
+                      "content": "{\"ok\": true}"}],
+        "tools": [{"type": "function", "function": {"name": "f"}}]})
+    assert req.messages[0].tool_calls[0].function.name == "f"
+    assert req.messages[1].tool_call_id == "call_1"
+
+
 def test_known_keys_roundtrip_unchanged():
     d = {"messages": [{"role": "user", "content": "y"}],
          "model": "m", "temperature": 0.5, "stream": True}

@@ -1,0 +1,155 @@
+"""Multi-choice request lifecycle on the paged backend: n-way sampling
+over CoW-shared prompt KV, indexed streaming, logprobs, tool calls, and
+request cancellation (abort frees slots + pages)."""
+import json
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+
+TOOLS = [{
+    "type": "function",
+    "function": {
+        "name": "get_weather",
+        "description": "Current weather for a city",
+        "parameters": {
+            "type": "object",
+            "properties": {"city": {"enum": ["paris", "tokyo"]}},
+            "required": ["city"],
+        },
+    },
+}]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = MLCEngine()
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    # prefix cache off so page accounting in these tests is exact
+    eng.load_model("m", cfg, max_slots=4, max_context=128, seed=0,
+                   backend="paged", page_size=16,
+                   enable_prefix_cache=False)
+    yield eng
+    eng.shutdown()
+
+
+def _req(**kw):
+    kw.setdefault("messages", [ChatMessage("user", "hello world tell me")])
+    kw.setdefault("model", "m")
+    kw.setdefault("max_tokens", 6)
+    kw.setdefault("seed", 41)
+    kw.setdefault("temperature", 0.9)
+    return ChatCompletionRequest(**kw)
+
+
+def test_n4_one_prefill_cow_fork_and_seeded_equivalence(engine):
+    """n=4 performs exactly ONE prompt prefill (+3 CoW forks) and each
+    choice equals the matching independent seeded n=1 request."""
+    base = engine.stats("m")["runner"]
+    resp = engine.chat_completions_create(_req(n=4))
+    after = engine.stats("m")["runner"]
+    assert after["prefills"] - base["prefills"] == 1
+    assert after["forks"] - base["forks"] == 3
+    assert sorted(c.index for c in resp.choices) == [0, 1, 2, 3]
+    assert resp.usage.prompt_tokens > 0           # counted once, not 4x
+    assert resp.usage.completion_tokens <= 4 * 6
+    texts = {c.index: c.message.content for c in resp.choices}
+    for i in range(4):
+        solo = engine.chat_completions_create(_req(seed=41 + i))
+        assert solo.choices[0].message.content == texts[i], i
+
+
+def test_n_stream_indexed_interleaved(engine):
+    chunks = list(engine.chat_completions_create(_req(n=2, stream=True)))
+    finishes = {c.choices[0].index: c.choices[0].finish_reason
+                for c in chunks if c.choices and c.choices[0].finish_reason}
+    assert set(finishes) == {0, 1}
+    # both choices stream before either finishes (sibling decode steps
+    # are batched) — i.e. the per-index chunks interleave
+    first_finish = next(i for i, c in enumerate(chunks)
+                        if c.choices and c.choices[0].finish_reason)
+    seen = {c.choices[0].index for c in chunks[:first_finish] if c.choices}
+    assert seen == {0, 1}
+    assert chunks[-1].usage is not None           # aggregate, on last chunk
+    for c in chunks:
+        json.dumps(c.to_dict())
+
+
+def test_abort_mid_decode_frees_slots_and_pages(engine):
+    st0 = engine.stats("m")
+    baseline = st0["runner"]["pages"]["free_pages"]
+    it = engine.chat_completions_create(
+        _req(n=2, max_tokens=100, stream=True))
+    for _ in range(5):
+        next(it)
+    it.close()                                    # "stop generating"
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        st = engine.stats("m")
+        if (st["scheduler"]["running"] == 0
+                and st["runner"]["pages"]["free_pages"] == baseline):
+            break
+        time.sleep(0.05)
+    st = engine.stats("m")
+    assert st["scheduler"]["running"] == 0
+    assert st["scheduler"]["free_slots"] == 4
+    assert st["runner"]["pages"]["free_pages"] == baseline
+
+
+def test_tool_choice_required_yields_parseable_calls(engine):
+    resp = engine.chat_completions_create(_req(
+        max_tokens=120, temperature=0.8, seed=7,
+        tools=TOOLS, tool_choice="required"))
+    c = resp.choices[0]
+    assert c.finish_reason == "tool_calls"
+    assert c.message.content is None
+    call = c.message.tool_calls[0]
+    assert call.function.name == "get_weather"
+    args = json.loads(call.function.arguments)   # schema-constrained
+    assert args["city"] in ("paris", "tokyo")
+
+
+def test_tool_choice_named_function(engine):
+    resp = engine.chat_completions_create(_req(
+        max_tokens=120, temperature=0.8, seed=8, tools=TOOLS,
+        tool_choice={"type": "function",
+                     "function": {"name": "get_weather"}}))
+    c = resp.choices[0]
+    assert c.finish_reason == "tool_calls"
+    assert c.message.tool_calls[0].function.name == "get_weather"
+
+
+def test_logprobs(engine):
+    resp = engine.chat_completions_create(_req(
+        max_tokens=4, temperature=0.0, logprobs=True, top_logprobs=3))
+    lp = resp.choices[0].logprobs
+    assert lp is not None and len(lp.content) >= 1
+    for entry in lp.content:
+        assert entry.logprob <= 0.0
+        assert len(entry.top_logprobs) == 3
+        # greedy decode: the sampled token is the argmax
+        assert entry.logprob == max(t.logprob for t in entry.top_logprobs)
+
+
+def test_logprobs_stream(engine):
+    chunks = list(engine.chat_completions_create(_req(
+        max_tokens=4, temperature=0.0, logprobs=True, top_logprobs=2,
+        stream=True)))
+    got = [t for c in chunks if c.choices and c.choices[0].logprobs
+           for t in c.choices[0].logprobs.content]
+    assert len(got) >= 1
+    json.dumps(chunks[-1].to_dict())
+
+
+def test_stream_options_exclude_usage(engine):
+    chunks = list(engine.chat_completions_create(_req(
+        stream=True, stream_options={"include_usage": False})))
+    assert all(c.usage is None for c in chunks)
+    assert chunks[-1].choices[0].finish_reason in ("stop", "length")
+
+
+def test_n_exceeding_slots_rejected(engine):
+    with pytest.raises(ValueError):
+        engine.chat_completions_create(_req(n=5))

@@ -92,7 +92,33 @@ def test_scheduler_preemption():
         s.enqueue(x)
     s.admit(s.waiting.popleft())
     s.admit(s.waiting.popleft())
-    slot, item = s.preempt_newest()
-    assert item == "b"
+    group, released = s.preempt_newest()
+    assert group == "b"
+    assert [item for _, item in released] == ["b"]
     assert s.waiting[0] == "b"             # requeued at the FRONT
     assert len(s.free_slots) == 1
+
+
+def test_scheduler_group_preemption():
+    """Preempting one sibling of a multi-choice request evicts ALL of
+    its choice sequences together, and requeues the owning request."""
+    s = Scheduler(max_slots=4, max_context=64)
+    s.admit("x", group="reqA")
+    s.admit("z", group="reqB")
+    s.admit("y", group="reqA")             # newest slot belongs to reqA
+    group, released = s.preempt_newest()
+    assert group == "reqA"
+    assert sorted(item for _, item in released) == ["x", "y"]
+    assert list(s.running.values()) == ["z"]
+    assert s.waiting[0] == "reqA"
+    assert len(s.free_slots) == 3
+
+
+def test_scheduler_all_or_nothing_choice_set():
+    s = Scheduler(max_slots=3, max_context=64)
+    s.enqueue("req")
+    assert s.can_admit(10, n=3)
+    assert not s.can_admit(10, n=4)        # whole set or nothing
+    assert not s.fits_ever(10, n=4)
+    s.admit("a", group="req")
+    assert not s.can_admit(10, n=3)        # only 2 slots left

@@ -1,0 +1,41 @@
+"""Streaming detokenizer liveness + tool-aware chat template (runs
+without hypothesis, unlike test_tokenizer)."""
+import pytest
+
+from repro.tokenizer import ByteBPETokenizer, DetokStreamer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return ByteBPETokenizer.train(
+        ["hello world the quick brown fox", '{"json": [1, true, "x"]}'] * 3,
+        vocab_size=400)
+
+
+def test_streamer_flushes_invalid_head_bytes(tok):
+    """A permanently-invalid UTF-8 head byte must not buffer forever —
+    that would starve streaming of progress chunks for the rest of the
+    generation (the bytes behind it can be perfectly valid)."""
+    ids = [tok.n_special + b for b in b"\x94abcdef"]
+    st = DetokStreamer(tok)
+    out = "".join(st.put(i) for i in ids) + st.flush()
+    assert out == "�abcdef"
+
+
+def test_streamer_keeps_incomplete_tail_buffered(tok):
+    """Incomplete (but repairable) multi-byte sequences still wait."""
+    data = "é".encode()                 # 2-byte sequence, split
+    st = DetokStreamer(tok)
+    assert st.put(tok.n_special + data[0]) == ""
+    assert st.put(tok.n_special + data[1]) == "é"
+
+
+def test_chat_template_tool_turns(tok):
+    p = tok.apply_chat_template([
+        {"role": "user", "content": "hi"},
+        {"role": "assistant", "content": None,
+         "tool_calls": [{"function": {"name": "f", "arguments": "{}"}}]},
+        {"role": "tool", "content": "42", "tool_call_id": "call_x"}])
+    assert '"name": "f"' in p
+    assert "<|im_start|>tool\n42<|im_end|>" in p
+    assert p.endswith("<|im_start|>assistant\n")

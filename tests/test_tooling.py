@@ -1,0 +1,23 @@
+"""Tier-1 tree hygiene + example smoke: scripts/check_tree.sh (no
+tracked bytecode, src compiles) and the tool-calling agent-loop example
+run end to end."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_check_tree():
+    subprocess.run(["bash", str(ROOT / "scripts" / "check_tree.sh")],
+                   check=True, cwd=ROOT, timeout=300)
+
+
+def test_tool_calling_example_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    subprocess.run([sys.executable,
+                    str(ROOT / "examples" / "tool_calling.py")],
+                   check=True, cwd=ROOT, env=env, timeout=580)

@@ -1,0 +1,107 @@
+"""Worker JSON boundary with the multi-choice lifecycle fields: n>1
+streamed chunks (distinct indexes interleaved), tool-call responses,
+abort mid-stream, and seeded determinism of n choices — everything
+crossing the port as JSON strings only."""
+import json
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ChatCompletionRequest, ChatMessage, MLCEngine,
+                        ServiceWorkerMLCEngine)
+
+TOOLS = [{
+    "type": "function",
+    "function": {
+        "name": "lookup",
+        "description": "Look up a key",
+        "parameters": {
+            "type": "object",
+            "properties": {"key": {"enum": ["a", "b"]}},
+            "required": ["key"],
+        },
+    },
+}]
+
+
+@pytest.fixture(scope="module")
+def stack():
+    backend = MLCEngine()
+    backend.load_model("m", get_config("llama-3.1-8b", reduced=True),
+                       max_slots=2, max_context=96, seed=0)
+    front = ServiceWorkerMLCEngine(backend)
+    yield front, backend
+    front.shutdown()
+
+
+def _req(**kw):
+    kw.setdefault("messages", [ChatMessage("user", "hello")])
+    kw.setdefault("model", "m")
+    kw.setdefault("max_tokens", 5)
+    kw.setdefault("seed", 3)
+    kw.setdefault("temperature", 0.9)
+    return ChatCompletionRequest(**kw)
+
+
+def test_n2_stream_roundtrip_distinct_indexes(stack):
+    front, _ = stack
+    seen = []
+    orig_put = front.port.to_worker.put
+    front.port.to_worker.put = lambda s: (seen.append(s), orig_put(s))
+    try:
+        chunks = list(front.chat_completions_create(
+            _req(n=2, stream=True)))
+    finally:
+        front.port.to_worker.put = orig_put
+    for raw in seen:                      # JSON-only boundary holds
+        assert isinstance(raw, str)
+        json.loads(raw)
+    idx = [c.choices[0].index for c in chunks if c.choices]
+    assert set(idx) == {0, 1}
+    # interleaved: index 1 appears before the last index-0 chunk
+    assert idx.index(1) < max(i for i, v in enumerate(idx) if v == 0)
+    finishes = {c.choices[0].index for c in chunks
+                if c.choices and c.choices[0].finish_reason}
+    assert finishes == {0, 1}
+    assert chunks[-1].usage is not None
+
+
+def test_tool_call_response_roundtrip(stack):
+    front, _ = stack
+    resp = front.chat_completions_create(_req(
+        max_tokens=100, temperature=0.8, seed=11,
+        tools=TOOLS, tool_choice="required"))
+    c = resp.choices[0]
+    assert c.finish_reason == "tool_calls"
+    call = c.message.tool_calls[0]        # survived JSON reconstruction
+    assert call.function.name == "lookup"
+    assert json.loads(call.function.arguments)["key"] in ("a", "b")
+    assert call.id.startswith("call_")
+
+
+def test_abort_mid_stream_frees_backend_slots(stack):
+    front, backend = stack
+    it = front.chat_completions_create(_req(max_tokens=200, stream=True))
+    for _ in range(3):
+        next(it)
+    it.close()    # posts {"kind": "abort"} over the port
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        st = backend.stats("m")["scheduler"]
+        if st["running"] == 0 and st["free_slots"] == 2:
+            break
+        time.sleep(0.05)
+    st = backend.stats("m")["scheduler"]
+    assert st["running"] == 0
+    assert st["free_slots"] == 2
+
+
+def test_seeded_determinism_of_n_choices(stack):
+    front, _ = stack
+    a = front.chat_completions_create(_req(n=2, seed=21))
+    b = front.chat_completions_create(_req(n=2, seed=21))
+    ta = {c.index: c.message.content for c in a.choices}
+    tb = {c.index: c.message.content for c in b.choices}
+    assert ta == tb
+    assert sorted(ta) == [0, 1]
