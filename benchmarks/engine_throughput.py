@@ -1,24 +1,36 @@
-"""Continuous-batching scaling: aggregate decode tok/s vs concurrency —
-the engine-level behaviour behind the paper's throughput claims."""
+"""Continuous-batching engine behaviour behind the paper's claims.
+
+Two reports:
+
+* aggregate decode tok/s vs concurrency (throughput scaling), and
+* TTFT + inter-token latency p50/p95 under MIXED traffic on the paged
+  backend — short decode streams running while a long cold prompt
+  prefills chunk by chunk under the step token budget.  Chunked prefill
+  is exactly what keeps the ITL percentiles flat here: the long prompt
+  admits once and interleaves with the running decoders instead of
+  head-of-line blocking them.
+"""
 from __future__ import annotations
 
 import threading
 import time
 
+import numpy as np
+
 from repro.configs import get_config
 from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
 
 
-def run() -> list:
+def _throughput_rows(smoke: bool) -> list:
     rows = []
     cfg = get_config("llama-3.1-8b", reduced=True)
-    for conc in (1, 2, 4):
+    for conc in (1,) if smoke else (1, 2, 4):
         eng = MLCEngine()
         eng.load_model("m", cfg, max_slots=conc, max_context=128)
         # warmup compile
         eng.chat_completions_create(ChatCompletionRequest(
             messages=[ChatMessage("user", "w")], model="m", max_tokens=2))
-        n_req, n_tok = 2 * conc, 24
+        n_req, n_tok = (conc, 6) if smoke else (2 * conc, 24)
         done = []
 
         def go(i):
@@ -40,6 +52,83 @@ def run() -> list:
                      f"{total/wall:.1f}tok/s_aggregate"))
         eng.shutdown()
     return rows
+
+
+def _latency_rows(smoke: bool) -> list:
+    """TTFT and ITL percentiles for decode streams sharing the engine
+    with a long cold prefill (the mixed-traffic scenario)."""
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    eng = MLCEngine()
+    chunk = 4 if smoke else 8
+    eng.load_model("m", cfg, max_slots=3, max_context=192,
+                   backend="paged", page_size=8,
+                   prefill_chunk_size=chunk, token_budget=3 + chunk)
+    # warmup: compile chunked prefill + decode paths
+    eng.chat_completions_create(ChatCompletionRequest(
+        messages=[ChatMessage("user", "warm up the step functions")],
+        model="m", max_tokens=3, temperature=0.0))
+
+    n_streams = 1 if smoke else 2
+    stream_toks = 8 if smoke else 32
+    long_words = 30 if smoke else 120    # >= 8 prefill chunks when cold
+    ttfts, itls = [], []
+
+    def stream(i):
+        t0 = time.perf_counter()
+        it = eng.chat_completions_create(ChatCompletionRequest(
+            messages=[ChatMessage("user", f"short chat message {i}")],
+            model="m", max_tokens=stream_toks, seed=i, stream=True))
+        last = None
+        for c in it:
+            now = time.perf_counter()
+            if c.choices and c.choices[0].delta.content:
+                if last is None:
+                    ttfts.append(now - t0)
+                else:
+                    itls.append(now - last)
+                last = now
+
+    def long_prompt():
+        t0 = time.perf_counter()
+        it = eng.chat_completions_create(ChatCompletionRequest(
+            messages=[ChatMessage(
+                "user", " ".join(f"word{j}" for j in range(long_words)))],
+            model="m", max_tokens=4, seed=99, stream=True))
+        for c in it:
+            if c.choices and c.choices[0].delta.content:
+                ttfts.append(time.perf_counter() - t0)
+                break
+        for _ in it:
+            pass
+
+    ts = [threading.Thread(target=stream, args=(i,))
+          for i in range(n_streams)]
+    for t in ts:
+        t.start()
+    time.sleep(0.1)                      # streams admit first
+    tl = threading.Thread(target=long_prompt)
+    tl.start()
+    for t in ts + [tl]:
+        t.join()
+    eng.shutdown()
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    return [
+        ("engine/mixed_ttft_p50", round(pct(ttfts, 50) * 1e6, 1),
+         f"{pct(ttfts, 50)*1e3:.1f}ms"),
+        ("engine/mixed_ttft_p95", round(pct(ttfts, 95) * 1e6, 1),
+         f"{pct(ttfts, 95)*1e3:.1f}ms"),
+        ("engine/mixed_itl_p50", round(pct(itls, 50) * 1e6, 1),
+         f"{pct(itls, 50)*1e3:.1f}ms"),
+        ("engine/mixed_itl_p95", round(pct(itls, 95) * 1e6, 1),
+         f"{pct(itls, 95)*1e3:.1f}ms_n={len(itls)}"),
+    ]
+
+
+def run(smoke: bool = False) -> list:
+    return _throughput_rows(smoke) + _latency_rows(smoke)
 
 
 if __name__ == "__main__":

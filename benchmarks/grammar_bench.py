@@ -13,10 +13,10 @@ from repro.grammar.gbnf import JSON_GBNF
 from repro.tokenizer import ByteBPETokenizer
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     g = parse_gbnf(JSON_GBNF)
-    for vocab in (300, 600, 1200):
+    for vocab in (300,) if smoke else (300, 600, 1200):
         tok = ByteBPETokenizer.train(
             ['{"key": [1, 2.5, true], "s": "text value here"} '] * 4 +
             ["the quick brown fox jumps over the lazy dog "] * 4,
@@ -24,7 +24,7 @@ def run() -> list:
         m = GrammarMatcher(g, tok)
         m.accept_bytes(b'{"nested": {"arr": [1, 2, {"deep": ')
         t0 = time.perf_counter()
-        iters = 20
+        iters = 3 if smoke else 20
         for _ in range(iters):
             mask = m.token_mask()
         us = (time.perf_counter() - t0) / iters * 1e6

@@ -26,51 +26,64 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6      # us
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     key = jax.random.PRNGKey(0)
     rows = []
+    iters = 2 if smoke else 5
 
     # flash attention (prefill class)
-    B, S, H, Kv, D = 1, 1024, 8, 2, 64
+    B, S, H, Kv, D = (1, 128, 4, 2, 32) if smoke else (1, 1024, 8, 2, 64)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32).astype(jnp.bfloat16)
     k = jax.random.normal(ks[1], (B, S, Kv, D), jnp.float32).astype(jnp.bfloat16)
     v = jax.random.normal(ks[2], (B, S, Kv, D), jnp.float32).astype(jnp.bfloat16)
     f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
-    us = _time(f, q, k, v)
+    us = _time(f, q, k, v, iters=iters)
     flops = 2 * 2 * B * H * S * S / 2 * D
-    rows.append(("kernel/flash_attention_1k", us,
+    rows.append((f"kernel/flash_attention_{S}", us,
                  f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
 
     # paged attention (decode class)
-    P_, psz, pps = 128, 16, 16
+    P_, psz, pps = (32, 8, 8) if smoke else (128, 16, 16)
     q2 = jax.random.normal(ks[0], (8, H, D), jnp.float32).astype(jnp.bfloat16)
     kp = jax.random.normal(ks[1], (P_, psz, Kv, D), jnp.float32).astype(jnp.bfloat16)
     vp = jax.random.normal(ks[2], (P_, psz, Kv, D), jnp.float32).astype(jnp.bfloat16)
     pt = jax.random.randint(key, (8, pps), 0, P_)
     lens = jnp.full((8,), pps * psz, jnp.int32)
     f2 = jax.jit(lambda *a: ref.paged_attention_ref(*a))
-    us = _time(f2, q2, kp, vp, pt, lens)
+    us = _time(f2, q2, kp, vp, pt, lens, iters=iters)
     byts = 2 * 8 * pps * psz * Kv * D * 2
-    rows.append(("kernel/paged_attention_256ctx", us,
+    rows.append((f"kernel/paged_attention_{pps*psz}ctx", us,
                  f"{byts/us/1e3:.2f}GB/s(xla-cpu)"))
 
+    # chunked paged prefill (multi-token prefill class)
+    C = 8 if smoke else 16
+    qc = jax.random.normal(ks[0], (C, H, D), jnp.float32).astype(jnp.bfloat16)
+    pt1 = jax.random.randint(key, (pps,), 0, P_)
+    f2b = jax.jit(lambda *a: ref.paged_prefill_attention_ref(
+        *a, pps * psz, pps * psz - C))
+    us = _time(f2b, qc, kp, vp, pt1, iters=iters)
+    flops = 2 * 2 * C * H * pps * psz * D
+    rows.append((f"kernel/paged_prefill_chunk{C}", us,
+                 f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
+
     # w4a16 gemm (quantized matmul class)
-    M, K, N = 128, 2048, 2048
+    M, K, N = (32, 256, 256) if smoke else (128, 2048, 2048)
     x = (jax.random.normal(ks[0], (M, K), jnp.float32) * 0.1).astype(jnp.bfloat16)
     w = (jax.random.normal(ks[1], (K, N), jnp.float32) * 0.05).astype(jnp.bfloat16)
     qt = quantize_array(w, 64)
     f3 = jax.jit(lambda x, d, s: ref.w4a16_gemm_ref(x, d, s, 64))
-    us = _time(f3, x, qt.data, qt.scales)
-    rows.append(("kernel/w4a16_gemm_128x2kx2k", us,
+    us = _time(f3, x, qt.data, qt.scales, iters=iters)
+    rows.append((f"kernel/w4a16_gemm_{M}x{K}x{N}", us,
                  f"{2*M*K*N/us/1e3:.1f}GFLOP/s(xla-cpu)"))
 
     # rmsnorm (fusion class)
-    xn = jax.random.normal(key, (8, 512, 1024), jnp.float32).astype(jnp.bfloat16)
-    s = jnp.ones((1024,), jnp.float32)
+    R = (2, 64, 256) if smoke else (8, 512, 1024)
+    xn = jax.random.normal(key, R, jnp.float32).astype(jnp.bfloat16)
+    s = jnp.ones((R[-1],), jnp.float32)
     f4 = jax.jit(lambda x, s: ref.rmsnorm_ref(x, s))
-    us = _time(f4, xn, s)
-    rows.append(("kernel/rmsnorm_8x512x1024", us,
+    us = _time(f4, xn, s, iters=iters)
+    rows.append((f"kernel/rmsnorm_{R[0]}x{R[1]}x{R[2]}", us,
                  f"{2*xn.size*2/us/1e3:.2f}GB/s(xla-cpu)"))
     return rows
 

@@ -22,24 +22,26 @@ def _prefill_time(pr, toks) -> tuple:
     return sid, dt
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
     cfg = get_config("llama-3.1-8b", reduced=True)
+    prefix_len, decode_len = (24, 4) if smoke else (PREFIX_LEN, DECODE_LEN)
     pr = PagedModelRunner(cfg, num_pages=64, page_size=16, max_slots=4,
-                          pages_per_seq=8, seed=0)
-    prefix = [2 + (i % 200) for i in range(PREFIX_LEN)]
+                          pages_per_seq=8, seed=0,
+                          chunk_size=8 if smoke else 16)
+    prefix = [2 + (i % 200) for i in range(prefix_len)]
     turn2 = prefix + [300 + i for i in range(SUFFIX_LEN)]
 
-    # warm up both compile paths (dense prefill at this length + decode)
+    # warm up both compile paths (chunked prefill + decode)
     w = pr.prefill_seq(turn2)
     for t in range(4):
         pr.decode({w: 5 + t})
     pr.free(w)
 
-    # -- cold: full dense prefill of the turn-2 prompt ------------------
+    # -- cold: full chunked prefill of the turn-2 prompt ----------------
     sid, cold_s = _prefill_time(pr, turn2)
     t0 = time.perf_counter()
-    for t in range(DECODE_LEN):
+    for t in range(decode_len):
         pr.decode({sid: 7 + t})
     cold_decode_s = time.perf_counter() - t0
     pr.free(sid)
@@ -54,7 +56,7 @@ def run() -> list:
     sid, warm_s = _prefill_time(pr, turn2)
     cached = pr.last_prefill_info["prefix_cached_tokens"]
     t0 = time.perf_counter()
-    for t in range(DECODE_LEN):
+    for t in range(decode_len):
         pr.decode({sid: 7 + t})
     warm_decode_s = time.perf_counter() - t0
     pr.free(sid)
@@ -66,9 +68,9 @@ def run() -> list:
                  round(warm_s * 1e6, 1),
                  f"{cold_s/warm_s:.2f}x_vs_cold"))
     rows.append(("prefix_cache/turn2_aggregate",
-                 round(warm_total * 1e6 / (len(turn2) + DECODE_LEN), 1),
-                 f"{(len(turn2)+DECODE_LEN)/warm_total:.1f}tok/s_cached_vs_"
-                 f"{(len(turn2)+DECODE_LEN)/cold_total:.1f}tok/s_cold"))
+                 round(warm_total * 1e6 / (len(turn2) + decode_len), 1),
+                 f"{(len(turn2)+decode_len)/warm_total:.1f}tok/s_cached_vs_"
+                 f"{(len(turn2)+decode_len)/cold_total:.1f}tok/s_cold"))
     return rows
 
 

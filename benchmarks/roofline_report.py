@@ -9,7 +9,8 @@ from __future__ import annotations
 from pathlib import Path
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    del smoke                       # already seconds-scale: same both ways
     from repro.launch.roofline import table
     d = "benchmarks/dryrun_results"
     if not Path(d).exists():

@@ -1,11 +1,18 @@
 """Benchmark registry — one module per paper table/figure + framework
 benches.  Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1]
+    PYTHONPATH=src python -m benchmarks.run [--only table1] [--smoke]
+
+``--smoke`` runs every module that supports it in a seconds-scale
+configuration (tiny shapes, few steps) — wired into tier-1 via
+``tests/test_tooling.py`` so benchmark scripts can't silently bit-rot.
+Modules whose ``run()`` doesn't take a ``smoke`` kwarg are reported as
+``SKIP`` in smoke mode rather than silently dropped.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -14,11 +21,11 @@ REGISTRY = [
     ("benchmarks.table1_retention",
      "paper Table 1: engine-vs-native decode throughput retention"),
     ("benchmarks.engine_throughput",
-     "continuous batching: aggregate tok/s vs concurrency"),
+     "continuous batching: aggregate tok/s vs concurrency + TTFT/ITL"),
     ("benchmarks.grammar_bench",
      "structured generation: per-step token-mask latency"),
     ("benchmarks.kernel_bench",
-     "kernel classes: flash/paged attention, w4a16 gemm, rmsnorm"),
+     "kernel classes: flash/paged/chunked-prefill attention, w4a16, rmsnorm"),
     ("benchmarks.prefix_cache_bench",
      "radix prefix cache: turn-2 prefill latency + tok/s, cached vs cold"),
     ("benchmarks.roofline_report",
@@ -29,6 +36,8 @@ REGISTRY = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs / few steps; CI bit-rot guard")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -38,7 +47,13 @@ def main() -> None:
             continue
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            for row in mod.run():
+            kwargs = {}
+            if args.smoke:
+                if "smoke" not in inspect.signature(mod.run).parameters:
+                    print(f"{mod_name},SKIP,no-smoke-mode", flush=True)
+                    continue
+                kwargs["smoke"] = True
+            for row in mod.run(**kwargs):
                 print(",".join(str(x) for x in row), flush=True)
         except Exception:
             failures += 1

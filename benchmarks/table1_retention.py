@@ -83,12 +83,13 @@ def engine_decode_toks_per_s(cfg, seed=0, n_tokens=N_TOKENS) -> float:
     return best
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
-    for name in MODELS:
+    n_tokens = 4 if smoke else N_TOKENS
+    for name in MODELS[:1] if smoke else MODELS:
         cfg = get_config(name, reduced=True)
-        native = native_decode_toks_per_s(cfg)
-        engine = engine_decode_toks_per_s(cfg)
+        native = native_decode_toks_per_s(cfg, n_tokens=n_tokens)
+        engine = engine_decode_toks_per_s(cfg, n_tokens=n_tokens)
         retained = engine / native
         rows.append((f"table1_retention/{name}",
                      1e6 / engine,

@@ -1,20 +1,31 @@
 """MLCEngine — the backend inference engine (WebLLM §2.1/§2.2).
 
-Continuous-batching loop over dense decode slots, OpenAI-style streaming
-chat completions, structured generation via the grammar engine,
-multi-model support, and usage stats (incl. decode tok/s — the paper's
-Table-1 metric).
+Token-budget continuous batching: every engine step executes ONE
+``Scheduler.plan_step`` — a mixed plan of decode tokens (one per running
+sequence) plus chunked prefill work filling the rest of the per-step
+token budget.  On the paged backend a prompt never prefills
+monolithically: a sequence in the PREFILLING state carries a chunk
+cursor (``_Seq.prefill_ids``/``prefill_pos``) and streams through
+``prefill_chunk`` across as many steps as the budget allows, so a long
+cold prompt admits once and then interleaves with running decoders
+instead of head-of-line blocking them — TTFT of everything else stays
+proportional to budget share, not to the newcomer's prompt length.
+Admission is prefix-cache-aware (cheapest uncached suffix first) and no
+longer limited to one request per step.  Preemption mid-prefill
+publishes the cursor's completed chunks to the prefix cache, so the
+re-queued request resumes from where it stopped.
 
 Request lifecycle: one request owns ``n`` independent choice sequences
 (:class:`_Request` -> ``n`` x :class:`_Seq`).  On the paged backend the
-prompt is prefilled ONCE and its KV pages are copy-on-write forked into
-the sibling choices (full pages shared zero-copy, the partial tail page
-copied), so best-of-n sampling costs one prefill plus n decode streams;
-the dense backend falls back to n full prefills.  Each choice carries
-its own sampler (seeded ``seed + index``), grammar matcher, and
-detokenizer; chunks/choices are indexed and usage is aggregated when the
-last choice finishes.  ``tools``/``tool_choice`` constrain decoding to a
-tool-call JSON via the grammar engine (``finish_reason="tool_calls"``),
+prompt is prefilled ONCE (chunk by chunk) and its KV pages are
+copy-on-write forked into the sibling choices when the last chunk lands
+(full pages shared zero-copy, the partial tail page copied), so
+best-of-n sampling costs one prefill plus n decode streams; the dense
+backend falls back to n monolithic prefills.  Each choice carries its
+own sampler (seeded ``seed + index``), grammar matcher, and detokenizer;
+chunks/choices are indexed and usage is aggregated when the last choice
+finishes.  ``tools``/``tool_choice`` constrain decoding to a tool-call
+JSON via the grammar engine (``finish_reason="tool_calls"``),
 ``logprobs`` records per-token log-probabilities, and
 ``abort(request_id)`` — also triggered by closing a streaming iterator —
 frees the request's slots and pages mid-flight.
@@ -31,6 +42,7 @@ import queue
 import threading
 import time
 import uuid
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Union
 
@@ -41,7 +53,7 @@ from repro.core.paged_cache import OutOfPages
 from repro.core.paged_runner import PagedEngineBackend, paged_supported
 from repro.core.runner import ModelRunner
 from repro.core.sampler import RequestSampler
-from repro.core.scheduler import Scheduler
+from repro.core.scheduler import AdmissionInfo, Scheduler
 from repro.grammar import (GrammarMatcher, parse_gbnf, schema_to_gbnf,
                            tools_to_gbnf)
 from repro.grammar.gbnf import JSON_GBNF
@@ -53,7 +65,17 @@ _SENTINEL = object()
 @dataclass
 class _Seq:
     """One choice (``choices[index]``) of a request: its own sampler,
-    grammar matcher, detokenizer, and decode slot."""
+    grammar matcher, detokenizer, and decode slot.
+
+    A sequence admitted on a chunked backend starts in a PREFILLING
+    state: ``prefill_ids`` holds the tokens its KV must cover (prompt +
+    any re-prefixed generated tokens) and ``prefill_pos`` is the chunk
+    cursor — how many of them are already in pages (including a
+    prefix-cache hit).  The scheduler feeds the remainder through
+    ``prefill_chunk`` across steps; when the cursor reaches the end the
+    sequence samples its first token and decodes.  A sibling choice of
+    a fresh ``n>1`` request instead waits with ``fork_of`` set and is
+    CoW-forked from that sequence when its prefill completes."""
     index: int
     sampler: RequestSampler
     streamer: DetokStreamer
@@ -71,6 +93,16 @@ class _Seq:
     logprobs: List[api.TokenLogprob] = field(default_factory=list)
     lp_emitted: int = 0               # logprob entries already streamed
     t_done: float = 0.0
+    prefill_ids: Optional[List[int]] = None   # tokens the KV must cover
+    prefill_pos: int = 0                      # chunk cursor (tokens in KV)
+    fork_of: Optional["_Seq"] = None          # CoW-fork source sibling
+
+    @property
+    def prefill_remaining(self) -> int:
+        """Prompt tokens not yet in KV (0 once decoding / fork-pending)."""
+        if self.prefill_ids is None:
+            return 0
+        return len(self.prefill_ids) - self.prefill_pos
 
 
 @dataclass
@@ -86,9 +118,11 @@ class _Request:
     embeds: Optional[np.ndarray] = None
     aborted: bool = False
     t_submit: float = field(default_factory=time.time)
+    t_admit: float = 0.0              # first admission into a slot
     t_first: float = 0.0
     prefill_s: float = 0.0
     cached_tokens: int = 0            # prompt tokens served from prefix cache
+    fits_key: Optional[tuple] = None  # memo: fits_ever vetted for this shape
 
     def pending(self) -> List[_Seq]:
         return [s for s in self.seqs if s.finish_reason is None]
@@ -103,6 +137,8 @@ class _LoadedModel:
     tokenizer: ByteBPETokenizer
     scheduler: Scheduler
     backend: str = "dense"
+    token_budget: int = 32            # model-forward tokens per step
+    prefill_chunk_size: int = 16      # chunked-prefill granularity (paged)
     image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
 
 
@@ -115,6 +151,12 @@ class MLCEngine:
     def __init__(self):
         self.models: Dict[str, _LoadedModel] = {}
         self._requests: Dict[str, _Request] = {}      # live, by request id
+        #: aborted before their submission landed, oldest-first (LRU)
+        self._preaborted: "OrderedDict[str, None]" = OrderedDict()
+        #: recently retired request ids (bounded): a LATE abort of one of
+        #: these is a no-op, not a sticky pre-abort — otherwise a user's
+        #: slow "stop" click would cancel the next request reusing the id
+        self._retired: "OrderedDict[str, None]" = OrderedDict()
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -127,7 +169,18 @@ class MLCEngine:
                    seed: int = 0, quantize: bool = False,
                    artifact_cache=None, backend: str = "dense",
                    page_size: int = 16, num_pages: Optional[int] = None,
-                   enable_prefix_cache: bool = True):
+                   enable_prefix_cache: bool = True,
+                   prefill_chunk_size: int = 16,
+                   token_budget: Optional[int] = None,
+                   max_cached_pages: Optional[int] = None):
+        """Load a model.  ``token_budget`` caps model-forward tokens per
+        engine step (decode tokens + prefill-chunk tokens); the default —
+        ``max_slots + prefill_chunk_size`` on the paged backend,
+        ``max_slots + 1`` on dense — always decodes every running
+        sequence and advances one prefill chunk (dense: admits one
+        monolithic prefill).  ``prefill_chunk_size`` is the chunked
+        paged-prefill granularity; ``max_cached_pages`` caps the prefix
+        cache with proactive LRU eviction."""
         if tokenizer is None:
             tokenizer = ByteBPETokenizer.train(
                 ["hello world this is a tiny corpus for the demo engine "
@@ -142,10 +195,13 @@ class MLCEngine:
             runner = PagedEngineBackend(
                 cfg, params, max_slots=max_slots, max_context=max_context,
                 page_size=page_size, num_pages=num_pages, seed=seed,
-                enable_prefix_cache=enable_prefix_cache)
+                enable_prefix_cache=enable_prefix_cache,
+                chunk_size=prefill_chunk_size,
+                max_cached_pages=max_cached_pages)
             scheduler = Scheduler(max_slots=max_slots,
                                   max_context=max_context,
                                   page_manager=runner.pm)
+            default_budget = max_slots + prefill_chunk_size
         elif backend == "dense":
             runner = ModelRunner(cfg, params, max_slots=max_slots,
                                  max_context=max_context, seed=seed,
@@ -153,11 +209,16 @@ class MLCEngine:
                                  artifact_cache=artifact_cache)
             scheduler = Scheduler(max_slots=max_slots,
                                   max_context=max_context)
+            default_budget = max_slots + 1
         else:
             raise ValueError(f"unknown backend {backend!r}")
+        if token_budget is None:
+            token_budget = default_budget
+        assert token_budget >= 1, token_budget
         self.models[name] = _LoadedModel(
             runner=runner, tokenizer=tokenizer, scheduler=scheduler,
-            backend=backend)
+            backend=backend, token_budget=token_budget,
+            prefill_chunk_size=prefill_chunk_size)
 
     def unload_model(self, name: str):
         with self._lock:
@@ -175,6 +236,12 @@ class MLCEngine:
             request = api.ChatCompletionRequest.from_dict(request)
         r = self._make_request(request, request_id)
         with self._lock:
+            # an abort posted concurrently with submission (the worker
+            # boundary's non-streaming cancel) may have arrived first —
+            # honour it instead of losing it to the race
+            if r.rid in self._preaborted:
+                self._preaborted.pop(r.rid, None)
+                r.aborted = True
             self.models[request.model].scheduler.enqueue(r)
             self._requests[r.rid] = r
             self._t_activity = time.time()
@@ -187,12 +254,22 @@ class MLCEngine:
     def abort(self, request_id: str) -> bool:
         """Cancel an in-flight request: its unfinished choices finish
         with ``finish_reason="abort"`` and every slot/page they hold is
-        freed.  No-op (returns False) if the id is unknown or already
-        finished.  Closing a streaming iterator calls this implicitly —
-        a browser tab's "stop generating" actually frees resources."""
+        freed.  Returns False if the id is not currently live — the
+        abort is then remembered, so a ``chat_completions_create``
+        racing this call with the same id starts cancelled (the worker
+        boundary's non-streaming cancel depends on this).  Closing a
+        streaming iterator calls this implicitly — a browser tab's
+        "stop generating" actually frees resources."""
         with self._lock:
             r = self._requests.get(request_id)
             if r is None:
+                if request_id in self._retired:
+                    return False           # already finished: nothing to do
+                self._preaborted[request_id] = None
+                while len(self._preaborted) > 4096:
+                    # ids that never arrive must not pool; evicting the
+                    # STALEST keeps a just-raced abort intact
+                    self._preaborted.popitem(last=False)
                 return False
             r.aborted = True
         self._wake.set()
@@ -312,39 +389,29 @@ class MLCEngine:
         return busy
 
     def _step_model(self, name: str, lm: _LoadedModel) -> bool:
+        """One planned step: decode every running sequence, then spend
+        the remaining token budget on prefill chunks and admissions
+        (see ``Scheduler.plan_step``)."""
         sched = lm.scheduler
         busy = self._reap_aborted(lm)
-        # ---- admission + prefill (one request per step, WebLLM-style).
-        # Admission is all-or-nothing over the request's unfinished choice
-        # set; ``can_admit`` covers both slot and page-pool accounting
-        # (paged: prompt pages + per-sibling CoW tail forks; prefix-cache-
-        # evictable pages count as available).
-        if sched.waiting:
-            head: _Request = sched.waiting[0]
-            pending = head.pending()
-            if not pending:                    # e.g. aborted while queued
-                sched.waiting.popleft()
-                return True
-            # a preempted choice resumes with its generated tokens
-            # re-prefixed (the prefix cache usually makes this cheap);
-            # resumed choices have diverged, so each holds its own full
-            # prompt copy rather than CoW-sharing one prefill
-            need = max(len(head.prompt_ids) + len(s.generated)
-                       for s in pending)
-            shared = self._sharable(lm, pending)
-            if not sched.fits_ever(need, len(pending), shared):
-                # would livelock through preempt/re-prefill — fail it now
-                sched.waiting.popleft()
-                self._fail(head, RuntimeError(
-                    "prompt does not fit in the KV page pool"))
-                return True
-            if sched.can_admit(need, len(pending), shared):
-                busy = True
-                sched.waiting.popleft()
-                self._prefill_request(lm, head, pending)
+        busy |= self._prune_waiting(lm)
+        chunked = getattr(lm.runner, "supports_chunked_prefill", False)
+        chunk = lm.prefill_chunk_size if chunked else None
+        plan = sched.plan_step(
+            lm.token_budget, chunk_size=chunk,
+            admission_info=lambda r: self._probe(lm, r))
+        # in-flight prefills run BEFORE admissions so an older
+        # half-prefilled prompt claims its pages first — a newcomer must
+        # not starve it into an OutOfPages preempt/restart loop
+        for seq, n in plan.prefill:
+            busy |= self._run_prefill_chunk(lm, seq, n)
+        for r, first in plan.admit:
+            busy |= self._admit_request(lm, r, first)
         # ---- batched decode over active slots ----
-        active = [sched.running[s] for s in sched.active_slots
-                  if sched.running[s].next_token is not None]
+        active = [s for s in plan.decode
+                  if s.slot >= 0 and s.finish_reason is None
+                  and s.next_token is not None
+                  and s.prefill_remaining == 0]
         if active:
             toks = {s.slot: s.next_token for s in active}
             poss = {s.slot: s.pos for s in active}
@@ -353,11 +420,16 @@ class MLCEngine:
             except OutOfPages:
                 # graceful degradation: kick the newest request (ALL of
                 # its sibling choices, so they stay consistent) back to
-                # the queue and drop its pages; survivors retry next step
+                # the queue and drop its pages; survivors retry next
+                # step.  A victim preempted mid-prefill publishes its
+                # cursor's tokens so resumption adopts them from the
+                # prefix cache instead of recomputing.
                 _, released = sched.preempt_newest()
                 for slot, seq in released:
-                    lm.runner.release(slot, publish=False)
-                    seq.slot = -1
+                    midprefill = (getattr(seq, "prefill_ids", None)
+                                  is not None and seq.fork_of is None)
+                    lm.runner.release(slot, publish=midprefill)
+                    self._unbind(seq)
                 return True
             for seq in active:
                 if seq.finish_reason is not None or seq.slot < 0:
@@ -367,6 +439,86 @@ class MLCEngine:
                 self._consume_logits(lm, seq, logits[seq.slot])
             busy = True
         return busy
+
+    def _prune_waiting(self, lm: _LoadedModel) -> bool:
+        """Drop queued requests that can never run: empty choice sets
+        (aborted while queued) resolve silently, prompts that exceed the
+        whole page pool fail fast instead of livelocking through
+        preempt/re-prefill."""
+        sched = lm.scheduler
+        busy = False
+        for r in list(sched.waiting):
+            pending = r.pending()
+            if pending:
+                # fits_ever depends only on the choice set's shape, which
+                # is frozen while the request waits — vet each shape once.
+                # Sharability is part of the shape: a preemption requeue
+                # can flip it (diverged/sampled siblings stop sharing one
+                # prefill) without growing `generated`
+                shared = self._sharable(lm, pending)
+                key = (len(pending),
+                       sum(len(s.generated) for s in pending), shared)
+                if r.fits_key == key:
+                    continue
+                need = max(len(r.prompt_ids) + len(s.generated)
+                           for s in pending)
+                if sched.fits_ever(need, len(pending), shared):
+                    r.fits_key = key
+                    continue
+            try:
+                sched.waiting.remove(r)
+            except ValueError:
+                continue
+            busy = True
+            if pending:
+                self._fail(r, RuntimeError(
+                    "prompt does not fit in the KV page pool"))
+        return busy
+
+    def _probe(self, lm: _LoadedModel, r: _Request) \
+            -> Optional[AdmissionInfo]:
+        """Admission cost of a waiting request: slot count, page need,
+        and — the prioritization key — how many prompt tokens actually
+        need computing once the prefix cache is consulted (a pure
+        ``peek_len``; planning must not perturb LRU or hit counters)."""
+        pending = r.pending()
+        if not pending:
+            return None
+        need = max(len(r.prompt_ids) + len(s.generated) for s in pending)
+        shared = self._sharable(lm, pending)
+        pc = getattr(lm.runner, "prefix_cache", None)
+
+        def uncached(ids: List[int]) -> int:
+            cached = (pc.peek_len(ids[:-1])
+                      if pc is not None and len(ids) > 1 else 0)
+            return max(1, len(ids) - cached)
+
+        if shared:
+            suffix = uncached(r.prompt_ids)
+        else:
+            suffix = sum(uncached(r.prompt_ids + s.generated)
+                         for s in pending)
+        return AdmissionInfo(need=need, n=len(pending), shared=shared,
+                             suffix=suffix)
+
+    @staticmethod
+    def _unbind(seq: _Seq):
+        """Reset a sequence's slot binding and chunk cursor (the next
+        admission recomputes them; published chunks come back through the
+        prefix cache)."""
+        seq.slot = -1
+        seq.prefill_ids = None
+        seq.prefill_pos = 0
+        seq.fork_of = None
+
+    def _evict_request(self, lm: _LoadedModel, r: _Request, publish: bool):
+        """Release every slot ``r`` holds.  ``publish`` pushes each
+        sequence's completed prefill chunks into the prefix cache (the
+        mid-prefill preemption path); fork-pending siblings own no pages
+        and release as a no-op either way."""
+        for slot, seq in lm.scheduler.release_group(r):
+            lm.runner.release(slot, publish=publish and seq.fork_of is None)
+            self._unbind(seq)
 
     def _reap_aborted(self, lm: _LoadedModel) -> bool:
         """Finish every choice of aborted requests: running ones release
@@ -398,58 +550,157 @@ class MLCEngine:
                 and all(not s.generated and s.next_token is None
                         for s in pending))
 
-    def _prefill_request(self, lm: _LoadedModel, r: _Request,
-                         pending: List[_Seq]):
-        """Admit and prefill a request's unfinished choice set.
+    def _admit_request(self, lm: _LoadedModel, r: _Request,
+                       first: int) -> bool:
+        """Admit a planned request's unfinished choice set (all slots
+        bound all-or-nothing) and run its first ``first`` prefill tokens.
 
-        Paged fast path for fresh multi-choice requests: ONE prompt
-        prefill, then CoW forks of the prompt KV into each sibling.
-        Dense backend (and resumed, diverged choices): one prefill per
-        sequence."""
+        Chunked backend (paged): every sequence enters PREFILLING with a
+        chunk cursor; a fresh ``n>1`` request binds one prefilling
+        sequence plus ``fork_of`` siblings that CoW-fork when the prompt
+        completes.  Dense backend: monolithic prefill per sequence, done
+        within this step.  OutOfPages rolls everything back, publishes
+        any completed chunks to the prefix cache, and re-queues the
+        request at the front (or fails it if nothing else is running)."""
         sched = lm.scheduler
-        sharable = self._sharable(lm, pending)
-        admitted: List[_Seq] = []
-        t0 = time.time()
+        pending = r.pending()
         try:
-            seq_logits: Dict[int, np.ndarray] = {}
-            if sharable:
-                s0 = pending[0]
-                s0.slot = sched.admit(s0, group=r)
-                admitted.append(s0)
-                logits = lm.runner.prefill(s0.slot, r.prompt_ids, None)
-                for s in pending[1:]:
-                    s.slot = sched.admit(s, group=r)
-                    admitted.append(s)
-                    lm.runner.fork_slot(s0.slot, s.slot)
+            sched.waiting.remove(r)
+        except ValueError:
+            return False                       # reaped since planning
+        if not pending:
+            return True
+        # deliberately recomputed rather than carried over from _probe:
+        # the choice set can shrink (aborts) between planning and here
+        need = max(len(r.prompt_ids) + len(s.generated) for s in pending)
+        shared = self._sharable(lm, pending)
+        if not sched.can_admit(need, len(pending), shared):
+            sched.waiting.appendleft(r)        # conditions changed; retry
+            return False
+        if r.t_admit == 0.0:
+            r.t_admit = time.time()
+        chunked = getattr(lm.runner, "supports_chunked_prefill", False)
+        try:
+            if chunked:
+                if shared:
+                    s0 = pending[0]
+                    self._bind_prefill(lm, r, s0, list(r.prompt_ids))
+                    for s in pending[1:]:
+                        s.slot = sched.admit(s, group=r)
+                        s.fork_of = s0
+                else:
+                    # resumed choices have diverged generated suffixes,
+                    # so each re-prefills its own prompt+generated copy
+                    # (the prefix cache usually makes this cheap)
+                    for s in pending:
+                        self._bind_prefill(lm, r, s,
+                                           r.prompt_ids + s.generated)
+                # spend this step's admission allotment immediately
+                budget = first
                 for s in pending:
-                    seq_logits[s.index] = logits
+                    while budget > 0 and s.prefill_remaining > 0:
+                        n = min(budget, lm.prefill_chunk_size,
+                                s.prefill_remaining)
+                        self._prefill_chunk_inner(lm, s, n)
+                        budget -= n
             else:
-                for s in pending:
-                    ids = r.prompt_ids + s.generated
-                    s.slot = sched.admit(s, group=r)
-                    admitted.append(s)
-                    seq_logits[s.index] = lm.runner.prefill(
-                        s.slot, ids, r.embeds)
-        except OutOfPages:
-            for s in admitted:
-                lm.runner.release(s.slot, publish=False)
-                sched.release(s.slot)
-                s.slot = -1
-            if sched.running:
-                sched.waiting.appendleft(r)    # retry when pages free up
+                self._prefill_dense(lm, r, pending)
+        except Exception as e:
+            self._recover_prefill_failure(lm, r, e)
+        return True
+
+    def _recover_prefill_failure(self, lm: _LoadedModel, r: _Request,
+                                 exc: Exception):
+        """Shared rollback for a failed admission or prefill chunk.
+
+        OutOfPages: release everything, publish completed chunks to the
+        prefix cache, and requeue at the front to resume from the cursor
+        (fail fast if nothing else is running — pages will never free).
+        Anything else is a poisoned request: it must not kill the loop
+        thread or leak its slots — surface the error to its caller."""
+        if isinstance(exc, OutOfPages):
+            self._evict_request(lm, r, publish=True)
+            if lm.scheduler.running:
+                lm.scheduler.waiting.appendleft(r)
             else:
                 self._fail(r, RuntimeError(
                     "prompt does not fit in the KV page pool"))
-            return
+        else:
+            self._evict_request(lm, r, publish=False)
+            self._fail(r, exc)
+
+    def _bind_prefill(self, lm: _LoadedModel, r: _Request, seq: _Seq,
+                      ids: List[int]):
+        """Bind one sequence to a slot and open its chunked prefill; the
+        prefix-cache hit positions the chunk cursor."""
+        seq.slot = lm.scheduler.admit(seq, group=r)
+        cached = lm.runner.begin_prefill(seq.slot, ids)
+        seq.prefill_ids = ids
+        seq.prefill_pos = cached
+        r.cached_tokens = max(
+            r.cached_tokens,
+            int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
+
+    def _prefill_chunk_inner(self, lm: _LoadedModel, seq: _Seq, n: int):
+        """Advance one sequence's chunk cursor by ``n`` tokens; completes
+        the prefill (fork siblings, sample the first token) when the
+        cursor reaches the end."""
+        tokens = seq.prefill_ids[seq.prefill_pos:seq.prefill_pos + n]
+        logits = lm.runner.prefill_chunk(seq.slot, tokens)
+        seq.prefill_pos += len(tokens)
+        if seq.prefill_remaining == 0:
+            self._complete_prefill(lm, seq, logits)
+
+    def _complete_prefill(self, lm: _LoadedModel, seq: _Seq,
+                          logits: np.ndarray):
+        """The last prompt chunk landed: CoW-fork any waiting siblings
+        off the now-complete prompt KV, then sample first tokens."""
+        r = seq.request
+        seq.prefill_ids = None
+        seq.prefill_pos = 0
+        seq.pos = len(r.prompt_ids) + len(seq.generated)
+        sibs = [s for s in r.seqs
+                if s.fork_of is seq and s.finish_reason is None]
+        for s in sibs:
+            lm.runner.fork_slot(seq.slot, s.slot)  # OutOfPages -> caller
+            s.fork_of = None
+            s.pos = seq.pos
+        if r.t_first == 0.0:
+            r.t_first = time.time()
+            r.prefill_s = r.t_first - (r.t_admit or r.t_submit)
+        for s in [seq] + sibs:
+            if not s.role_sent:
+                self._emit_role(r, s)
+                s.role_sent = True
+            if s.next_token is None:           # fresh (not resumed) seq
+                self._consume_logits(lm, s, logits)
+
+    def _run_prefill_chunk(self, lm: _LoadedModel, seq: _Seq,
+                           n: int) -> bool:
+        """Execute one planned prefill chunk of a running PREFILLING
+        sequence.  OutOfPages preempts the owning request — its
+        completed chunks are published to the prefix cache and it
+        re-queues at the front, resuming from the cursor later."""
+        r = seq.request
+        if (seq.slot < 0 or seq.finish_reason is not None or r.aborted
+                or seq.prefill_remaining <= 0):
+            return False
+        try:
+            self._prefill_chunk_inner(lm, seq,
+                                      min(n, seq.prefill_remaining))
         except Exception as e:
-            # a poisoned request must not kill the loop thread or leak
-            # its slots — surface the error to its caller
-            for s in admitted:
-                lm.runner.release(s.slot, publish=False)
-                sched.release(s.slot)
-                s.slot = -1
-            self._fail(r, e)
-            return
+            self._recover_prefill_failure(lm, r, e)
+        return True
+
+    def _prefill_dense(self, lm: _LoadedModel, r: _Request,
+                       pending: List[_Seq]):
+        """Dense-backend arm: one monolithic prefill per sequence (no
+        page pool, no chunk interleaving)."""
+        seq_logits: Dict[int, np.ndarray] = {}
+        for s in pending:
+            ids = r.prompt_ids + s.generated
+            s.slot = lm.scheduler.admit(s, group=r)
+            seq_logits[s.index] = lm.runner.prefill(s.slot, ids, r.embeds)
         r.cached_tokens = max(
             r.cached_tokens,
             int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
@@ -458,7 +709,7 @@ class MLCEngine:
                      and r.embeds is not None) else 0)
         if r.t_first == 0.0:
             r.t_first = time.time()
-            r.prefill_s = r.t_first - t0
+            r.prefill_s = r.t_first - (r.t_admit or r.t_submit)
         for s in pending:
             s.pos = len(r.prompt_ids) + len(s.generated) + extra
             if not s.role_sent:
@@ -467,9 +718,19 @@ class MLCEngine:
             if s.next_token is None:           # fresh (not resumed) seq
                 self._consume_logits(lm, s, seq_logits[s.index])
 
+    def _retire(self, rid: str):
+        """Forget a finished/failed request id (caller holds the lock):
+        late aborts of it become no-ops instead of sticky pre-aborts."""
+        self._requests.pop(rid, None)
+        self._preaborted.pop(rid, None)
+        self._retired[rid] = None
+        self._retired.move_to_end(rid)
+        while len(self._retired) > 4096:
+            self._retired.popitem(last=False)
+
     def _fail(self, r: _Request, exc: Exception):
         with self._lock:
-            self._requests.pop(r.rid, None)
+            self._retire(r.rid)
         r.out.put(exc)
 
     # -- token consumption ---------------------------------------------
@@ -622,6 +883,8 @@ class MLCEngine:
                 "prefill_tokens_per_s": prefill_tps,
                 "decode_tokens_per_s": decode_tps,
                 "e2e_latency_s": round(t_done - r.t_submit, 4),
+                "ttft_s": (round(r.t_first - r.t_submit, 4)
+                           if r.t_first > 0.0 else 0.0),
                 "prefix_cached_tokens": r.cached_tokens,
             })
 
@@ -647,7 +910,7 @@ class MLCEngine:
                 usage=self._usage(r)))
             r.out.put(_SENTINEL)
         with self._lock:
-            self._requests.pop(r.rid, None)
+            self._retire(r.rid)
 
     # -- result plumbing ---------------------------------------------------
     def _next_item(self, r: _Request):
@@ -667,19 +930,24 @@ class MLCEngine:
                         from None
 
     def _iter_chunks(self, r: _Request) -> Iterator[api.ChatCompletionChunk]:
+        done = False
         try:
             while True:
                 item = self._next_item(r)
                 if item is _SENTINEL:
+                    done = True
                     return
                 if isinstance(item, Exception):
+                    done = True
                     raise item
                 yield item
         finally:
             # closing the iterator mid-stream cancels the request (the
             # worker boundary maps a closed frontend stream to this);
-            # after normal completion this is a no-op
-            self.abort(r.rid)
+            # after normal completion nothing is live to cancel, so
+            # skip the call (it would pool a stale pre-abort entry)
+            if not done:
+                self.abort(r.rid)
 
     def _collect(self, r: _Request) -> api.ChatCompletionResponse:
         item = self._next_item(r)

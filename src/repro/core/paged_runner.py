@@ -1,26 +1,38 @@
-"""PagedModelRunner: decode through the paged KV cache + Pallas kernel.
+"""PagedModelRunner: chunked prefill + decode through the paged KV cache.
 
 The TPU-native serving path (WebLLM's PagedAttention analogue): attention
-layers keep physical page pools ``[P, page_size, Kv, Dh]``; per-step the
-new token's K/V are scattered into each sequence's current page and
-attention runs via ``kernels.paged_attention`` (scalar-prefetched page
-tables).  Pure-GQA decoder-only models (llama/phi/yi/qwen/nemo/internvl)
-are supported; hybrid/SSM/MLA families use the dense-slot runner.
+layers keep physical page pools ``[P, page_size, Kv, Dh]``.  EVERY token
+— prompt or completion, cold or cache-hit — flows through the same two
+paged steps:
+
+* ``prefill_chunk(sid, tokens)``: a fixed-size chunk of up to
+  ``chunk_size`` consecutive prompt tokens.  The chunk's K/V are
+  scattered into the sequence's pages and attention runs via the
+  multi-token ``kernels.paged_prefill_attention`` kernel (causal masking
+  inside the chunk) in one jitted step.  The final partial chunk is
+  padded; pad rows write into a dedicated trash page and their logits
+  are ignored.  A long prompt is a *sequence of chunks* that the engine
+  can interleave with decode steps of other sequences — prefill no
+  longer head-of-line blocks running decoders.
+* ``decode(seq_tokens)``: one batched token per running sequence via
+  ``kernels.paged_attention``.
+
+There is no dense-prefill-then-scatter path anymore and no decode-per-
+suffix-token replay: ``begin_seq`` adopts the longest prefix already in
+the :class:`repro.core.prefix_cache.PrefixCache` (sharing full pages
+zero-copy, forking a partial tail page copy-on-write) and the uncached
+suffix runs through ``prefill_chunk``.  ``prefill_seq`` is a thin loop
+over chunks for callers that want the whole prompt at once.
 
 Page bookkeeping lives in :class:`repro.core.paged_cache.PageManager`.
-A :class:`repro.core.prefix_cache.PrefixCache` sits on top: finished
-sequences publish their pages, and ``prefill_seq`` adopts the longest
-cached prefix (sharing full pages zero-copy, forking a partial tail page
-copy-on-write) so only the uncached suffix is computed.
-
 :class:`PagedEngineBackend` wraps the runner in the slot-keyed unified
-runner interface ``MLCEngine`` drives, making the paged path a
-first-class engine backend (``load_model(..., backend="paged")``).
+runner interface ``MLCEngine`` drives, adding the chunked-prefill calls
+(``begin_prefill``/``prefill_chunk``) the step-plan scheduler uses.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +41,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import OutOfPages, PageManager
 from repro.core.prefix_cache import PrefixCache
-from repro.kernels.ops import paged_attention
+from repro.kernels.ops import paged_attention, paged_prefill_attention
 from repro.models import model
 from repro.models.attention import _project, _qk_norm
-from repro.models.layers import apply_rope, mlp, rmsnorm, shard_act
+from repro.models.layers import apply_rope, mlp, rmsnorm
 from repro.models.pdef import init_params
 
 
@@ -43,33 +55,51 @@ def paged_supported(cfg: ModelConfig) -> bool:
 
 
 class PagedModelRunner:
-    """Decode-only paged runner (prefill fills pages via the dense path)."""
+    """Chunked-prefill + decode paged runner (everything runs in pages)."""
 
     def __init__(self, cfg: ModelConfig, params=None, *, num_pages: int = 64,
                  page_size: int = 16, max_slots: int = 4,
                  pages_per_seq: int = 8, seed: int = 0,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 chunk_size: int = 16,
+                 max_cached_pages: Optional[int] = None):
         assert paged_supported(cfg), f"{cfg.name}: paged path needs pure GQA"
+        assert chunk_size >= 1
         self.cfg = cfg
         self.page_size = page_size
         self.pages_per_seq = pages_per_seq
         self.max_slots = max_slots
+        self.chunk_size = chunk_size
         self.pm = PageManager(num_pages, page_size, max_slots, pages_per_seq)
-        self.prefix_cache = (PrefixCache(self.pm) if enable_prefix_cache
-                             else None)
+        self.prefix_cache = (
+            PrefixCache(self.pm, max_cached_pages=max_cached_pages)
+            if enable_prefix_cache else None)
         self.seq_tokens: Dict[int, List[int]] = {}   # tokens whose KV is paged
         self.last_prefill_info: Dict[str, int] = {"prefix_cached_tokens": 0}
         self.n_prefills = 0               # prompt prefills (not forks)
         self.n_forks = 0                  # CoW sequence forks
+        self.n_prefill_chunks = 0         # chunked prefill kernel steps
+        self.n_prefill_tokens = 0         # real (non-pad) tokens prefilled
+        self.n_decode_steps = 0           # batched decode steps
+        self.n_decode_tokens = 0          # tokens decoded across the batch
+        #: bounded trace of jitted steps, for liveness assertions/tests:
+        #: ("decode", batch_size) | ("chunk", n_valid_tokens)
+        self.step_log: Deque[Tuple[str, int]] = deque(maxlen=4096)
         if params is None:
             params = init_params(model.params_def(cfg),
                                  jax.random.PRNGKey(seed))
         self.params = params
         L, Kv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        self.k_pages = jnp.zeros((L, num_pages, page_size, Kv, Dh),
+        # one extra physical page (index num_pages) absorbs the K/V
+        # writes of a padded final chunk's pad rows — never in any
+        # page table, never read
+        self.trash_page = num_pages
+        self.k_pages = jnp.zeros((L, num_pages + 1, page_size, Kv, Dh),
                                  jnp.bfloat16)
         self.v_pages = jnp.zeros_like(self.k_pages)
         self._step = jax.jit(self._decode_step, donate_argnums=(1, 2))
+        self._chunk_step = jax.jit(self._prefill_chunk_step,
+                                   donate_argnums=(1, 2))
 
         def _copy(k, v, src, dst):
             return (k.at[:, dst].set(k[:, src]),
@@ -126,6 +156,45 @@ class PagedModelRunner:
             logits = x @ params["lm_head"]
         return logits, k_pages, v_pages
 
+    def _prefill_chunk_step(self, params, k_pages, v_pages, tokens, pos,
+                            page_table, ctx, start, page_idx, page_off):
+        """One chunked-prefill step for a single sequence.
+
+        tokens/pos/page_idx/page_off [C] (C = chunk_size, padded);
+        page_table [pps]; ctx scalar (tokens in pages incl. this chunk's
+        valid suffix); start scalar (global position of chunk row 0).
+        K/V for all C rows are scattered into pages (pad rows land in
+        the trash page) and the chunk attends to the page table with
+        causal masking inside the chunk.  Returns logits [C, V]."""
+        cfg = self.cfg
+        C = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens[None], axis=0)    # [1,C,D]
+        layers = self._layer_params_traced(params)
+        for li, p in enumerate(layers):
+            h = rmsnorm(x, p["mixer_norm"], cfg.norm_eps)
+            q = _project(cfg, p["attn"], h, "q", cfg.n_heads)  # [1,C,H,Dh]
+            k = _project(cfg, p["attn"], h, "k", cfg.n_kv_heads)
+            v = _project(cfg, p["attn"], h, "v", cfg.n_kv_heads)
+            q, k = _qk_norm(cfg, p["attn"], q, k)
+            q = apply_rope(q, pos[None, :], cfg.rope_theta)
+            k = apply_rope(k, pos[None, :], cfg.rope_theta)
+            k_pages = k_pages.at[li, page_idx, page_off].set(
+                k[0].astype(k_pages.dtype))
+            v_pages = v_pages.at[li, page_idx, page_off].set(
+                v[0].astype(v_pages.dtype))
+            att = paged_prefill_attention(q[0], k_pages[li], v_pages[li],
+                                          page_table, ctx, start)  # [C,H,Dh]
+            y = att.reshape(1, C, -1) @ p["attn"]["wo"]
+            x = x + y
+            h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+            x = x + mlp(h, p["ffn"], cfg.act)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return logits[0], k_pages, v_pages
+
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
         layers = list(params["decoder"]["prefix"])
@@ -138,12 +207,16 @@ class PagedModelRunner:
         return layers
 
     # -- host-side API ---------------------------------------------------
-    def prefill_seq(self, prompt_ids: List[int]) -> int:
-        """Prefill a new sequence.  The longest prefix already present in
-        the prefix cache is adopted (full pages shared in place, a
-        partial tail page forked copy-on-write); only the uncached suffix
-        is computed — densely when the whole prompt is cold, via the
-        paged decode step otherwise.  Returns seq_id."""
+    def begin_seq(self, prompt_ids: List[int]) -> int:
+        """Open a new sequence for chunked prefill of ``prompt_ids``.
+
+        The longest prefix already present in the prefix cache is adopted
+        (full pages shared in place, a partial tail page forked
+        copy-on-write); ``seq_len(sid)`` afterwards reports how many
+        leading tokens are already in pages — the caller feeds the rest
+        through ``prefill_chunk``.  At least one suffix token is always
+        left uncached so the final chunk yields logits.  Returns seq_id.
+        """
         prompt_ids = [int(t) for t in prompt_ids]
         self.n_prefills += 1
         alloc = self.pm.new_seq()
@@ -166,21 +239,68 @@ class PagedModelRunner:
             cached = alloc.length
         self.last_prefill_info = {"prefix_cached_tokens": cached}
         self.seq_tokens[sid] = prompt_ids[:cached]
-        if cached > 0:
-            try:
-                for t in prompt_ids[cached:]:
-                    out = self.decode({sid: t})
-            except Exception:
-                self.free(sid)
-                raise
-            self._last_logits_np = out[sid]
-            return sid
+        return sid
+
+    def seq_len(self, sid: int) -> int:
+        """Tokens currently stored in the sequence's pages."""
+        return self.pm.seqs[sid].length
+
+    def prefill_chunk(self, sid: int, tokens: List[int]) -> np.ndarray:
+        """Prefill up to ``chunk_size`` consecutive prompt tokens.
+
+        K/V for every token are scattered into the sequence's pages and
+        the chunk attends to the full page table (causal inside the
+        chunk) in ONE jitted step; a partial final chunk is padded to
+        ``chunk_size`` (pad rows write to the trash page).  Raises
+        :class:`OutOfPages` *before* mutating sequence state when the
+        pool cannot back the chunk.  Returns the last valid token's
+        logits [V]."""
+        tokens = [int(t) for t in tokens]
+        T = len(tokens)
+        C = self.chunk_size
+        assert 0 < T <= C, (T, C)
+        alloc = self.pm.seqs[sid]
+        start = alloc.length
+        need_pages = -(-(start + T) // self.page_size)
+        if need_pages > self.pm.pages_per_seq:
+            raise OutOfPages(f"seq {sid} at pages_per_seq cap")
+        self.pm.require_pages(max(0, need_pages - len(alloc.pages)))
+        self.pm.append_tokens(sid, T)
+        pages = alloc.pages
+        pos = (start + np.arange(C)).astype(np.int32)
+        page_idx = np.full(C, self.trash_page, np.int32)
+        page_idx[:T] = [pages[p // self.page_size] for p in pos[:T]]
+        page_off = (pos % self.page_size).astype(np.int32)
+        tok = np.zeros(C, np.int32)
+        tok[:T] = tokens
+        table = self.pm.page_table([sid])[0]
+        logits, self.k_pages, self.v_pages = self._chunk_step(
+            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(table), np.int32(start + T),
+            np.int32(start), jnp.asarray(page_idx), jnp.asarray(page_off))
+        self.seq_tokens[sid].extend(tokens)
+        self.n_prefill_chunks += 1
+        self.n_prefill_tokens += T
+        self.step_log.append(("chunk", T))
+        out = np.asarray(logits[T - 1].astype(jnp.float32))
+        self._last_logits_np = out
+        return out
+
+    def prefill_seq(self, prompt_ids: List[int]) -> int:
+        """Prefill a whole prompt: ``begin_seq`` (prefix-cache adoption)
+        then a loop of ``prefill_chunk`` over the uncached suffix.
+        Returns seq_id; ``last_prefill_logits()`` has the final logits."""
+        prompt_ids = [int(t) for t in prompt_ids]
+        sid = self.begin_seq(prompt_ids)
+        done = self.seq_len(sid)
         try:
-            self._dense_prefill(alloc, prompt_ids)
+            while done < len(prompt_ids):
+                n = min(self.chunk_size, len(prompt_ids) - done)
+                self.prefill_chunk(sid, prompt_ids[done:done + n])
+                done += n
         except Exception:
             self.free(sid)
             raise
-        self.seq_tokens[sid] = list(prompt_ids)
         return sid
 
     def fork_seq(self, src_sid: int) -> int:
@@ -214,49 +334,6 @@ class PagedModelRunner:
         """Copy one physical page's K/V payload across every layer."""
         self.k_pages, self.v_pages = self._copy_jit(
             self.k_pages, self.v_pages, src, dst)
-
-    def _dense_prefill(self, alloc, prompt_ids: List[int]):
-        """Cold path: dense prefill, scatter KV into fresh pages."""
-        cfg = self.cfg
-        T = len(prompt_ids)
-        self.pm.append_tokens(alloc.seq_id, T)
-        caches = model.init_caches(cfg, 1, T)
-        toks = jnp.asarray(np.array(prompt_ids, np.int32)[None])
-        self._last_logits, caches, _ = model.prefill(
-            cfg, self.params, toks, caches=caches)
-        # move dense cache rows into this sequence's pages
-        g = cfg.grouped_pattern()
-        li = 0
-        k_pages, v_pages = self.k_pages, self.v_pages
-        pages = np.array(alloc.pages, np.int32)
-
-        def put(li, kk, vv):
-            nonlocal k_pages, v_pages
-            # kk/vv: [T, Kv, Dh] -> page layout
-            pad = (-T) % self.page_size
-            kk = jnp.pad(kk, ((0, pad), (0, 0), (0, 0)))
-            vv = jnp.pad(vv, ((0, pad), (0, 0), (0, 0)))
-            kk = kk.reshape(-1, self.page_size, *kk.shape[1:])
-            vv = vv.reshape(-1, self.page_size, *vv.shape[1:])
-            k_pages = k_pages.at[li, pages[:kk.shape[0]]].set(
-                kk.astype(k_pages.dtype))
-            v_pages = v_pages.at[li, pages[:vv.shape[0]]].set(
-                vv.astype(v_pages.dtype))
-
-        for c in caches["prefix"]:
-            put(li, c["mixer"]["k"][0, :T], c["mixer"]["v"][0, :T])
-            li += 1
-        for i in range(g.n_blocks):
-            for j in range(len(g.block)):
-                c = caches["blocks"][j]
-                put(li, c["mixer"]["k"][i, 0, :T], c["mixer"]["v"][i, 0, :T])
-                li += 1
-        for c in caches["suffix"]:
-            put(li, c["mixer"]["k"][0, :T], c["mixer"]["v"][0, :T])
-            li += 1
-        self.k_pages, self.v_pages = k_pages, v_pages
-        self._last_logits_np = np.asarray(
-            self._last_logits[0, -1].astype(jnp.float32))
 
     def last_prefill_logits(self) -> np.ndarray:
         return self._last_logits_np
@@ -293,13 +370,18 @@ class PagedModelRunner:
         for s in sids:
             if s in self.seq_tokens:
                 self.seq_tokens[s].append(int(seq_tokens[s]))
+        self.n_decode_steps += 1
+        self.n_decode_tokens += B
+        self.step_log.append(("decode", B))
         out = np.asarray(logits[:, 0].astype(jnp.float32))
         return {s: out[i] for i, s in enumerate(sids)}
 
     def free(self, seq_id: int, publish: bool = False):
         """Release a sequence.  With ``publish=True`` (and the prefix
         cache enabled) its pages are first inserted into the cache so a
-        later request sharing the prefix can adopt them."""
+        later request sharing the prefix can adopt them.  A sequence
+        freed mid-prefill publishes exactly the chunks completed so far —
+        this is what lets a preempted prefill resume from its cursor."""
         tokens = self.seq_tokens.pop(seq_id, None)
         if (publish and self.prefix_cache is not None and tokens
                 and len(tokens) == self.pm.seqs[seq_id].length):
@@ -309,7 +391,12 @@ class PagedModelRunner:
     def stats(self) -> dict:
         out = {"pages": self.pm.stats(),
                "prefills": self.n_prefills,
-               "forks": self.n_forks}
+               "forks": self.n_forks,
+               "chunk_size": self.chunk_size,
+               "prefill_chunks": self.n_prefill_chunks,
+               "prefill_tokens": self.n_prefill_tokens,
+               "decode_steps": self.n_decode_steps,
+               "decode_tokens": self.n_decode_tokens}
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out
@@ -318,18 +405,26 @@ class PagedModelRunner:
 class PagedEngineBackend:
     """Slot-keyed unified-runner facade over :class:`PagedModelRunner`.
 
-    ``MLCEngine`` drives every backend through the same four calls —
+    ``MLCEngine`` drives every backend through the same calls —
     ``prefill(slot, ids)``, ``decode(tokens_by_slot, pos_by_slot)``,
     ``release(slot)``, ``stats()`` — so the scheduler/engine code is
-    backend-agnostic.  This facade maps engine slots onto paged seq_ids,
-    publishes finished sequences into the prefix cache, and frees
-    preempted ones without publishing (their pages may be mid-write).
+    backend-agnostic.  The paged backend additionally supports CHUNKED
+    prefill (``supports_chunked_prefill``): ``begin_prefill(slot, ids)``
+    opens the sequence and adopts the prefix-cache hit, then the engine
+    streams the uncached suffix through ``prefill_chunk(slot, tokens)``
+    across as many scheduler steps as the token budget allows.  This
+    facade maps engine slots onto paged seq_ids, publishes finished (and
+    preempted-mid-prefill) sequences into the prefix cache, and frees
+    aborted ones without publishing.
     """
+
+    supports_chunked_prefill = True
 
     def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 4,
                  max_context: int = 256, page_size: int = 16,
                  num_pages: Optional[int] = None, seed: int = 0,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True, chunk_size: int = 16,
+                 max_cached_pages: Optional[int] = None):
         pages_per_seq = -(-max_context // page_size)
         if num_pages is None:
             # room for every slot at full context plus cache headroom
@@ -337,10 +432,12 @@ class PagedEngineBackend:
         self.runner = PagedModelRunner(
             cfg, params, num_pages=num_pages, page_size=page_size,
             max_slots=max_slots, pages_per_seq=pages_per_seq, seed=seed,
-            enable_prefix_cache=enable_prefix_cache)
+            enable_prefix_cache=enable_prefix_cache, chunk_size=chunk_size,
+            max_cached_pages=max_cached_pages)
         self.cfg = cfg
         self.max_context = max_context
         self.max_slots = max_slots
+        self.chunk_size = chunk_size
         self.pm = self.runner.pm
         self.prefix_cache = self.runner.prefix_cache
         self._slot_seq: Dict[int, int] = {}
@@ -351,11 +448,27 @@ class PagedEngineBackend:
 
     def prefill(self, slot: int, prompt_ids: List[int],
                 embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """Whole-prompt prefill (a loop of chunks) — kept for callers
+        that don't interleave; the engine uses the chunked calls."""
         assert embeds is None, "paged backend: vision embeds unsupported"
         assert slot not in self._slot_seq, f"slot {slot} already bound"
         sid = self.runner.prefill_seq(prompt_ids)
         self._slot_seq[slot] = sid
         return self.runner.last_prefill_logits()
+
+    def begin_prefill(self, slot: int, prompt_ids: List[int]) -> int:
+        """Open ``slot`` for chunked prefill; adopts the longest cached
+        prefix and returns how many leading tokens are already in pages
+        (the chunk cursor's starting point)."""
+        assert slot not in self._slot_seq, f"slot {slot} already bound"
+        sid = self.runner.begin_seq(prompt_ids)
+        self._slot_seq[slot] = sid
+        return self.runner.seq_len(sid)
+
+    def prefill_chunk(self, slot: int, tokens: List[int]) -> np.ndarray:
+        """Append one chunk of prompt tokens to ``slot``'s sequence;
+        returns the last token's logits."""
+        return self.runner.prefill_chunk(self._slot_seq[slot], tokens)
 
     def fork_slot(self, src_slot: int, dst_slot: int):
         """CoW-fork ``src_slot``'s sequence into ``dst_slot`` (shared

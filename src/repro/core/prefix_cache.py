@@ -18,11 +18,18 @@ Structure
   must keep appending into that page), so adoption forks them
   copy-on-write: a private physical page is allocated and the payload is
   copied by the runner.
-* Eviction is LRU over leaves (nodes with no children/tails, and tails),
-  triggered on demand through the ``PageManager.reclaim`` hook when the
-  free list runs dry.  Evicting a page still referenced by a live
-  sequence merely drops the cache's reference — the page returns to the
-  free list when the sequence finishes.
+* Eviction is LRU over leaves (nodes with no children/tails, and tails).
+  It triggers two ways: on demand through the ``PageManager.reclaim``
+  hook when the free list runs dry, and PROACTIVELY on insert when
+  ``max_cached_pages`` is set — the cache then never holds more than
+  that many pages, bounding its memory footprint instead of letting it
+  grow to whatever allocation pressure tolerates.  Evicting a page still
+  referenced by a live sequence merely drops the cache's reference — the
+  page returns to the free list when the sequence finishes.
+
+``peek_len`` is a read-only probe (no LRU touch, no hit/miss counters)
+the scheduler uses to rank waiting requests by uncached-suffix length
+without perturbing the cache.
 
 The cache is pure bookkeeping: page *payloads* live in the runner's jax
 page pools and are never touched here.
@@ -73,9 +80,11 @@ class _Tail:
 class PrefixCache:
     """Radix tree token-ids -> physical KV pages, with LRU eviction."""
 
-    def __init__(self, pm: PageManager):
+    def __init__(self, pm: PageManager,
+                 max_cached_pages: Optional[int] = None):
         self.pm = pm
         self.page_size = pm.page_size
+        self.max_cached_pages = max_cached_pages
         self.root = _Node(None, (), None, 0)
         self._clock = 0
         self._pages: set = set()             # pages the cache holds a ref on
@@ -84,6 +93,7 @@ class PrefixCache:
         self.misses = 0
         self.hit_tokens = 0
         self.evictions = 0
+        self.cap_evictions = 0               # evictions forced by the cap
         self.inserted_pages = 0
         # install the on-demand eviction hooks
         pm.reclaim = self.reclaim
@@ -132,6 +142,25 @@ class PrefixCache:
             self.misses += 1
         return pages, tail
 
+    def peek_len(self, ids: List[int]) -> int:
+        """Length of the longest cached prefix of ``ids`` WITHOUT touching
+        LRU clocks or hit/miss counters — a pure read for scheduling
+        (uncached-suffix prioritization of the waiting queue)."""
+        ps = self.page_size
+        node = self.root
+        i = 0
+        while i + ps <= len(ids):
+            child = node.children.get(tuple(ids[i:i + ps]))
+            if child is None:
+                break
+            node = child
+            i += ps
+        best_n = 0
+        rest = ids[i:]
+        for t in node.tails:
+            best_n = max(best_n, _common_prefix(t.tokens, rest))
+        return i + best_n
+
     # -- publication -----------------------------------------------------
     def insert(self, ids: List[int], pages: List[int]):
         """Publish a finished sequence's tokens/pages into the tree.
@@ -156,12 +185,14 @@ class PrefixCache:
             child.last_access = self._clock
             node = child
         rem = len(ids) - n_full * ps
-        if rem == 0:
-            return
-        tt = tuple(ids[n_full * ps:])
+        if rem:
+            self._insert_tail(node, tuple(ids[n_full * ps:]), pages[n_full])
+        self._enforce_cap()
+
+    def _insert_tail(self, node: _Node, tt: Tuple[int, ...], page: int):
         for t in node.tails:
             # an existing tail already covers this one -> nothing to add
-            if len(t.tokens) >= rem and t.tokens[:rem] == tt:
+            if len(t.tokens) >= len(tt) and t.tokens[:len(tt)] == tt:
                 t.last_access = self._clock
                 return
         # drop tails that the new, longer tail strictly extends
@@ -171,9 +202,9 @@ class PrefixCache:
                 self._drop(t.page)
             else:
                 keep.append(t)
-        keep.append(_Tail(tt, pages[n_full], self._clock))
+        keep.append(_Tail(tt, page, self._clock))
         node.tails = keep
-        self._take(pages[n_full])
+        self._take(page)
 
     def _take(self, page: int):
         self.pm.ref_page(page)
@@ -185,9 +216,26 @@ class PrefixCache:
         self.pm.deref_page(page)
 
     # -- eviction --------------------------------------------------------
+    def _enforce_cap(self):
+        """Proactive LRU eviction down to ``max_cached_pages`` (no-op when
+        uncapped).  Runs on every insert, so the cache's footprint is
+        bounded even without allocation pressure."""
+        if self.max_cached_pages is None:
+            return
+        while len(self._pages) > self.max_cached_pages:
+            victim = self._lru_leaf()
+            if victim is None:
+                break
+            self._evict(victim)
+            self.cap_evictions += 1
+
     def evictable_pages(self) -> int:
-        """Pages that would return to the free list if evicted now."""
-        return sum(1 for p in self._pages if self.pm.ref.get(p, 0) == 1)
+        """Pages that would return to the free list if evicted now.
+        Iterates a snapshot: stats() readers may run on another thread
+        (e.g. the worker boundary) while the engine loop mutates the
+        cache."""
+        return sum(1 for p in list(self._pages)
+                   if self.pm.ref.get(p, 0) == 1)
 
     def reclaim(self, n: int) -> int:
         """Evict LRU leaves until ``n`` pages landed on the free list (or
@@ -239,5 +287,7 @@ class PrefixCache:
         return {"hits": self.hits, "misses": self.misses,
                 "hit_tokens": self.hit_tokens,
                 "evictions": self.evictions,
+                "cap_evictions": self.cap_evictions,
+                "max_cached_pages": self.max_cached_pages,
                 "cached_pages": self.cached_pages,
                 "evictable_pages": self.evictable_pages()}

@@ -1,25 +1,80 @@
-"""Continuous-batching scheduler: FCFS admission into a fixed set of
-decode slots, with page accounting and preemption.
+"""Token-budget continuous-batching scheduler: one mixed *step plan* of
+decode tokens and prefill chunks per engine step.
 
-Admission is in units of *sequences*: a multi-choice request (``n > 1``)
-admits all of its choice sequences or none of them, so siblings always
-decode together.  The dense backend reserves ``max_context`` per slot up
-front; the paged backend admits as long as the page pool can cover the
-prompt plus per-sibling copy-on-write tail forks, and preempts when an
-append fails mid-decode.  Preemption evicts a whole *group* (every slot
-admitted under the same request), so sibling choices stay consistent —
-the request is re-queued at the front, WebLLM-style graceful degradation
-rather than a crash.
+``plan_step(token_budget)`` replaces one-request-per-step admission: every
+step gets a budget of model-forward tokens and the plan fills it with
+
+1. one decode token for EVERY running sequence that has a token pending
+   (decode is never starved — inter-token latency stays flat),
+2. prefill chunks (up to ``chunk_size`` tokens each) for sequences that
+   were admitted earlier but whose prompt is still mid-prefill, oldest
+   admission first, and
+3. admissions of waiting requests into the remaining budget — ordered by
+   *uncached-suffix length* (prefix-cache-aware prioritization: the
+   request whose prompt is cheapest to prefill, because most of it is
+   already cached, goes first) instead of strict FCFS.
+
+Admission stays in units of *sequences*: a multi-choice request
+(``n > 1``) admits all of its choice sequences or none of them, so
+siblings always decode together.  The dense backend reserves
+``max_context`` per slot up front and prefills monolithically (its chunk
+size is "the whole prompt"); the paged backend admits as long as the
+page pool can cover the prompt plus per-sibling copy-on-write tail
+forks, allocates pages chunk by chunk, and preempts when an append fails
+mid-step.  Preemption evicts a whole *group* (every slot admitted under
+the same request), so sibling choices stay consistent — the request is
+re-queued at the front, WebLLM-style graceful degradation rather than a
+crash.
+
+The scheduler never touches runner state: the plan names sequence/request
+objects and token counts; the engine executes it.  Scheduled items are
+duck-typed — running items may expose ``next_token`` (a decode is
+pending) and ``prefill_remaining`` (prompt tokens not yet in KV); the
+admission probe callback supplies per-request cost info.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.paged_cache import OutOfPages, PageManager
 
 
+@dataclass
+class AdmissionInfo:
+    """What admitting a waiting request would cost.
+
+    ``need``: longest per-sequence context its prompts require (tokens);
+    ``n``: sequences in its unfinished choice set; ``shared``: one prompt
+    prefill CoW-forked into the siblings; ``suffix``: total uncached
+    tokens to actually compute (the prioritization key).
+    """
+    need: int
+    n: int = 1
+    shared: bool = True
+    suffix: int = 1
+
+
+@dataclass
+class StepPlan:
+    """One engine step: decode everything running, spend the rest of the
+    token budget on prefill chunks and admissions."""
+    decode: List[object] = field(default_factory=list)
+    #: (running sequence, n tokens) chunks to prefill, in order
+    prefill: List[Tuple[object, int]] = field(default_factory=list)
+    #: (waiting request, first-chunk token allotment) to admit, in order
+    admit: List[Tuple[object, int]] = field(default_factory=list)
+    budget_used: int = 0
+
+
 class Scheduler:
+    #: planning passes a request may be outranked before it is AGED —
+    #: promoted ahead of the cheapest-suffix ordering (FCFS among aged
+    #: requests), so a long cold prompt cannot starve under a steady
+    #: stream of cheap cache-hit arrivals
+    AGING_PLANS = 64
+
     def __init__(self, *, max_slots: int, max_context: int,
                  page_manager: Optional[PageManager] = None):
         self.max_slots = max_slots
@@ -31,10 +86,109 @@ class Scheduler:
         self._admit_seq = 0
         self._admitted_at: Dict[int, int] = {}     # slot -> admission order
         self._group_of: Dict[int, object] = {}     # slot -> owning request
+        self._outranked: Dict[int, int] = {}       # id(request) -> planning
+        #                                            passes spent waiting
+        # counters (surfaced via stats())
+        self.n_plans = 0
+        self.n_admitted = 0
+        self.n_preemptions = 0
 
     def enqueue(self, item):
         self.waiting.append(item)
 
+    # -- step planning ---------------------------------------------------
+    def plan_step(self, token_budget: int, *,
+                  chunk_size: Optional[int] = None,
+                  admission_info: Optional[Callable[[object],
+                                                    AdmissionInfo]] = None
+                  ) -> StepPlan:
+        """Plan one engine step under ``token_budget`` model-forward
+        tokens.
+
+        Decode tokens for running sequences are planned unconditionally
+        (even when they alone exceed the budget — starving decode would
+        stall streams).  The remaining budget goes to prefill chunks of
+        already-admitted, still-prefilling sequences (oldest first), then
+        to admissions of waiting requests ranked cheapest-uncached-suffix
+        first.  ``chunk_size`` of None means monolithic prefill (the
+        dense backend).  ``admission_info`` probes a waiting request's
+        cost; requests it maps to None are skipped this step.
+        """
+        self.n_plans += 1
+        plan = StepPlan()
+        # a resumed-after-preemption sequence can hold a pending
+        # next_token while its prompt is being re-prefilled — it must
+        # NOT decode until the chunk cursor catches up, or the token's
+        # K/V would land mid-prompt
+        plan.decode = [
+            seq for seq in (self.running[s] for s in self.active_slots)
+            if getattr(seq, "next_token", None) is not None
+            and not int(getattr(seq, "prefill_remaining", 0) or 0)]
+        used = len(plan.decode)
+        # continue in-flight chunked prefills, oldest admission first
+        for slot in sorted(self.running,
+                           key=lambda s: self._admitted_at.get(s, 0)):
+            seq = self.running[slot]
+            rem = int(getattr(seq, "prefill_remaining", 0) or 0)
+            while rem > 0 and used < token_budget:
+                n = min(rem, chunk_size or rem, token_budget - used)
+                plan.prefill.append((seq, n))
+                used += n
+                rem -= n
+        # admissions into whatever budget is left, cheapest suffix first
+        # probing every waiting request costs a radix walk each — skip
+        # the whole pass when no slot or budget could admit anything
+        if (admission_info is not None and self.waiting
+                and self.free_slots and used < token_budget):
+            infos = []
+            ages = {}
+            # snapshot: callers may enqueue concurrently with planning
+            for i, r in enumerate(list(self.waiting)):
+                info = admission_info(r)
+                if info is None:
+                    continue
+                waited = self._outranked.get(id(r), 0)
+                ages[id(r)] = waited + 1
+                # aged requests rank first, FCFS among themselves —
+                # cheapest-suffix ordering must not starve them forever
+                rank = ((0, i, 0) if waited >= self.AGING_PLANS
+                        else (1, info.suffix, i))
+                infos.append((rank, r, info))
+            self._outranked = ages          # prune departed requests
+            infos.sort(key=lambda t: t[0])
+            slots_left = len(self.free_slots)
+            pages_left = None
+            if self.pm is not None:
+                # headroom: one decode-growth page per running sequence
+                # PLUS the pages still-prefilling sequences will need for
+                # their remaining chunks — an admission must not eat the
+                # pool out from under an older half-prefilled prompt
+                reserved = sum(
+                    -(-int(getattr(s, "prefill_remaining", 0) or 0)
+                      // self.pm.page_size)
+                    for s in self.running.values())
+                pages_left = (self.pm.available_pages
+                              - len(self.running) - reserved)
+            for _, r, info in infos:
+                if used >= token_budget:
+                    break
+                if info.n > slots_left:
+                    continue
+                if pages_left is not None:
+                    req_pages = (self._prompt_pages(info.need, info.n,
+                                                    info.shared) + info.n)
+                    if req_pages > pages_left:
+                        continue
+                    pages_left -= req_pages
+                slots_left -= info.n
+                first = max(1, min(info.suffix, chunk_size or info.suffix,
+                                   token_budget - used))
+                plan.admit.append((r, first))
+                used += first
+        plan.budget_used = used
+        return plan
+
+    # -- page accounting -------------------------------------------------
     def _prompt_pages(self, prompt_len: int, n: int, shared: bool) -> int:
         """Pages a choice set's prompts occupy.  ``shared``: one prompt
         prefill CoW-forked into the siblings (a tail fork page each);
@@ -49,15 +203,13 @@ class Scheduler:
                   shared: bool = True) -> bool:
         """Room for ``n`` sequences of (at most) ``prompt_len`` tokens —
         all-or-nothing for a request's whole choice set."""
-        if len(self.free_slots) < n or not self.waiting:
+        if len(self.free_slots) < n:
             return False
         if self.pm is not None:
             # prompt pages plus decode-growth headroom: one page for each
-            # new sequence and one per already-running sequence, so
-            # admission is strictly harder than the next decode step
-            # (avoids preempt/readmit thrash).  Prefix-cache-evictable
-            # pages count as available; eviction happens lazily on
-            # allocation.
+            # new sequence and one per already-running sequence.  Prefix-
+            # cache-evictable pages count as available; eviction happens
+            # lazily on allocation.
             pages_needed = (self._prompt_pages(prompt_len, n, shared)
                             + n + len(self.running))
             return self.pm.available_pages >= pages_needed
@@ -75,6 +227,7 @@ class Scheduler:
         return (self._prompt_pages(prompt_len, n, shared) + n
                 <= self.pm.num_pages)
 
+    # -- slot binding ----------------------------------------------------
     def admit(self, item, group=None) -> int:
         """Bind one sequence to a slot.  ``group`` ties sibling choices
         of one request together for preemption; it defaults to the item
@@ -82,6 +235,7 @@ class Scheduler:
         slot = self.free_slots.pop()
         self.running[slot] = item
         self._admit_seq += 1
+        self.n_admitted += 1
         self._admitted_at[slot] = self._admit_seq
         self._group_of[slot] = group if group is not None else item
         return slot
@@ -91,6 +245,19 @@ class Scheduler:
         self._admitted_at.pop(slot, None)
         self._group_of.pop(slot, None)
         self.free_slots.append(slot)
+
+    def release_group(self, group) -> List[Tuple[int, object]]:
+        """Release every slot admitted under ``group``; returns the
+        ``(slot, item)`` list the caller must free runner-side."""
+        released: List[Tuple[int, object]] = []
+        for slot in sorted(s for s in list(self.running)
+                           if self._group_of.get(s) is group):
+            item = self.running.pop(slot)
+            self._admitted_at.pop(slot, None)
+            self._group_of.pop(slot, None)
+            self.free_slots.append(slot)
+            released.append((slot, item))
+        return released
 
     def preempt_newest(self) -> Tuple[object, List[Tuple[int, object]]]:
         """Kick the most recently admitted *group* back to the queue.
@@ -103,15 +270,9 @@ class Scheduler:
             raise OutOfPages("nothing to preempt")
         newest = max(self.running, key=lambda s: self._admitted_at[s])
         group = self._group_of[newest]
-        released: List[Tuple[int, object]] = []
-        for slot in sorted(s for s in list(self.running)
-                           if self._group_of.get(s) is group):
-            item = self.running.pop(slot)
-            self._admitted_at.pop(slot, None)
-            self._group_of.pop(slot, None)
-            self.free_slots.append(slot)
-            released.append((slot, item))
+        released = self.release_group(group)
         self.waiting.appendleft(group)
+        self.n_preemptions += 1
         return group, released
 
     @property
@@ -120,7 +281,9 @@ class Scheduler:
 
     def stats(self) -> dict:
         out = {"waiting": len(self.waiting), "running": len(self.running),
-               "free_slots": len(self.free_slots)}
+               "free_slots": len(self.free_slots),
+               "plans": self.n_plans, "admitted": self.n_admitted,
+               "preemptions": self.n_preemptions}
         if self.pm is not None:
             out["pages"] = self.pm.stats()
         return out

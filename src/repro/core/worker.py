@@ -5,9 +5,13 @@ worker and exchanging ONLY OpenAI-style JSON messages over postMessage.
 Here the backend engine runs in a worker thread; the frontend handle
 serializes every request to a JSON string, the backend replies with JSON
 chunks — nothing else crosses the boundary (asserted in tests).
-Cancellation crosses it too: closing a frontend stream iterator posts an
-``{"kind": "abort"}`` message, so a browser tab's "stop generating"
-actually frees the backend's decode slots and KV pages.
+Cancellation crosses it too, for BOTH call styles: closing a frontend
+stream iterator posts ``{"kind": "abort"}``, and a blocking
+(non-streaming) call made with an explicit ``request_id`` can be
+cancelled from another thread via ``abort(request_id)`` — either way the
+backend's decode slots and KV pages are actually freed.  ``stats()``
+crosses the boundary the same JSON-only way (``{"kind": "stats"}``), so
+a frontend can watch scheduler/page/prefix-cache counters live.
 """
 from __future__ import annotations
 
@@ -72,11 +76,24 @@ class BackendWorker:
                     daemon=True).start()
             elif kind == "abort":
                 # the frontend closed its stream iterator ("stop
-                # generating"): cancel the engine request so its slots
-                # and KV pages are actually freed
+                # generating") or called abort(request_id) on a blocking
+                # call: cancel the engine request so its slots and KV
+                # pages are actually freed
                 rid = self._rids.get(msg.get("id"))
                 if rid is not None:
                     self.engine.abort(rid)
+            elif kind == "stats":
+                # never let a stats failure (unknown model, or a racy
+                # counter read against the live engine loop) kill the
+                # serve thread — every later frontend call would hang
+                try:
+                    data = self.engine.stats(msg.get("model"))
+                except Exception as e:
+                    self._post({"kind": "error", "id": msg.get("id"),
+                                "message": f"stats failed: {e}"})
+                else:
+                    self._post({"kind": "stats", "id": msg.get("id"),
+                                "data": data})
             elif kind == "ping":
                 self._post({"kind": "pong", "id": msg.get("id")})
 
@@ -132,12 +149,22 @@ class ServiceWorkerMLCEngine:
         self.port.to_worker.put(json.dumps(obj))
 
     def chat_completions_create(
-            self, request: Union[api.ChatCompletionRequest, dict]):
+            self, request: Union[api.ChatCompletionRequest, dict],
+            request_id: Optional[str] = None):
+        """Submit a chat completion over the JSON boundary.
+
+        Pass a ``request_id`` to make the call cancellable from another
+        thread via :meth:`abort` — the OpenAI-style escape hatch for
+        BLOCKING (non-streaming) calls, which have no iterator to close.
+        """
         if isinstance(request, api.ChatCompletionRequest):
             request = request.to_dict()
-        mid = uuid.uuid4().hex
+        mid = request_id or uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()
         with self._lock:
+            if mid in self._pending:
+                raise ValueError(
+                    f"request_id {mid!r} is already in flight")
             self._pending[mid] = q
         self._send({"kind": "chat_completion", "id": mid,
                     "request": request})
@@ -173,6 +200,29 @@ class ServiceWorkerMLCEngine:
             # are freed, not just the local queue
             if not done:
                 self._send({"kind": "abort", "id": mid})
+            self._drop(mid)
+
+    def abort(self, request_id: str):
+        """Cancel an in-flight request by the ``request_id`` it was
+        submitted with — works for blocking (non-streaming) calls too:
+        the backend finishes its choices with ``finish_reason="abort"``
+        and frees their slots/pages, and the blocked caller receives the
+        partial response instead of waiting out the generation."""
+        self._send({"kind": "abort", "id": request_id})
+
+    def stats(self, model: Optional[str] = None) -> dict:
+        """Engine/scheduler/runner counters, fetched over the boundary."""
+        mid = uuid.uuid4().hex
+        q: "queue.Queue[dict]" = queue.Queue()
+        with self._lock:
+            self._pending[mid] = q
+        try:
+            self._send({"kind": "stats", "id": mid, "model": model})
+            msg = _get(q, mid, "stats")
+            if msg["kind"] == "error":
+                raise RuntimeError(msg["message"])
+            return msg["data"]
+        finally:
             self._drop(mid)
 
     def _drop(self, mid: str):

@@ -12,6 +12,8 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_attention import (paged_prefill_attention
+                                           as _paged_prefill)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.w4a16_gemm import w4a16_gemm as _w4a16
 
@@ -32,6 +34,14 @@ def paged_attention(q, k_pages, v_pages, page_table, context_lens, *,
                     interpret: Optional[bool] = None):
     return _paged(q, k_pages, v_pages, page_table, context_lens,
                   scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, page_table, context,
+                            start, *, scale: Optional[float] = None,
+                            interpret: Optional[bool] = None):
+    return _paged_prefill(q, k_pages, v_pages, page_table, context, start,
+                          scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",

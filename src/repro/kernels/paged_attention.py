@@ -1,4 +1,4 @@
-"""Paged-attention decode — Pallas TPU kernel.
+"""Paged attention — Pallas TPU kernels (decode + chunked prefill).
 
 The TPU rethink of WebLLM's PagedAttention WebGPU kernel: the per-sequence
 page table is SCALAR-PREFETCHED (``PrefetchScalarGridSpec``) so the
@@ -7,14 +7,28 @@ right physical page — the gather never materializes in HBM.  Online
 softmax (flash-decode) accumulates across the sequential page grid
 dimension in VMEM scratch.
 
-Shapes:
+Two entry points share that structure:
+
+``paged_attention`` — one new token per sequence (decode):
     q            [B, H, D]
     k_pages      [P, page_size, Kv, D]   (physical page pool)
     v_pages      [P, page_size, Kv, D]
     page_table   [B, pages_per_seq] int32
     context_lens [B] int32
-Grid: (B, Kv, pages_per_seq); G = H // Kv query heads ride along per kv
-head (rows of an MXU-aligned [G_pad, D] tile).
+    Grid: (B, Kv, pages_per_seq); G = H // Kv query heads ride along per
+    kv head (rows of an MXU-aligned [G_pad, D] tile).
+
+``paged_prefill_attention`` — a fixed-size chunk of C consecutive query
+tokens of ONE sequence (chunked prefill):
+    q            [C, H, D]      (queries at positions start .. start+C-1)
+    page_table   [pages_per_seq] int32
+    context      scalar int32   (tokens in pages incl. this chunk's valid
+                                 suffix; keys at t >= context are masked)
+    start        scalar int32   (global position of q row 0)
+    Grid: (Kv, pages_per_seq); all C*G query rows of a kv head ride in
+    one [C*G, D] tile and the causal mask inside the chunk is
+    t <= start + row//G.  The final partial chunk is padded to C by the
+    caller; pad rows' outputs are garbage and must be ignored.
 """
 from __future__ import annotations
 
@@ -124,3 +138,113 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         interpret=interpret,
     )(page_table, context_lens, qg, k_pages, v_pages)
     return out.reshape(B, H, D)
+
+
+def _prefill_kernel(page_table_ref, meta_ref,      # scalar-prefetch refs
+                    q_ref, k_ref, v_ref, o_ref,    # blocks
+                    m_scr, l_scr, acc_scr, *,
+                    scale: float, page_size: int, n_group: int):
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = meta_ref[0]                  # keys at t >= ctx are invalid
+    start = meta_ref[1]                # global position of query row 0
+    page_start = pi * page_size
+
+    @pl.when(page_start < ctx)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # [C*G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [C*G, page]
+        # causal mask inside the chunk: query row r (chunk token r // G)
+        # sits at global position start + r//G and may only attend to
+        # keys at t <= that position (and within the valid context)
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // n_group
+        tpos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where((tpos < ctx) & (tpos <= qpos), s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(1) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, page_table: jax.Array,
+                            context: jax.Array, start: jax.Array, *,
+                            scale: Optional[float] = None,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked prefill: C query tokens of one sequence attend to its page
+    table with causal masking inside the chunk.  Returns [C, H, D].
+
+    ``context`` counts the valid tokens in the pages (including this
+    chunk's valid tokens — the caller scatters the chunk's K/V before
+    calling); ``start`` is the global position of query row 0.  Rows of
+    a padded final chunk (positions >= context) produce garbage output.
+    """
+    C, H, D = q.shape
+    _, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_table.shape[0]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # row r = c*G + g of a kv head's tile is chunk token c, group head g
+    qg = q.reshape(C, Kv, G, D).transpose(1, 0, 2, 3).reshape(Kv, C * G, D)
+    meta = jnp.stack([jnp.asarray(context, jnp.int32),
+                      jnp.asarray(start, jnp.int32)])
+
+    grid = (Kv, pages_per_seq)
+
+    def q_map(kv, pi, pt, meta):
+        return (kv, 0, 0)
+
+    def kv_map(kv, pi, pt, meta):
+        # scalar-prefetched page table routes the DMA to the physical page
+        return (pt[pi], 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C * G, D), q_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, C * G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, scale=scale,
+                          page_size=page_size, n_group=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Kv, C * G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, meta, qg, k_pages, v_pages)
+    return out.reshape(Kv, C, G, D).transpose(1, 0, 2, 3).reshape(C, H, D)

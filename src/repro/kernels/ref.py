@@ -66,6 +66,36 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     return out.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array, page_table: jax.Array,
+                                context, start, *,
+                                scale: Optional[float] = None) -> jax.Array:
+    """Chunked prefill attention over one sequence's paged KV cache.
+
+    q: [C, H, D] (chunk of queries at positions start..start+C-1);
+    k_pages/v_pages: [P, page_size, Kv, D]; page_table: [pages_per_seq].
+    Keys at t >= context are masked; query row i sees keys t <= start+i.
+    """
+    C, H, D = q.shape
+    P, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_table.shape[0]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+
+    k = k_pages[page_table].reshape(pages_per_seq * page_size, Kv, D)
+    v = v_pages[page_table].reshape(pages_per_seq * page_size, Kv, D)
+    qf = q.reshape(C, Kv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("ckgd,tkd->ckgt", qf,
+                        k.astype(jnp.float32)) * scale
+    t = jnp.arange(pages_per_seq * page_size)[None, :]
+    qpos = start + jnp.arange(C)[:, None]
+    mask = (t < context) & (t <= qpos)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("ckgt,tkd->ckgd", p, v.astype(jnp.float32))
+    return out.reshape(C, H, D).astype(q.dtype)
+
+
 def w4a16_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                    group: int) -> jax.Array:
     """x: [M,K] bf16; w_packed: [K//2, N] int8 (2 nibbles along K);

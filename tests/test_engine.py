@@ -2,6 +2,7 @@
 generation, worker JSON-only message-passing, usage stats."""
 import json
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -150,6 +151,60 @@ def test_worker_json_only_protocol():
     chunks = list(front.chat_completions_create(
         _req(max_tokens=4, stream=True)))
     assert chunks[-1].choices[0].finish_reason in ("stop", "length")
+    front.shutdown()
+
+
+def test_abort_before_submission_is_sticky(engine):
+    """An abort that races ahead of its chat_completions_create (the
+    worker posts both in port order, but the engine submission runs on
+    a spawned thread) is remembered: the late-arriving request starts
+    cancelled instead of generating to completion."""
+    rid = "race-abort-1"
+    assert engine.abort(rid) is False      # unknown yet -> remembered
+    resp = engine.chat_completions_create(_req(max_tokens=64), rid)
+    assert resp.choices[0].finish_reason == "abort"
+    assert resp.usage.completion_tokens == 0
+
+
+def test_worker_nonstreaming_abort_and_stats():
+    """A BLOCKING chat.completions.create over the worker boundary can be
+    cancelled via abort(request_id): the backend frees its slots/pages
+    and the blocked caller gets the partial response with
+    finish_reason="abort".  stats() crosses the same JSON boundary."""
+    backend = MLCEngine()
+    backend.load_model("llama", get_config("llama-3.1-8b", reduced=True),
+                       max_slots=2, max_context=128)
+    front = ServiceWorkerMLCEngine(backend)
+    # warmup (compile) so the abort races generation, not compilation
+    front.chat_completions_create(_req(max_tokens=2))
+
+    rid = "abortable-call-1"
+    result = {}
+
+    def call():
+        result["resp"] = front.chat_completions_create(
+            _req(max_tokens=4096, temperature=1.0, seed=5), request_id=rid)
+
+    t = threading.Thread(target=call)
+    t.start()
+    deadline = time.time() + 120
+    while time.time() < deadline:              # wait until it's running
+        if front.stats("llama")["scheduler"]["running"] > 0:
+            break
+        time.sleep(0.02)
+    front.abort(rid)
+    t.join(timeout=120)
+    assert not t.is_alive()
+    resp = result["resp"]
+    assert resp.choices[0].finish_reason == "abort"
+    assert resp.usage.completion_tokens < 4096
+    # the backend actually released the slot
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        if front.stats("llama")["scheduler"]["running"] == 0:
+            break
+        time.sleep(0.05)
+    assert front.stats("llama")["scheduler"]["running"] == 0
     front.shutdown()
 
 

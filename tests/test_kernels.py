@@ -63,6 +63,32 @@ def test_paged_attention_sweep(B, H, Kv, D, pages, psz, pps, rng_key):
                                np.asarray(expect, np.float32), atol=0.06)
 
 
+@pytest.mark.parametrize("C,H,Kv,D,pages,psz,pps", [
+    (8, 8, 2, 64, 16, 16, 4),
+    (16, 4, 4, 128, 32, 8, 6),
+    (4, 2, 1, 64, 8, 16, 2),
+])
+@pytest.mark.parametrize("start_frac", [0.0, 0.5])
+def test_paged_prefill_attention_sweep(C, H, Kv, D, pages, psz, pps,
+                                       start_frac, rng_key):
+    """Chunked prefill kernel vs oracle, incl. mid-sequence chunks and a
+    padded final chunk (only the valid rows are compared)."""
+    ks = jax.random.split(rng_key, 4)
+    q = _rand(ks[0], (C, H, D), jnp.bfloat16)
+    kp = _rand(ks[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks[3], (pps,), 0, pages)
+    start = int(start_frac * (pps * psz - C))
+    for valid in (C, max(1, C // 2)):      # full chunk + padded chunk
+        ctx = start + valid
+        out = ops.paged_prefill_attention(q, kp, vp, pt, ctx, start,
+                                          interpret=True)
+        expect = ref.paged_prefill_attention_ref(q, kp, vp, pt, ctx, start)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32)[:valid],
+            np.asarray(expect, np.float32)[:valid], atol=0.06)
+
+
 def test_paged_attention_single_token_context(rng_key):
     ks = jax.random.split(rng_key, 3)
     q = _rand(ks[0], (1, 4, 64), jnp.bfloat16)

@@ -90,6 +90,45 @@ def test_lru_eviction_under_page_pressure():
     assert pm.num_free_pages + cache.cached_pages == 8
 
 
+def test_max_cached_pages_proactive_eviction():
+    """With a page cap the cache evicts LRU leaves ON INSERT — its
+    footprint is bounded without waiting for allocation pressure."""
+    pm = _pm()
+    cache = PrefixCache(pm, max_cached_pages=2)
+    for base in (0, 100, 200):             # 3 seqs x 2 full pages each
+        s = pm.new_seq()
+        pm.append_tokens(s.seq_id, 8)
+        cache.insert([base + i for i in range(8)], pm.seqs[s.seq_id].pages)
+        pm.free_seq(s.seq_id)
+        assert cache.cached_pages <= 2     # enforced at every insert
+    assert cache.cap_evictions >= 4
+    st = cache.stats()
+    assert st["max_cached_pages"] == 2
+    assert st["cached_pages"] <= 2
+    # the survivors are the most recently inserted pages
+    full, _ = cache.match([200 + i for i in range(8)])
+    assert len(full) >= 1
+    # evicted pages actually returned to the free list
+    assert pm.num_free_pages + cache.cached_pages == 16
+
+
+def test_peek_len_is_pure():
+    """peek_len reports the cached-prefix length without perturbing LRU
+    clocks or hit/miss counters (the scheduler probes every step)."""
+    pm = _pm()
+    cache = PrefixCache(pm)
+    s = pm.new_seq()
+    ids = list(range(10))
+    pm.append_tokens(s.seq_id, 10)
+    cache.insert(ids, pm.seqs[s.seq_id].pages)
+    pm.free_seq(s.seq_id)
+    h, m, clock = cache.hits, cache.misses, cache._clock
+    assert cache.peek_len(ids + [99]) == 10
+    assert cache.peek_len(ids[:6]) == 4    # page-granular, like match()
+    assert cache.peek_len([7, 7, 7]) == 0
+    assert (cache.hits, cache.misses, cache._clock) == (h, m, clock)
+
+
 def test_out_of_pages_when_cache_cannot_help():
     pm = _pm(num_pages=4, page_size=4, max_slots=4, pages_per_seq=4)
     PrefixCache(pm)                            # installs reclaim hooks

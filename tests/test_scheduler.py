@@ -1,4 +1,7 @@
-"""Scheduler + PageManager invariants (hypothesis stateful-ish)."""
+"""Scheduler + PageManager invariants (hypothesis stateful-ish).
+
+The token-budget step planner is covered hypothesis-free in
+``test_step_plan.py`` so it always runs."""
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests skip without it

@@ -1,0 +1,135 @@
+"""Token-budget step planner (Scheduler.plan_step) — hypothesis-free
+so it always runs (test_scheduler.py is gated on hypothesis)."""
+from repro.core.paged_cache import PageManager
+from repro.core.scheduler import AdmissionInfo, Scheduler
+
+
+class _Running:
+    """Stub running sequence: duck-typed like engine._Seq."""
+
+    def __init__(self, next_token=None, prefill_remaining=0):
+        self.next_token = next_token
+        self.prefill_remaining = prefill_remaining
+
+
+def test_plan_mixes_decode_and_prefill_chunks():
+    s = Scheduler(max_slots=4, max_context=64)
+    a = _Running(next_token=1)
+    b = _Running(next_token=2)
+    c = _Running(prefill_remaining=10)     # mid-prefill
+    for x in (a, b, c):
+        s.admit(x)
+    plan = s.plan_step(6, chunk_size=4)
+    assert set(plan.decode) == {a, b}      # every pending decode token
+    assert plan.prefill == [(c, 4)]        # one chunk fills the rest
+    assert plan.budget_used == 6
+    # a bigger budget splits the remaining prompt into several chunks
+    plan = s.plan_step(20, chunk_size=4)
+    assert plan.prefill == [(c, 4), (c, 4), (c, 2)]
+
+
+def test_plan_resumed_seq_prefills_before_decoding():
+    """A preempted-mid-decode sequence resumes with next_token still
+    pending AND an incomplete re-prefill: it must be planned as prefill
+    chunks, never decode, until the cursor catches up — decoding early
+    would scatter the token's K/V mid-prompt."""
+    s = Scheduler(max_slots=2, max_context=64)
+    resumed = _Running(next_token=7, prefill_remaining=6)
+    s.admit(resumed)
+    plan = s.plan_step(8, chunk_size=4)
+    assert plan.decode == []
+    assert plan.prefill == [(resumed, 4), (resumed, 2)]
+    resumed.prefill_remaining = 0          # cursor caught up
+    plan = s.plan_step(8, chunk_size=4)
+    assert plan.decode == [resumed]
+    assert plan.prefill == []
+
+
+def test_plan_decode_never_starved():
+    s = Scheduler(max_slots=4, max_context=64)
+    seqs = [_Running(next_token=i) for i in range(3)]
+    for x in seqs:
+        s.admit(x)
+    s.admit(_Running(prefill_remaining=50))
+    plan = s.plan_step(1, chunk_size=4)    # budget below the decode load
+    assert len(plan.decode) == 3           # decode still runs in full
+    assert plan.prefill == []              # but nothing else fits
+
+
+def test_plan_admission_cheapest_uncached_suffix_first():
+    s = Scheduler(max_slots=4, max_context=64)
+    s.enqueue("expensive")                 # arrived first
+    s.enqueue("cheap")
+    infos = {"expensive": AdmissionInfo(need=40, suffix=40),
+             "cheap": AdmissionInfo(need=40, suffix=3)}
+    plan = s.plan_step(5, chunk_size=8, admission_info=infos.get)
+    # cache-aware prioritization beats FCFS: cheap admits first, and the
+    # leftover budget (5 - 3) still admits part of the expensive one
+    assert [r for r, _ in plan.admit] == ["cheap", "expensive"]
+    assert dict(plan.admit)["cheap"] == 3
+    assert dict(plan.admit)["expensive"] == 2
+    # tight budget: only the cheap one gets in
+    plan = s.plan_step(3, chunk_size=8, admission_info=infos.get)
+    assert [r for r, _ in plan.admit] == ["cheap"]
+
+
+def test_plan_admission_respects_slots_and_pages():
+    pm = PageManager(num_pages=8, page_size=4, max_slots=4,
+                     pages_per_seq=8)
+    s = Scheduler(max_slots=2, max_context=64, page_manager=pm)
+    s.admit(_Running(next_token=0))
+    s.enqueue("wide")                      # needs 3 slots > 1 free
+    s.enqueue("huge")                      # needs more pages than exist
+    s.enqueue("fits")
+    infos = {"wide": AdmissionInfo(need=4, n=3, suffix=4),
+             "huge": AdmissionInfo(need=30, suffix=30),
+             "fits": AdmissionInfo(need=4, suffix=4)}
+    plan = s.plan_step(16, chunk_size=8, admission_info=infos.get)
+    assert [r for r, _ in plan.admit] == ["fits"]
+
+
+def test_plan_skips_requests_probe_rejects():
+    s = Scheduler(max_slots=2, max_context=64)
+    s.enqueue("dead")
+    plan = s.plan_step(8, chunk_size=4, admission_info=lambda r: None)
+    assert plan.admit == []
+
+
+def test_plan_aging_beats_cheapest_first_starvation():
+    """A long cold prompt repeatedly outranked by cheap arrivals is
+    eventually AGED to the front — cheapest-suffix ordering must not
+    starve it forever (the liveness FCFS used to guarantee)."""
+    s = Scheduler(max_slots=1, max_context=64)     # one slot: strict race
+    long_req = ("long",)                           # distinct object per req
+    s.enqueue(long_req)
+
+    def probe(r):
+        return (AdmissionInfo(need=40, suffix=40) if r is long_req
+                else AdmissionInfo(need=4, suffix=1))
+
+    for i in range(s.AGING_PLANS):                 # cheap traffic wins...
+        cheap = ("cheap", i)
+        s.enqueue(cheap)
+        plan = s.plan_step(4, chunk_size=8, admission_info=probe)
+        assert plan.admit[0][0] is cheap
+        s.waiting.remove(cheap)                    # ...and gets admitted
+    plan = s.plan_step(4, chunk_size=8, admission_info=probe)
+    assert plan.admit[0][0] is long_req            # aged past the ranking
+
+
+def test_plan_admission_reserves_midprefill_pages():
+    """Admissions must not plan away the pages an older half-prefilled
+    sequence still needs for its remaining chunks."""
+    pm = PageManager(num_pages=8, page_size=4, max_slots=4,
+                     pages_per_seq=8)
+    s = Scheduler(max_slots=3, max_context=64, page_manager=pm)
+    s.admit(_Running(prefill_remaining=12))        # needs 3 more pages
+    s.enqueue("new")
+    # pool: 8 avail - 1 decode headroom - 3 reserved = 4 left; a prompt
+    # needing 4 pages (+1 growth) must be refused, a 3-page one admitted
+    infos = {"new": AdmissionInfo(need=16, suffix=16)}
+    plan = s.plan_step(32, chunk_size=4, admission_info=infos.get)
+    assert plan.admit == []
+    infos["new"] = AdmissionInfo(need=12, suffix=12)
+    plan = s.plan_step(32, chunk_size=4, admission_info=infos.get)
+    assert [r for r, _ in plan.admit] == ["new"]

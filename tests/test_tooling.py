@@ -1,6 +1,7 @@
-"""Tier-1 tree hygiene + example smoke: scripts/check_tree.sh (no
-tracked bytecode, src compiles) and the tool-calling agent-loop example
-run end to end."""
+"""Tier-1 tree hygiene + tooling smoke: scripts/check_tree.sh (no
+tracked bytecode, src compiles), the tool-calling agent-loop example,
+and the benchmark registry in ``--smoke`` mode (tiny configs, few
+steps) so benchmark scripts can't silently bit-rot."""
 import os
 import subprocess
 import sys
@@ -9,15 +10,39 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 
 
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
 def test_check_tree():
     subprocess.run(["bash", str(ROOT / "scripts" / "check_tree.sh")],
                    check=True, cwd=ROOT, timeout=300)
 
 
 def test_tool_calling_example_smoke():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (str(ROOT / "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
     subprocess.run([sys.executable,
                     str(ROOT / "examples" / "tool_calling.py")],
-                   check=True, cwd=ROOT, env=env, timeout=580)
+                   check=True, cwd=ROOT, env=_env(), timeout=580)
+
+
+def test_benchmarks_smoke():
+    """The whole registry must run (exit 0) in --smoke mode, and every
+    module must emit at least one CSV row (SKIP rows count — silently
+    dropping a module is the bit-rot this guards against)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        check=True, cwd=ROOT, env=_env(), timeout=580,
+        capture_output=True, text=True).stdout
+    lines = [ln for ln in out.strip().splitlines()[1:] if ln]
+    assert len(lines) >= 6, out                # every registry module ran
+    assert not any(",ERROR," in ln for ln in lines), out
+    prefixes = {ln.split("/")[0].split(",")[0] for ln in lines}
+    for mod in ("table1_retention", "engine", "grammar", "kernel",
+                "prefix_cache", "roofline"):
+        assert mod in prefixes, (mod, out)
+    # the new latency report is part of the contract
+    assert any(ln.startswith("engine/mixed_ttft_p50") for ln in lines), out
+    assert any(ln.startswith("engine/mixed_itl_p95") for ln in lines), out
