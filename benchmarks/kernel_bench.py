@@ -67,6 +67,21 @@ def run(smoke: bool = False) -> list:
     rows.append((f"kernel/paged_prefill_chunk{C}", us,
                  f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
 
+    # ragged multi-sequence step (fused mixed decode+prefill class):
+    # Bq rows — half decode (length 1), half chunks of C — in ONE call
+    Bq = 4 if smoke else 8
+    qr = jax.random.normal(ks[0], (Bq, C, H, D),
+                           jnp.float32).astype(jnp.bfloat16)
+    ptB = jax.random.randint(key, (Bq, pps), 0, P_)
+    starts = jnp.asarray([(pps * psz - C) if b % 2 else (pps * psz - 1)
+                          for b in range(Bq)], jnp.int32)
+    ctxs = jnp.asarray([pps * psz] * Bq, jnp.int32)
+    f2c = jax.jit(lambda *a: ref.paged_ragged_attention_ref(*a))
+    us = _time(f2c, qr, kp, vp, ptB, ctxs, starts, iters=iters)
+    flops = 2 * 2 * Bq * C * H * pps * psz * D
+    rows.append((f"kernel/paged_ragged_{Bq}x{C}", us,
+                 f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
+
     # w4a16 gemm (quantized matmul class)
     M, K, N = (32, 256, 256) if smoke else (128, 2048, 2048)
     x = (jax.random.normal(ks[0], (M, K), jnp.float32) * 0.1).astype(jnp.bfloat16)

@@ -3,17 +3,21 @@
 Token-budget continuous batching: every engine step executes ONE
 ``Scheduler.plan_step`` — a mixed plan of decode tokens (one per running
 sequence) plus chunked prefill work filling the rest of the per-step
-token budget.  On the paged backend a prompt never prefills
-monolithically: a sequence in the PREFILLING state carries a chunk
-cursor (``_Seq.prefill_ids``/``prefill_pos``) and streams through
-``prefill_chunk`` across as many steps as the budget allows, so a long
-cold prompt admits once and then interleaves with running decoders
-instead of head-of-line blocking them — TTFT of everything else stays
-proportional to budget share, not to the newcomer's prompt length.
-Admission is prefix-cache-aware (cheapest uncached suffix first) and no
-longer limited to one request per step.  Preemption mid-prefill
-publishes the cursor's completed chunks to the prefix cache, so the
-re-queued request resumes from where it stopped.
+token budget — and on the paged backend the whole plan dispatches as ONE
+fused ragged attention kernel call (``_execute_plan_fused`` ->
+``PagedEngineBackend.run_step``): decode tokens are length-1 rows and
+prefill chunks multi-token rows of the same packed ragged layout the
+scheduler emits.  A prompt never prefills monolithically there: a
+sequence in the PREFILLING state carries a chunk cursor
+(``_Seq.prefill_ids``/``prefill_pos``) and streams ragged rows across as
+many steps as the budget allows, so a long cold prompt admits once and
+then interleaves with running decoders instead of head-of-line blocking
+them — TTFT of everything else stays proportional to budget share, not
+to the newcomer's prompt length.  Admission is prefix-cache-aware
+(cheapest uncached suffix first) and not limited to one request per
+step.  Preemption mid-prefill publishes the cursor's completed chunks to
+the prefix cache, so the re-queued request resumes from where it
+stopped.
 
 Request lifecycle: one request owns ``n`` independent choice sequences
 (:class:`_Request` -> ``n`` x :class:`_Seq`).  On the paged backend the
@@ -139,6 +143,7 @@ class _LoadedModel:
     backend: str = "dense"
     token_budget: int = 32            # model-forward tokens per step
     prefill_chunk_size: int = 16      # chunked-prefill granularity (paged)
+    exec_steps: int = 0               # engine steps that dispatched work
     image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
 
 
@@ -173,14 +178,50 @@ class MLCEngine:
                    prefill_chunk_size: int = 16,
                    token_budget: Optional[int] = None,
                    max_cached_pages: Optional[int] = None):
-        """Load a model.  ``token_budget`` caps model-forward tokens per
-        engine step (decode tokens + prefill-chunk tokens); the default —
-        ``max_slots + prefill_chunk_size`` on the paged backend,
-        ``max_slots + 1`` on dense — always decodes every running
-        sequence and advances one prefill chunk (dense: admits one
-        monolithic prefill).  ``prefill_chunk_size`` is the chunked
-        paged-prefill granularity; ``max_cached_pages`` caps the prefix
-        cache with proactive LRU eviction."""
+        """Load a model under ``name`` for ``chat_completions_create``.
+
+        Backends: ``"paged"`` serves every request through the paged KV
+        cache with radix prefix caching, CoW ``n``-way sampling, and
+        fused ragged steps (one attention kernel call per engine step);
+        ``"dense"`` (default) keeps a per-slot dense KV cache and
+        prefills monolithically.  The paged backend requires a pure-GQA
+        decoder (``paged_supported``) and rejects ``quantize`` and
+        vision inputs.
+
+        Serving knobs (all token counts, not bytes):
+
+        ``token_budget``
+            Model-forward tokens per engine step — decode tokens plus
+            prefill-chunk tokens.  The default,
+            ``max_slots + prefill_chunk_size`` on paged (``max_slots +
+            1`` on dense), always decodes every running sequence and
+            advances one prefill chunk per step.  Raising it speeds
+            long-prompt prefill at the cost of inter-token latency for
+            running streams; decode tokens are planned even when they
+            alone exceed the budget, so streams never starve.
+        ``prefill_chunk_size``
+            Granularity (tokens) at which a prompt's uncached suffix is
+            chunked across steps.  A long prompt admits once and then
+            interleaves with running decoders — TTFT of other requests
+            stays proportional to budget share, not to the newcomer's
+            prompt length.
+        ``max_cached_pages``
+            Cap (pages of ``page_size`` tokens each) on the radix
+            prefix cache, enforced with proactive LRU eviction on
+            insert; ``None`` means bounded only by the page pool.
+        ``page_size`` / ``num_pages``
+            Tokens per physical KV page, and the pool size (default:
+            ``(max_slots + 2) * ceil(max_context / page_size)`` — every
+            slot at full context plus cache headroom).
+
+        Failure modes: a prompt that cannot fit the page pool even
+        alone fails its request with ``RuntimeError`` instead of
+        livelocking; transient pool pressure raises
+        :class:`repro.core.paged_cache.OutOfPages` internally and is
+        absorbed by preemption (the victim republishes its progress and
+        resumes).  Callers blocked on a stalled engine get a
+        ``TimeoutError`` naming the request id after
+        ``STALL_TIMEOUT_S`` (300 s) without progress."""
         if tokenizer is None:
             tokenizer = ByteBPETokenizer.train(
                 ["hello world this is a tiny corpus for the demo engine "
@@ -391,22 +432,34 @@ class MLCEngine:
     def _step_model(self, name: str, lm: _LoadedModel) -> bool:
         """One planned step: decode every running sequence, then spend
         the remaining token budget on prefill chunks and admissions
-        (see ``Scheduler.plan_step``)."""
+        (see ``Scheduler.plan_step``).
+
+        On a backend with ``supports_ragged_step`` (paged) the WHOLE
+        plan — every decode token, every in-flight prefill chunk, and
+        every admission's first chunk — executes as ONE fused ragged
+        kernel call (``_execute_plan_fused``); otherwise (dense) the
+        legacy path prefills admissions monolithically and batch-decodes
+        in a separate dispatch."""
         sched = lm.scheduler
         busy = self._reap_aborted(lm)
         busy |= self._prune_waiting(lm)
-        chunked = getattr(lm.runner, "supports_chunked_prefill", False)
-        chunk = lm.prefill_chunk_size if chunked else None
+        # chunk planning and fused execution are ONE capability: only a
+        # ragged-step backend has an executor for planned prefill chunks
+        # (the legacy arm below prefills monolithically), so a backend
+        # advertising chunked-but-not-fused must not get chunks planned
+        fused = getattr(lm.runner, "supports_ragged_step", False)
+        assert fused == getattr(lm.runner, "supports_chunked_prefill",
+                                False), "capability flags must agree"
+        chunk = lm.prefill_chunk_size if fused else None
         plan = sched.plan_step(
             lm.token_budget, chunk_size=chunk,
             admission_info=lambda r: self._probe(lm, r))
-        # in-flight prefills run BEFORE admissions so an older
-        # half-prefilled prompt claims its pages first — a newcomer must
-        # not starve it into an OutOfPages preempt/restart loop
-        for seq, n in plan.prefill:
-            busy |= self._run_prefill_chunk(lm, seq, n)
+        if fused:
+            return busy | self._execute_plan_fused(lm, plan)
+        # ---- legacy split path (dense backend) ----
+        work = False
         for r, first in plan.admit:
-            busy |= self._admit_request(lm, r, first)
+            work |= self._admit_request(lm, r, first)
         # ---- batched decode over active slots ----
         active = [s for s in plan.decode
                   if s.slot >= 0 and s.finish_reason is None
@@ -418,18 +471,7 @@ class MLCEngine:
             try:
                 logits = lm.runner.decode(toks, poss)
             except OutOfPages:
-                # graceful degradation: kick the newest request (ALL of
-                # its sibling choices, so they stay consistent) back to
-                # the queue and drop its pages; survivors retry next
-                # step.  A victim preempted mid-prefill publishes its
-                # cursor's tokens so resumption adopts them from the
-                # prefix cache instead of recomputing.
-                _, released = sched.preempt_newest()
-                for slot, seq in released:
-                    midprefill = (getattr(seq, "prefill_ids", None)
-                                  is not None and seq.fork_of is None)
-                    lm.runner.release(slot, publish=midprefill)
-                    self._unbind(seq)
+                self._preempt_newest(lm)
                 return True
             for seq in active:
                 if seq.finish_reason is not None or seq.slot < 0:
@@ -437,8 +479,160 @@ class MLCEngine:
                 seq.generated.append(seq.next_token)
                 seq.pos += 1
                 self._consume_logits(lm, seq, logits[seq.slot])
-            busy = True
-        return busy
+            work = True
+        if work:
+            lm.exec_steps += 1
+        return busy | work
+
+    def _preempt_newest(self, lm: _LoadedModel):
+        """Graceful degradation on OutOfPages: kick the newest request
+        (ALL of its sibling choices, so they stay consistent) back to
+        the queue and drop its pages; survivors retry next step.  A
+        victim preempted mid-prefill publishes its cursor's tokens so
+        resumption adopts them from the prefix cache instead of
+        recomputing."""
+        _, released = lm.scheduler.preempt_newest()
+        for slot, seq in released:
+            midprefill = (getattr(seq, "prefill_ids", None)
+                          is not None and seq.fork_of is None)
+            lm.runner.release(slot, publish=midprefill)
+            self._unbind(seq)
+
+    def _execute_plan_fused(self, lm: _LoadedModel, plan) -> bool:
+        """The single plan-execution path: revalidate the planner's
+        ragged layout, bind this step's admissions so their first chunks
+        join the same batch, and dispatch EVERYTHING (decode rows +
+        prefill chunks) as one fused ``run_step`` — one attention kernel
+        invocation per engine step.
+
+        In-flight prefill rows precede admissions in the layout, so an
+        older half-prefilled prompt claims its pages first — a newcomer
+        must not starve it into an OutOfPages preempt/restart loop."""
+        sched = lm.scheduler
+        rows: List[tuple] = []                 # (seq, tokens, kind)
+        for row in plan.layout.rows:
+            seq = row.seq
+            if row.kind == "decode":
+                if (seq.slot >= 0 and seq.finish_reason is None
+                        and seq.next_token is not None
+                        and seq.prefill_remaining == 0):
+                    rows.append((seq, [seq.next_token], "decode"))
+                continue
+            if (seq.slot < 0 or seq.finish_reason is not None
+                    or seq.request.aborted or seq.prefill_remaining <= 0):
+                continue                       # reaped/finished since planning
+            n = min(row.n, seq.prefill_remaining)
+            toks = seq.prefill_ids[seq.prefill_pos:seq.prefill_pos + n]
+            rows.append((seq, toks, "prefill"))
+        for r, first in plan.admit:
+            rows.extend(self._bind_admission(lm, r, first))
+        if not rows:
+            return False
+        try:
+            logits = lm.runner.run_step(
+                [(s.slot, toks, kind) for s, toks, kind in rows])
+        except OutOfPages:
+            self._preempt_newest(lm)
+            return True
+        except Exception as e:
+            # a poisoned step must not kill the loop thread (callers
+            # would hang until the stall timeout): the fused batch can't
+            # attribute the fault to one row, so fail every request it
+            # carried and keep the engine alive for the rest
+            for r in {id(s.request): s.request for s, _, _ in rows}.values():
+                self._evict_request(lm, r, publish=False)
+                self._fail(r, e)
+            return True
+        lm.exec_steps += 1       # before logit consumption wakes callers:
+        #                          stats() must never see calls > steps
+        for seq, toks, kind in rows:
+            if seq.finish_reason is not None or seq.slot < 0:
+                continue                       # finished/aborted mid-loop
+            if kind == "decode":
+                seq.generated.append(seq.next_token)
+                seq.pos += 1
+                self._consume_logits(lm, seq, logits[seq.slot])
+            else:
+                seq.prefill_pos += len(toks)
+                if seq.prefill_remaining == 0:
+                    try:
+                        self._complete_prefill(lm, seq, logits[seq.slot])
+                    except Exception as e:     # CoW fork ran out of pages
+                        self._recover_prefill_failure(lm, seq.request, e)
+        return True
+
+    def _claim_admission(self, lm: _LoadedModel, r: _Request):
+        """Take a planned admission off the queue and vet its choice
+        set against CURRENT conditions (deliberately recomputed rather
+        than carried over from ``_probe``: the set can shrink via aborts
+        between planning and here, and pages/slots can vanish).  Returns
+        ``(pending, shared)`` when slots may be bound now; ``None`` when
+        the request vanished, resolved empty, or no longer fits (then
+        it is re-queued at the front for retry)."""
+        sched = lm.scheduler
+        pending = r.pending()
+        try:
+            sched.waiting.remove(r)
+        except ValueError:
+            return None                        # reaped since planning
+        if not pending:
+            return None
+        need = max(len(r.prompt_ids) + len(s.generated) for s in pending)
+        shared = self._sharable(lm, pending)
+        if not sched.can_admit(need, len(pending), shared):
+            sched.waiting.appendleft(r)        # conditions changed; retry
+            return None
+        if r.t_admit == 0.0:
+            r.t_admit = time.time()
+        return pending, shared
+
+    def _bind_admission(self, lm: _LoadedModel, r: _Request,
+                        first: int) -> List[tuple]:
+        """Bind a planned admission's unfinished choice set to slots
+        (all-or-nothing) and return its first prefill rows — up to
+        ``first`` tokens — for the fused step.  Host-side only: no
+        kernel runs here; the returned rows execute with the rest of
+        the plan.  Returns [] when the request vanished, conditions
+        changed, or binding failed (failure rolls back, publishes any
+        adopted chunks, and requeues — see
+        ``_recover_prefill_failure``)."""
+        sched = lm.scheduler
+        claim = self._claim_admission(lm, r)
+        if claim is None:
+            return []
+        pending, shared = claim
+        rows: List[tuple] = []
+        try:
+            if shared:
+                s0 = pending[0]
+                self._bind_prefill(lm, r, s0, list(r.prompt_ids))
+                for s in pending[1:]:
+                    s.slot = sched.admit(s, group=r)
+                    s.fork_of = s0
+                targets = [s0]
+            else:
+                # resumed choices have diverged generated suffixes, so
+                # each re-prefills its own prompt+generated copy (the
+                # prefix cache usually makes this cheap)
+                for s in pending:
+                    self._bind_prefill(lm, r, s, r.prompt_ids + s.generated)
+                targets = pending
+        except Exception as e:
+            self._recover_prefill_failure(lm, r, e)
+            return []
+        # spend this step's admission allotment as ragged rows (cursor
+        # advances only after the fused step actually runs them)
+        budget = first
+        for s in targets:
+            if budget <= 0:
+                break
+            n = min(budget, s.prefill_remaining)
+            if n > 0:
+                rows.append(
+                    (s, s.prefill_ids[s.prefill_pos:s.prefill_pos + n],
+                     "prefill"))
+                budget -= n
+        return rows
 
     def _prune_waiting(self, lm: _LoadedModel) -> bool:
         """Drop queued requests that can never run: empty choice sets
@@ -552,59 +746,17 @@ class MLCEngine:
 
     def _admit_request(self, lm: _LoadedModel, r: _Request,
                        first: int) -> bool:
-        """Admit a planned request's unfinished choice set (all slots
-        bound all-or-nothing) and run its first ``first`` prefill tokens.
-
-        Chunked backend (paged): every sequence enters PREFILLING with a
-        chunk cursor; a fresh ``n>1`` request binds one prefilling
-        sequence plus ``fork_of`` siblings that CoW-fork when the prompt
-        completes.  Dense backend: monolithic prefill per sequence, done
-        within this step.  OutOfPages rolls everything back, publishes
-        any completed chunks to the prefix cache, and re-queues the
-        request at the front (or fails it if nothing else is running)."""
-        sched = lm.scheduler
-        pending = r.pending()
-        try:
-            sched.waiting.remove(r)
-        except ValueError:
-            return False                       # reaped since planning
-        if not pending:
-            return True
-        # deliberately recomputed rather than carried over from _probe:
-        # the choice set can shrink (aborts) between planning and here
-        need = max(len(r.prompt_ids) + len(s.generated) for s in pending)
-        shared = self._sharable(lm, pending)
-        if not sched.can_admit(need, len(pending), shared):
-            sched.waiting.appendleft(r)        # conditions changed; retry
+        """Dense-backend admission: bind the unfinished choice set (all
+        slots all-or-nothing) and prefill each sequence monolithically
+        within this step.  Failures roll back and surface to the caller
+        (see ``_recover_prefill_failure``).  Ragged-step backends admit
+        through ``_bind_admission`` instead."""
+        claim = self._claim_admission(lm, r)
+        if claim is None:
             return False
-        if r.t_admit == 0.0:
-            r.t_admit = time.time()
-        chunked = getattr(lm.runner, "supports_chunked_prefill", False)
+        pending, _ = claim
         try:
-            if chunked:
-                if shared:
-                    s0 = pending[0]
-                    self._bind_prefill(lm, r, s0, list(r.prompt_ids))
-                    for s in pending[1:]:
-                        s.slot = sched.admit(s, group=r)
-                        s.fork_of = s0
-                else:
-                    # resumed choices have diverged generated suffixes,
-                    # so each re-prefills its own prompt+generated copy
-                    # (the prefix cache usually makes this cheap)
-                    for s in pending:
-                        self._bind_prefill(lm, r, s,
-                                           r.prompt_ids + s.generated)
-                # spend this step's admission allotment immediately
-                budget = first
-                for s in pending:
-                    while budget > 0 and s.prefill_remaining > 0:
-                        n = min(budget, lm.prefill_chunk_size,
-                                s.prefill_remaining)
-                        self._prefill_chunk_inner(lm, s, n)
-                        budget -= n
-            else:
-                self._prefill_dense(lm, r, pending)
+            self._prefill_dense(lm, r, pending)
         except Exception as e:
             self._recover_prefill_failure(lm, r, e)
         return True
@@ -641,16 +793,6 @@ class MLCEngine:
             r.cached_tokens,
             int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
 
-    def _prefill_chunk_inner(self, lm: _LoadedModel, seq: _Seq, n: int):
-        """Advance one sequence's chunk cursor by ``n`` tokens; completes
-        the prefill (fork siblings, sample the first token) when the
-        cursor reaches the end."""
-        tokens = seq.prefill_ids[seq.prefill_pos:seq.prefill_pos + n]
-        logits = lm.runner.prefill_chunk(seq.slot, tokens)
-        seq.prefill_pos += len(tokens)
-        if seq.prefill_remaining == 0:
-            self._complete_prefill(lm, seq, logits)
-
     def _complete_prefill(self, lm: _LoadedModel, seq: _Seq,
                           logits: np.ndarray):
         """The last prompt chunk landed: CoW-fork any waiting siblings
@@ -674,23 +816,6 @@ class MLCEngine:
                 s.role_sent = True
             if s.next_token is None:           # fresh (not resumed) seq
                 self._consume_logits(lm, s, logits)
-
-    def _run_prefill_chunk(self, lm: _LoadedModel, seq: _Seq,
-                           n: int) -> bool:
-        """Execute one planned prefill chunk of a running PREFILLING
-        sequence.  OutOfPages preempts the owning request — its
-        completed chunks are published to the prefix cache and it
-        re-queues at the front, resuming from the cursor later."""
-        r = seq.request
-        if (seq.slot < 0 or seq.finish_reason is not None or r.aborted
-                or seq.prefill_remaining <= 0):
-            return False
-        try:
-            self._prefill_chunk_inner(lm, seq,
-                                      min(n, seq.prefill_remaining))
-        except Exception as e:
-            self._recover_prefill_failure(lm, r, e)
-        return True
 
     def _prefill_dense(self, lm: _LoadedModel, r: _Request,
                        pending: List[_Seq]):
@@ -958,11 +1083,29 @@ class MLCEngine:
         return item
 
     def stats(self, model: Optional[str] = None) -> dict:
-        """Engine/runner/cache counters, per model (or all models)."""
+        """Live engine/scheduler/runner/cache counters.
+
+        With ``model=None``, a ``{model_name: stats}`` dict for every
+        loaded model; otherwise one model's dict::
+
+            {"backend": "paged" | "dense",
+             "engine":    {"exec_steps": ...},   # steps that dispatched work
+             "scheduler": {"waiting": ..., "running": ..., "plans": ...,
+                           "admitted": ..., "preemptions": ..., "pages": ...},
+             "runner":    {"attn_kernel_calls": ..., "ragged_steps": ...,
+                           "prefill_tokens": ..., "decode_tokens": ...,
+                           "pages": {...}, "prefix_cache": {...}, ...}}
+
+        ``runner.attn_kernel_calls / engine.exec_steps`` is the
+        dispatch-fusion figure of merit — 1.0 on the paged backend.
+        Safe to call concurrently with the engine loop (counters are
+        read racily, never mutated here).  Raises ``KeyError`` for an
+        unknown model name."""
         if model is None:
             return {name: self.stats(name) for name in list(self.models)}
         lm = self.models[model]
         return {"backend": lm.backend,
+                "engine": {"exec_steps": lm.exec_steps},
                 "scheduler": lm.scheduler.stats(),
                 "runner": lm.runner.stats()}
 

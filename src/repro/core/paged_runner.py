@@ -1,33 +1,36 @@
-"""PagedModelRunner: chunked prefill + decode through the paged KV cache.
+"""PagedModelRunner: ragged fused steps through the paged KV cache.
 
 The TPU-native serving path (WebLLM's PagedAttention analogue): attention
 layers keep physical page pools ``[P, page_size, Kv, Dh]``.  EVERY token
-— prompt or completion, cold or cache-hit — flows through the same two
-paged steps:
+— prompt or completion, cold or cache-hit — flows through the same paged
+machinery, and a whole engine step dispatches as ONE kernel call:
 
-* ``prefill_chunk(sid, tokens)``: a fixed-size chunk of up to
-  ``chunk_size`` consecutive prompt tokens.  The chunk's K/V are
-  scattered into the sequence's pages and attention runs via the
-  multi-token ``kernels.paged_prefill_attention`` kernel (causal masking
-  inside the chunk) in one jitted step.  The final partial chunk is
-  padded; pad rows write into a dedicated trash page and their logits
-  are ignored.  A long prompt is a *sequence of chunks* that the engine
-  can interleave with decode steps of other sequences — prefill no
-  longer head-of-line blocks running decoders.
-* ``decode(seq_tokens)``: one batched token per running sequence via
-  ``kernels.paged_attention``.
+* ``run_step(rows)``: the fused ragged step.  Each row is a chunk of
+  consecutive tokens of one sequence — a decode token is a length-1 row,
+  a prefill chunk up to ``chunk_size`` (or more, budget permitting)
+  tokens.  All rows' K/V are scattered into their sequences' pages and
+  attention runs via the multi-sequence ``kernels.paged_ragged_attention``
+  kernel (per-row causal masks against each sequence's own cursor) in
+  one jitted step.  Rows are padded to a (B, C) bucket so the jit
+  variant count stays bounded; pad K/V writes land in a dedicated trash
+  page.  This is what collapses the former one-kernel-call-per-sequence
+  dispatch into one call per engine step.
+* ``prefill_chunk(sid, tokens)`` / ``decode(seq_tokens)``: the per-kind
+  single calls (one sequence's chunk / one batched decode token per
+  sequence) — kept as the reference path for tests and non-interleaving
+  callers; ``run_step`` subsumes both on the engine path.
 
 There is no dense-prefill-then-scatter path anymore and no decode-per-
 suffix-token replay: ``begin_seq`` adopts the longest prefix already in
 the :class:`repro.core.prefix_cache.PrefixCache` (sharing full pages
 zero-copy, forking a partial tail page copy-on-write) and the uncached
-suffix runs through ``prefill_chunk``.  ``prefill_seq`` is a thin loop
-over chunks for callers that want the whole prompt at once.
+suffix runs through ragged rows / ``prefill_chunk``.  ``prefill_seq`` is
+a thin loop over chunks for callers that want the whole prompt at once.
 
 Page bookkeeping lives in :class:`repro.core.paged_cache.PageManager`.
 :class:`PagedEngineBackend` wraps the runner in the slot-keyed unified
 runner interface ``MLCEngine`` drives, adding the chunked-prefill calls
-(``begin_prefill``/``prefill_chunk``) the step-plan scheduler uses.
+(``begin_prefill``/``run_step``) the step-plan scheduler uses.
 """
 from __future__ import annotations
 
@@ -41,7 +44,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import OutOfPages, PageManager
 from repro.core.prefix_cache import PrefixCache
-from repro.kernels.ops import paged_attention, paged_prefill_attention
+from repro.kernels.ops import (paged_attention, paged_prefill_attention,
+                               paged_ragged_attention)
 from repro.models import model
 from repro.models.attention import _project, _qk_norm
 from repro.models.layers import apply_rope, mlp, rmsnorm
@@ -82,9 +86,11 @@ class PagedModelRunner:
         self.n_prefill_tokens = 0         # real (non-pad) tokens prefilled
         self.n_decode_steps = 0           # batched decode steps
         self.n_decode_tokens = 0          # tokens decoded across the batch
+        self.n_ragged_steps = 0           # fused ragged kernel steps
         #: bounded trace of jitted steps, for liveness assertions/tests:
-        #: ("decode", batch_size) | ("chunk", n_valid_tokens)
-        self.step_log: Deque[Tuple[str, int]] = deque(maxlen=4096)
+        #: ("decode", batch_size) | ("chunk", n_valid_tokens) |
+        #: ("ragged", n_decode_rows, n_prefill_tokens)
+        self.step_log: Deque[Tuple] = deque(maxlen=4096)
         if params is None:
             params = init_params(model.params_def(cfg),
                                  jax.random.PRNGKey(seed))
@@ -100,6 +106,10 @@ class PagedModelRunner:
         self._step = jax.jit(self._decode_step, donate_argnums=(1, 2))
         self._chunk_step = jax.jit(self._prefill_chunk_step,
                                    donate_argnums=(1, 2))
+        # one jit object: variants are cached per traced (B, C) bucket;
+        # run_step pads both to powers of two so the count stays bounded
+        # at O(log(max_slots) * log(max chunk tokens))
+        self._ragged_jit = jax.jit(self._ragged_step, donate_argnums=(1, 2))
 
         def _copy(k, v, src, dst):
             return (k.at[:, dst].set(k[:, src]),
@@ -194,6 +204,55 @@ class PagedModelRunner:
         else:
             logits = x @ params["lm_head"]
         return logits[0], k_pages, v_pages
+
+    def _ragged_step(self, params, k_pages, v_pages, tokens, pos,
+                     page_tables, contexts, starts, lengths,
+                     page_idx, page_off):
+        """One fused ragged step over B packed rows of C slots each.
+
+        tokens/pos/page_idx/page_off [B*C] (row b occupies the slice
+        ``b*C : (b+1)*C``; slots past the row's valid length are pads);
+        page_tables [B, pps]; contexts/starts/lengths [B].  K/V for all
+        B*C slots are scattered into pages (pads land in the trash page)
+        and every row attends to its OWN page-table row with per-row
+        causal masking — one attention kernel invocation per layer for
+        the whole step.  Returns each row's last-valid-slot logits
+        [B, V]."""
+        cfg = self.cfg
+        B = page_tables.shape[0]
+        N = tokens.shape[0]
+        C = N // B
+        x = jnp.take(params["embed"], tokens[None], axis=0)    # [1,N,D]
+        layers = self._layer_params_traced(params)
+        for li, p in enumerate(layers):
+            h = rmsnorm(x, p["mixer_norm"], cfg.norm_eps)
+            q = _project(cfg, p["attn"], h, "q", cfg.n_heads)  # [1,N,H,Dh]
+            k = _project(cfg, p["attn"], h, "k", cfg.n_kv_heads)
+            v = _project(cfg, p["attn"], h, "v", cfg.n_kv_heads)
+            q, k = _qk_norm(cfg, p["attn"], q, k)
+            q = apply_rope(q, pos[None, :], cfg.rope_theta)
+            k = apply_rope(k, pos[None, :], cfg.rope_theta)
+            k_pages = k_pages.at[li, page_idx, page_off].set(
+                k[0].astype(k_pages.dtype))
+            v_pages = v_pages.at[li, page_idx, page_off].set(
+                v[0].astype(v_pages.dtype))
+            att = paged_ragged_attention(
+                q[0].reshape(B, C, cfg.n_heads, cfg.head_dim),
+                k_pages[li], v_pages[li], page_tables, contexts,
+                starts)                                        # [B,C,H,Dh]
+            y = att.reshape(1, N, -1) @ p["attn"]["wo"]
+            x = x + y
+            h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+            x = x + mlp(h, p["ffn"], cfg.act)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        logits = logits[0].reshape(B, C, -1)
+        last = jnp.clip(lengths - 1, 0, C - 1)
+        out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+        return out, k_pages, v_pages
 
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
@@ -303,6 +362,107 @@ class PagedModelRunner:
             raise
         return sid
 
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two — pads ragged (B, C) to a bounded set of
+        jit variants instead of one trace per exact shape."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def run_step(self, rows: List[Tuple[int, List[int], str]]
+                 ) -> Dict[int, np.ndarray]:
+        """Execute one fused ragged step: ONE attention kernel call for
+        a whole engine step's mixed decode + prefill work.
+
+        ``rows`` is the packed ragged layout: one ``(sid, tokens, kind)``
+        entry per sequence, where ``tokens`` are the consecutive tokens
+        to scatter-and-attend for that sequence this step — a decode row
+        carries exactly its one pending token (``kind="decode"``), a
+        prefill row carries the next chunk of its prompt
+        (``kind="prefill"``).  A sequence may appear at most once.
+
+        The batch is padded to a power-of-two ``(B, C)`` bucket (pad
+        slots write K/V into the trash page; pad rows carry
+        ``context=0`` and are skipped by the kernel), so the number of
+        live jit variants stays O(log max_slots * log max chunk).
+
+        Raises :class:`OutOfPages` BEFORE any sequence state mutates
+        when the page pool cannot back every row (the engine preempts
+        and replans).  Returns each row's last-valid-token logits
+        ``{sid: [V] float32}`` — for decode rows the next-token logits,
+        for prefill rows the logits after the chunk's final token.
+        """
+        assert rows, "run_step needs at least one row"
+        sids = [sid for sid, _, _ in rows]
+        assert len(set(sids)) == len(sids), \
+            "one ragged row per sequence — merge chunks before calling"
+        # atomic capacity pre-check: fail before touching any state so
+        # the engine can preempt and retry without corrupted bookkeeping
+        total_new = 0
+        for sid, toks, _ in rows:
+            alloc = self.pm.seqs[sid]
+            n = len(toks)
+            assert n >= 1, (sid, toks)
+            need = -(-(alloc.length + n) // self.page_size)
+            if need > self.pm.pages_per_seq:
+                raise OutOfPages(f"seq {sid} at pages_per_seq cap")
+            total_new += max(0, need - len(alloc.pages))
+        self.pm.require_pages(total_new)
+
+        B = len(rows)
+        Bb = self._bucket(B)
+        Cb = self._bucket(max(len(toks) for _, toks, _ in rows))
+        N = Bb * Cb
+        tok = np.zeros(N, np.int32)
+        pos = np.zeros(N, np.int32)
+        page_idx = np.full(N, self.trash_page, np.int32)
+        page_off = np.zeros(N, np.int32)
+        page_tables = np.zeros((Bb, self.pm.pages_per_seq), np.int32)
+        contexts = np.zeros(Bb, np.int32)    # pad rows: 0 -> kernel skips
+        starts = np.zeros(Bb, np.int32)
+        lengths = np.zeros(Bb, np.int32)
+        for b, (sid, toks, _) in enumerate(rows):
+            alloc = self.pm.seqs[sid]
+            start = alloc.length
+            n = len(toks)
+            self.pm.append_tokens(sid, n)
+            pages = alloc.pages
+            rp = start + np.arange(Cb)
+            o = b * Cb
+            tok[o:o + n] = toks
+            pos[o:o + Cb] = rp
+            page_idx[o:o + n] = [pages[p // self.page_size]
+                                 for p in rp[:n]]
+            page_off[o:o + Cb] = rp % self.page_size
+            page_tables[b, :len(pages)] = pages
+            contexts[b] = start + n
+            starts[b] = start
+            lengths[b] = n
+        logits, self.k_pages, self.v_pages = self._ragged_jit(
+            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(page_tables),
+            jnp.asarray(contexts), jnp.asarray(starts),
+            jnp.asarray(lengths), jnp.asarray(page_idx),
+            jnp.asarray(page_off))
+        out = np.asarray(logits.astype(jnp.float32))
+        n_dec = n_pf = 0
+        result: Dict[int, np.ndarray] = {}
+        for b, (sid, toks, kind) in enumerate(rows):
+            if sid in self.seq_tokens:
+                self.seq_tokens[sid].extend(int(t) for t in toks)
+            if kind == "decode":
+                n_dec += 1
+                self.n_decode_tokens += 1
+            else:
+                n_pf += len(toks)
+                self.n_prefill_tokens += len(toks)
+            result[sid] = out[b]
+        self.n_ragged_steps += 1
+        self.step_log.append(("ragged", n_dec, n_pf))
+        return result
+
     def fork_seq(self, src_sid: int) -> int:
         """Copy-on-write fork of a live sequence: the new sequence shares
         every *full* page of the source in place (+1 refcount, zero data
@@ -389,6 +549,12 @@ class PagedModelRunner:
         self.pm.free_seq(seq_id)
 
     def stats(self) -> dict:
+        """Runner counters.  ``attn_kernel_calls`` is the total number of
+        attention dispatches (fused ragged steps + legacy per-sequence
+        chunk and per-batch decode calls) — the engine path issues
+        exactly one per step, so ``attn_kernel_calls / engine exec
+        steps`` should be 1.0 (surfaced by the mixed-traffic benchmark
+        as ``kernel_calls_per_step``)."""
         out = {"pages": self.pm.stats(),
                "prefills": self.n_prefills,
                "forks": self.n_forks,
@@ -396,7 +562,11 @@ class PagedModelRunner:
                "prefill_chunks": self.n_prefill_chunks,
                "prefill_tokens": self.n_prefill_tokens,
                "decode_steps": self.n_decode_steps,
-               "decode_tokens": self.n_decode_tokens}
+               "decode_tokens": self.n_decode_tokens,
+               "ragged_steps": self.n_ragged_steps,
+               "attn_kernel_calls": (self.n_ragged_steps
+                                     + self.n_prefill_chunks
+                                     + self.n_decode_steps)}
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.stats()
         return out
@@ -411,14 +581,17 @@ class PagedEngineBackend:
     backend-agnostic.  The paged backend additionally supports CHUNKED
     prefill (``supports_chunked_prefill``): ``begin_prefill(slot, ids)``
     opens the sequence and adopts the prefix-cache hit, then the engine
-    streams the uncached suffix through ``prefill_chunk(slot, tokens)``
-    across as many scheduler steps as the token budget allows.  This
-    facade maps engine slots onto paged seq_ids, publishes finished (and
-    preempted-mid-prefill) sequences into the prefix cache, and frees
-    aborted ones without publishing.
+    streams the uncached suffix through ragged step rows across as many
+    scheduler steps as the token budget allows — and FUSED execution
+    (``supports_ragged_step``): ``run_step(rows)`` dispatches a whole
+    step plan (every decode token + every prefill chunk) as one ragged
+    attention kernel call.  This facade maps engine slots onto paged
+    seq_ids, publishes finished (and preempted-mid-prefill) sequences
+    into the prefix cache, and frees aborted ones without publishing.
     """
 
     supports_chunked_prefill = True
+    supports_ragged_step = True
 
     def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 4,
                  max_context: int = 256, page_size: int = 16,
@@ -469,6 +642,18 @@ class PagedEngineBackend:
         """Append one chunk of prompt tokens to ``slot``'s sequence;
         returns the last token's logits."""
         return self.runner.prefill_chunk(self._slot_seq[slot], tokens)
+
+    def run_step(self, rows: List[Tuple[int, List[int], str]]
+                 ) -> Dict[int, np.ndarray]:
+        """Fused plan execution: ``rows`` are ``(slot, tokens, kind)``
+        ragged rows (see :meth:`PagedModelRunner.run_step`); one
+        attention kernel call covers them all.  Returns per-slot
+        last-valid-token logits.  Raises :class:`OutOfPages` before any
+        state mutates when the pool cannot back the whole step."""
+        out = self.runner.run_step(
+            [(self._slot_seq[slot], toks, kind)
+             for slot, toks, kind in rows])
+        return {slot: out[self._slot_seq[slot]] for slot, _, _ in rows}
 
     def fork_slot(self, src_slot: int, dst_slot: int):
         """CoW-fork ``src_slot``'s sequence into ``dst_slot`` (shared

@@ -31,6 +31,14 @@ objects and token counts; the engine executes it.  Scheduled items are
 duck-typed — running items may expose ``next_token`` (a decode is
 pending) and ``prefill_remaining`` (prompt tokens not yet in KV); the
 admission probe callback supplies per-request cost info.
+
+Planning and execution speak the same structure: alongside the per-kind
+lists, ``plan_step`` emits a packed :class:`RaggedLayout` — decode
+tokens as length-1 rows, each sequence's planned prefill chunks merged
+into one multi-token row — which the paged backend's fused
+``run_step`` dispatches as ONE ragged attention kernel call per engine
+step (admissions join the layout engine-side once their sequences hold
+slots).
 """
 from __future__ import annotations
 
@@ -57,6 +65,66 @@ class AdmissionInfo:
 
 
 @dataclass
+class RaggedRow:
+    """One row of the packed ragged step layout: ``n`` consecutive
+    tokens of one sequence (``kind="decode"`` rows always carry 1)."""
+    seq: object
+    n: int
+    kind: str                             # "decode" | "prefill"
+
+
+@dataclass
+class RaggedLayout:
+    """The packed ragged layout of one engine step — the structure the
+    planner emits and the runner's fused ``run_step`` consumes, so
+    planning and execution speak the same shape.
+
+    Rows are ordered decode-first (each a length-1 row), then one MERGED
+    prefill row per still-prefilling sequence (all of that sequence's
+    planned chunk tokens this step).  ``offsets()`` gives each row's
+    first query-slot index in the packed buffer; ``pad_counts`` reports
+    how much padding a ``(row_bucket, token_bucket)`` jit bucket adds.
+    """
+    rows: List[RaggedRow] = field(default_factory=list)
+
+    def add(self, seq, n: int, kind: str):
+        """Append ``n`` tokens of ``seq``; consecutive prefill tokens of
+        the same sequence merge into its existing row (chunks of one
+        sequence planned back-to-back are one longer ragged row)."""
+        if (kind == "prefill" and self.rows
+                and self.rows[-1].kind == "prefill"
+                and self.rows[-1].seq is seq):
+            self.rows[-1].n += n
+        else:
+            self.rows.append(RaggedRow(seq, n, kind))
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.n for r in self.rows)
+
+    def offsets(self, stride: Optional[int] = None) -> List[int]:
+        """Packed start offset of each row: ragged (cumulative ``n``)
+        by default, or strided when every row occupies a fixed
+        ``stride`` slots (the padded kernel buffer layout)."""
+        if stride is not None:
+            return [i * stride for i in range(len(self.rows))]
+        out, acc = [], 0
+        for r in self.rows:
+            out.append(acc)
+            acc += r.n
+        return out
+
+    def pad_counts(self, row_bucket: int,
+                   token_bucket: int) -> Tuple[int, int]:
+        """(pad rows, pad token slots) a ``(row_bucket, token_bucket)``
+        kernel bucket adds: whole pad rows below ``row_bucket`` plus the
+        per-row tail slots up to ``token_bucket``."""
+        pad_rows = row_bucket - len(self.rows)
+        pad_slots = row_bucket * token_bucket - self.total_tokens
+        return pad_rows, pad_slots
+
+
+@dataclass
 class StepPlan:
     """One engine step: decode everything running, spend the rest of the
     token budget on prefill chunks and admissions."""
@@ -66,6 +134,10 @@ class StepPlan:
     #: (waiting request, first-chunk token allotment) to admit, in order
     admit: List[Tuple[object, int]] = field(default_factory=list)
     budget_used: int = 0
+    #: packed ragged layout of the decode + prefill work above (the
+    #: fused-step execution order); admissions join engine-side once
+    #: their sequences are bound to slots
+    layout: RaggedLayout = field(default_factory=RaggedLayout)
 
 
 class Scheduler:
@@ -124,6 +196,8 @@ class Scheduler:
             seq for seq in (self.running[s] for s in self.active_slots)
             if getattr(seq, "next_token", None) is not None
             and not int(getattr(seq, "prefill_remaining", 0) or 0)]
+        for seq in plan.decode:
+            plan.layout.add(seq, 1, "decode")
         used = len(plan.decode)
         # continue in-flight chunked prefills, oldest admission first
         for slot in sorted(self.running,
@@ -133,6 +207,10 @@ class Scheduler:
             while rem > 0 and used < token_budget:
                 n = min(rem, chunk_size or rem, token_budget - used)
                 plan.prefill.append((seq, n))
+                # back-to-back chunks of one sequence merge into a
+                # single ragged row (the fused kernel runs them as one
+                # longer chunk)
+                plan.layout.add(seq, n, "prefill")
                 used += n
                 rem -= n
         # admissions into whatever budget is left, cheapest suffix first

@@ -11,7 +11,9 @@ stream iterator posts ``{"kind": "abort"}``, and a blocking
 cancelled from another thread via ``abort(request_id)`` — either way the
 backend's decode slots and KV pages are actually freed.  ``stats()``
 crosses the boundary the same JSON-only way (``{"kind": "stats"}``), so
-a frontend can watch scheduler/page/prefix-cache counters live.
+a frontend can watch scheduler/page/prefix-cache counters live —
+including the fused-dispatch figures (``runner.attn_kernel_calls`` vs
+``engine.exec_steps``; see ``MLCEngine.stats``).
 """
 from __future__ import annotations
 

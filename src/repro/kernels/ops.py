@@ -14,6 +14,8 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.paged_attention import (paged_prefill_attention
                                            as _paged_prefill)
+from repro.kernels.paged_attention import (paged_ragged_attention
+                                           as _paged_ragged)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.w4a16_gemm import w4a16_gemm as _w4a16
 
@@ -42,6 +44,19 @@ def paged_prefill_attention(q, k_pages, v_pages, page_table, context,
                             interpret: Optional[bool] = None):
     return _paged_prefill(q, k_pages, v_pages, page_table, context, start,
                           scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_ragged_attention(q, k_pages, v_pages, page_tables, contexts,
+                           starts, *, scale: Optional[float] = None,
+                           interpret: Optional[bool] = None):
+    """One fused ragged attention step: q [B, C, H, D] mixed decode +
+    prefill-chunk rows, each against its own page-table row.  Jit
+    variants are keyed by the (B, C) shape — callers bucket both to
+    powers of two so the variant count stays bounded (see
+    ``PagedModelRunner.run_step``)."""
+    return _paged_ragged(q, k_pages, v_pages, page_tables, contexts,
+                         starts, scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",

@@ -29,6 +29,20 @@ tokens of ONE sequence (chunked prefill):
     one [C*G, D] tile and the causal mask inside the chunk is
     t <= start + row//G.  The final partial chunk is padded to C by the
     caller; pad rows' outputs are garbage and must be ignored.
+
+``paged_ragged_attention`` — one fused call for a whole engine step: B
+ragged rows, each a chunk of up to C consecutive tokens of its OWN
+sequence (a decode token is a length-1 row of the same layout):
+    q            [B, C, H, D]   (row b: queries at starts[b] ..)
+    page_tables  [B, pages_per_seq] int32
+    contexts     [B] int32      (per-seq valid tokens incl. this chunk)
+    starts       [B] int32      (per-seq global position of q row 0)
+    Grid: (B, Kv, pages_per_seq) — the single-sequence prefill kernel
+    with a leading batch dimension; each b scalar-prefetches its own
+    page-table row and masks against its own cursor.  Pad rows inside a
+    chunk (positions >= contexts[b]) produce garbage; fully padded
+    batch rows (contexts[b] == 0) skip every page and output zeros.
+    The caller's pad K/V writes go to a trash page, never read here.
 """
 from __future__ import annotations
 
@@ -248,3 +262,122 @@ def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
         interpret=interpret,
     )(page_table, meta, qg, k_pages, v_pages)
     return out.reshape(Kv, C, G, D).transpose(1, 0, 2, 3).reshape(C, H, D)
+
+
+def _ragged_kernel(page_tables_ref, contexts_ref, starts_ref,   # prefetch
+                   q_ref, k_ref, v_ref, o_ref,                  # blocks
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, page_size: int, n_group: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = contexts_ref[b]              # keys at t >= ctx are invalid
+    start = starts_ref[b]              # global position of row b's token 0
+    page_start = pi * page_size
+
+    @pl.when(page_start < ctx)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # [C*G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [C*G, page]
+        # per-row causal mask against THIS sequence's cursor: query row
+        # r (chunk token r // G) sits at global position start + r//G
+        qpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0) // n_group
+        tpos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where((tpos < ctx) & (tpos <= qpos), s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_ragged_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_tables: jax.Array,
+                           contexts: jax.Array, starts: jax.Array, *,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Ragged multi-sequence paged attention: one kernel invocation for a
+    whole engine step's mixed decode + prefill-chunk batch.
+
+    Row ``b`` of ``q`` ([B, C, H, D]) holds up to C consecutive query
+    tokens of one sequence, starting at that sequence's global position
+    ``starts[b]``; a decode token is simply a length-1 row.  Each row
+    attends only to its own scalar-prefetched ``page_tables[b]`` with
+    keys masked to ``t < contexts[b]`` and the per-row causal constraint
+    ``t <= starts[b] + c``.  Returns [B, C, H, D].
+
+    Padding contract: chunk pad rows (``starts[b] + c >= contexts[b]``)
+    produce garbage output the caller must ignore; fully padded batch
+    rows signal themselves with ``contexts[b] == 0`` and output zeros.
+    The caller must have scattered all B rows' K/V (pads into a trash
+    page outside every page table) before invoking.
+    """
+    B, C, H, D = q.shape
+    _, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_tables.shape[1]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # row r = c*G + g of a (b, kv) tile is chunk token c, group head g
+    qg = (q.reshape(B, C, Kv, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Kv, C * G, D))
+
+    grid = (B, Kv, pages_per_seq)
+
+    def q_map(b, kv, pi, pt, ctx, st):
+        return (b, kv, 0, 0)
+
+    def kv_map(b, kv, pi, pt, ctx, st):
+        # scalar-prefetched page-table ROW b routes the DMA to the
+        # physical page backing this sequence's pi-th logical page
+        return (pt[b, pi], 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, C * G, D), q_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+            pl.BlockSpec((1, page_size, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C * G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_kernel, scale=scale,
+                          page_size=page_size, n_group=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, C * G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_tables, contexts, starts, qg, k_pages, v_pages)
+    return (out.reshape(B, Kv, C, G, D).transpose(0, 2, 1, 3, 4)
+            .reshape(B, C, H, D))

@@ -96,6 +96,43 @@ def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.reshape(C, H, D).astype(q.dtype)
 
 
+def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, page_tables: jax.Array,
+                               contexts: jax.Array, starts: jax.Array, *,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Ragged multi-sequence chunk attention (one fused engine step).
+
+    q: [B, C, H, D] — row b is a chunk of up to C consecutive tokens of
+    one sequence at positions starts[b]..; a decode token is a length-1
+    row.  page_tables: [B, pages_per_seq]; contexts/starts: [B].  Row b
+    masks keys to ``t < contexts[b]`` and ``t <= starts[b] + c`` — i.e.
+    each row is exactly ``paged_prefill_attention_ref`` over its own
+    page-table row (the per-sequence oracle the kernel must match).
+    Rows with ``contexts[b] == 0`` (batch padding) return zeros.
+    """
+    B, C, H, D = q.shape
+    P, page_size, Kv, _ = k_pages.shape
+    pages_per_seq = page_tables.shape[1]
+    G = H // Kv
+    scale = D ** -0.5 if scale is None else scale
+
+    k = k_pages[page_tables].reshape(B, pages_per_seq * page_size, Kv, D)
+    v = v_pages[page_tables].reshape(B, pages_per_seq * page_size, Kv, D)
+    qf = q.reshape(B, C, Kv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bckgd,btkd->bckgt", qf,
+                        k.astype(jnp.float32)) * scale
+    t = jnp.arange(pages_per_seq * page_size)[None, None, :]
+    qpos = starts[:, None] + jnp.arange(C)[None, :]         # [B, C]
+    mask = (t < contexts[:, None, None]) & (t <= qpos[..., None])
+    scores = jnp.where(mask[:, :, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    # fully masked rows (batch padding, contexts == 0) -> zeros, not the
+    # uniform distribution softmax degenerates to
+    p = jnp.where(jnp.any(mask, -1)[:, :, None, None, None], p, 0.0)
+    out = jnp.einsum("bckgt,btkd->bckgd", p, v.astype(jnp.float32))
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 def w4a16_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                    group: int) -> jax.Array:
     """x: [M,K] bf16; w_packed: [K//2, N] int8 (2 nibbles along K);

@@ -12,6 +12,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+from repro.core.paged_cache import OutOfPages
 from repro.core.paged_runner import PagedModelRunner
 from repro.models import model
 from repro.models.pdef import init_params
@@ -115,16 +116,18 @@ def test_preempt_midprefill_publish_and_resume(setup):
 
 def test_decode_liveness_during_long_prefill():
     """Acceptance: with one running decode stream and a concurrently
-    submitted long prompt (>= 8 chunks), the decode stream emits tokens
-    BETWEEN the prompt's prefill chunks — asserted via the runner's step
-    log."""
+    submitted long prompt (many chunks), the decode stream emits tokens
+    WITHIN the same fused steps that advance the prompt's prefill —
+    asserted via the runner's step log of ``("ragged", n_decode_rows,
+    n_prefill_tokens)`` entries, which also proves the whole mixed step
+    was ONE attention kernel dispatch."""
     cfg = get_config("llama-3.1-8b", reduced=True)
     eng = MLCEngine()
     eng.load_model("m", cfg, max_slots=2, max_context=256, seed=0,
                    backend="paged", page_size=8, prefill_chunk_size=4,
                    token_budget=6)            # decode both + one chunk
     runner = eng.models["m"].runner.runner
-    # warmup compiles the chunk + decode step functions
+    # warmup compiles the fused ragged step buckets
     eng.chat_completions_create(ChatCompletionRequest(
         messages=[ChatMessage("user", "warm up this engine")],
         model="m", max_tokens=2, temperature=0.0))
@@ -153,14 +156,126 @@ def test_decode_liveness_during_long_prefill():
     ts.join(timeout=300)
     assert resp.usage.completion_tokens > 0
     log = list(runner.step_log)
-    chunk_idx = [i for i, (kind, _) in enumerate(log) if kind == "chunk"]
-    assert len(chunk_idx) >= 8, log            # a genuinely long prefill
-    interleaved = sum(1 for i, (kind, _) in enumerate(log)
-                      if kind == "decode"
-                      and chunk_idx[0] < i < chunk_idx[-1])
-    assert interleaved >= 4, log               # decode ran BETWEEN chunks
+    assert all(e[0] == "ragged" for e in log), log   # engine path is fused
+    prefill_steps = [e for e in log if e[2] > 0]
+    assert len(prefill_steps) >= 8, log        # a genuinely long prefill
+    fused_mixed = sum(1 for e in prefill_steps if e[1] > 0)
+    assert fused_mixed >= 4, log    # decode rode ALONG in the same call
     # TTFT of the long request reflects budgeted chunking, not a stall
     assert resp.usage.extra["ttft_s"] > 0.0
+    eng.shutdown()
+
+
+def test_run_step_matches_per_sequence_path(setup):
+    """One fused run_step over a mixed decode+prefill batch returns the
+    same logits as the per-sequence chunk/decode calls it replaces —
+    including a row longer than chunk_size and bucket padding."""
+    cfg, params = setup
+    T_a, T_b = 25, 14
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7), (1, T_a + T_b), 0, cfg.vocab_size))[0]
+    ids_a = [int(t) for t in toks[:T_a]]
+    ids_b = [int(t) for t in toks[T_a:]]
+    full_a = _oracle(cfg, params, np.asarray(ids_a)[None])
+    full_b = _oracle(cfg, params, np.asarray(ids_b)[None])
+    pr = PagedModelRunner(cfg, params, num_pages=32, page_size=8,
+                          max_slots=4, pages_per_seq=6, chunk_size=8,
+                          enable_prefix_cache=False)
+    sa = pr.begin_seq(ids_a)
+    sb = pr.prefill_seq(ids_b[:10])
+    base_calls = pr.n_prefill_chunks + pr.n_decode_steps
+    # fused: A prefills 9 tokens, B decodes — ONE ragged step
+    out = pr.run_step([(sa, ids_a[:9], "prefill"), (sb, [ids_b[10]],
+                                                    "decode")])
+    assert float(np.max(np.abs(out[sa] - full_a[8]))) < 0.06
+    assert float(np.max(np.abs(out[sb] - full_b[10]))) < 0.06
+    # fused: A's remaining 16 (> chunk_size) as one ragged row
+    out = pr.run_step([(sa, ids_a[9:], "prefill"), (sb, [ids_b[11]],
+                                                    "decode")])
+    assert float(np.max(np.abs(out[sa] - full_a[T_a - 1]))) < 0.06
+    assert float(np.max(np.abs(out[sb] - full_b[11]))) < 0.06
+    assert pr.n_ragged_steps == 2              # and nothing else dispatched
+    assert pr.n_prefill_chunks + pr.n_decode_steps == base_calls
+    assert list(pr.step_log)[-2:] == [("ragged", 1, 9), ("ragged", 1, 16)]
+    pr.free(sa), pr.free(sb)
+    assert pr.pm.num_free_pages == 32          # pads stayed in trash page
+
+
+def test_run_step_out_of_pages_is_atomic(setup):
+    """A fused step the pool cannot back raises OutOfPages BEFORE any
+    sequence state mutates — lengths, pages, and the pool are untouched
+    so the engine can preempt and replan."""
+    cfg, params = setup
+    pr = PagedModelRunner(cfg, params, num_pages=4, page_size=8,
+                          max_slots=2, pages_per_seq=6, chunk_size=8,
+                          enable_prefix_cache=False)
+    sid = pr.prefill_seq(list(range(2, 26)))   # 24 tokens = 3 pages
+    free_before = pr.pm.num_free_pages
+    len_before = pr.seq_len(sid)
+    with pytest.raises(OutOfPages):
+        # 1 free page left; 17 more tokens need 3 new pages
+        pr.run_step([(sid, list(range(2, 19)), "prefill")])
+    assert pr.pm.num_free_pages == free_before
+    assert pr.seq_len(sid) == len_before
+    assert pr.n_ragged_steps == 0
+
+
+def test_engine_one_kernel_call_per_step():
+    """Acceptance: on the paged backend every engine step that executes
+    work dispatches exactly ONE attention kernel call (previously >= 1
+    per sequence)."""
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    eng = MLCEngine()
+    eng.load_model("m", cfg, max_slots=3, max_context=128, seed=0,
+                   backend="paged", page_size=8, prefill_chunk_size=4,
+                   token_budget=8)
+    reqs = [ChatCompletionRequest(
+        messages=[ChatMessage("user", f"mixed traffic request {i} "
+                              + "with words " * (1 + 3 * (i % 2)))],
+        model="m", max_tokens=4, seed=i, temperature=0.0)
+        for i in range(4)]
+    threads = [threading.Thread(
+        target=eng.chat_completions_create, args=(r,)) for r in reqs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    s = eng.stats("m")
+    assert s["engine"]["exec_steps"] > 0
+    assert s["runner"]["ragged_steps"] == s["runner"]["attn_kernel_calls"]
+    assert s["runner"]["attn_kernel_calls"] == s["engine"]["exec_steps"]
+    eng.shutdown()
+
+
+def test_poisoned_fused_step_fails_request_not_loop():
+    """A non-OutOfPages error inside the fused step must surface to the
+    request's caller and leave the engine loop alive for later requests
+    (the old per-chunk path's catch-all guarantee, kept by the fused
+    path)."""
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    eng = MLCEngine()
+    eng.load_model("m", cfg, max_slots=2, max_context=128, seed=0,
+                   backend="paged", prefill_chunk_size=4)
+    backend = eng.models["m"].runner
+    orig = backend.run_step
+    state = {"armed": True}
+
+    def poisoned(rows):
+        if state["armed"]:
+            state["armed"] = False
+            raise RuntimeError("poisoned step")
+        return orig(rows)
+
+    backend.run_step = poisoned
+    with pytest.raises(RuntimeError, match="poisoned step"):
+        eng.chat_completions_create(ChatCompletionRequest(
+            messages=[ChatMessage("user", "boom")], model="m",
+            max_tokens=4, temperature=0.0))
+    # engine survived: the next request completes normally
+    r = eng.chat_completions_create(ChatCompletionRequest(
+        messages=[ChatMessage("user", "still alive?")], model="m",
+        max_tokens=4, temperature=0.0))
+    assert r.usage.completion_tokens > 0
     eng.shutdown()
 
 

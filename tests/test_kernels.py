@@ -89,6 +89,45 @@ def test_paged_prefill_attention_sweep(C, H, Kv, D, pages, psz, pps,
             np.asarray(expect, np.float32)[:valid], atol=0.06)
 
 
+@pytest.mark.parametrize("B,C,H,Kv,D,pages,psz,pps", [
+    (4, 8, 8, 2, 64, 16, 16, 4),
+    (2, 16, 4, 4, 128, 32, 8, 6),
+    (8, 4, 2, 1, 64, 16, 16, 2),
+])
+def test_paged_ragged_attention_sweep(B, C, H, Kv, D, pages, psz, pps,
+                                      rng_key):
+    """Fused ragged kernel vs BOTH oracles: every row must equal the
+    single-sequence chunk oracle over its own page table — for a mixed
+    batch of decode rows (length 1), full chunks, padded partial chunks,
+    and one fully padded batch row (context 0 -> zeros)."""
+    ks = jax.random.split(rng_key, 5)
+    q = _rand(ks[0], (B, C, H, D), jnp.bfloat16)
+    kp = _rand(ks[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks[3], (B, pps), 0, pages)
+    # row kinds cycle: decode, full chunk, partial chunk, batch pad
+    lengths = [(1, C, max(1, C // 2), 0)[b % 4] for b in range(B)]
+    starts = np.array(jax.random.randint(
+        ks[4], (B,), 0, pps * psz - C + 1), np.int32)
+    starts[np.asarray(lengths) == 0] = 0
+    contexts = (starts + np.asarray(lengths)).astype(np.int32)
+    out = ops.paged_ragged_attention(q, kp, vp, pt, jnp.asarray(contexts),
+                                     jnp.asarray(starts), interpret=True)
+    batched = ref.paged_ragged_attention_ref(
+        q, kp, vp, pt, jnp.asarray(contexts), jnp.asarray(starts))
+    for b, L in enumerate(lengths):
+        got = np.asarray(out[b], np.float32)
+        if L == 0:
+            np.testing.assert_allclose(got, 0.0)       # batch pad row
+            continue
+        perseq = ref.paged_prefill_attention_ref(
+            q[b], kp, vp, pt[b], int(contexts[b]), int(starts[b]))
+        np.testing.assert_allclose(
+            got[:L], np.asarray(perseq, np.float32)[:L], atol=0.06)
+        np.testing.assert_allclose(
+            got[:L], np.asarray(batched[b], np.float32)[:L], atol=0.06)
+
+
 def test_paged_attention_single_token_context(rng_key):
     ks = jax.random.split(rng_key, 3)
     q = _rand(ks[0], (1, 4, 64), jnp.bfloat16)

@@ -133,3 +133,50 @@ def test_plan_admission_reserves_midprefill_pages():
     infos["new"] = AdmissionInfo(need=12, suffix=12)
     plan = s.plan_step(32, chunk_size=4, admission_info=infos.get)
     assert [r for r, _ in plan.admit] == ["new"]
+
+
+def test_plan_emits_packed_ragged_layout():
+    """plan_step's RaggedLayout: decode tokens first as length-1 rows,
+    then ONE merged prefill row per sequence (back-to-back chunks of the
+    same sequence collapse), with packed offsets."""
+    s = Scheduler(max_slots=4, max_context=64)
+    a = _Running(next_token=1)
+    b = _Running(next_token=2)
+    c = _Running(prefill_remaining=10)
+    for x in (a, b, c):
+        s.admit(x)
+    plan = s.plan_step(20, chunk_size=4)
+    # the chunk list stays chunk-granular ...
+    assert plan.prefill == [(c, 4), (c, 4), (c, 2)]
+    # ... but the layout packs decode-first and merges c's chunks
+    assert [(r.n, r.kind) for r in plan.layout.rows] == [
+        (1, "decode"), (1, "decode"), (10, "prefill")]
+    assert {r.seq for r in plan.layout.rows[:2]} == {a, b}
+    assert plan.layout.rows[2].seq is c
+    assert plan.layout.total_tokens == 12
+    assert plan.layout.offsets() == [0, 1, 2]
+    assert plan.layout.offsets(stride=16) == [0, 16, 32]
+
+
+def test_ragged_layout_pad_counts():
+    """Bucketing a 3-row / 12-token layout to (4, 16) pads 1 whole row
+    and 52 query slots in total."""
+    s = Scheduler(max_slots=4, max_context=64)
+    for x in (_Running(next_token=1), _Running(next_token=2),
+              _Running(prefill_remaining=10)):
+        s.admit(x)
+    plan = s.plan_step(20, chunk_size=4)
+    pad_rows, pad_slots = plan.layout.pad_counts(4, 16)
+    assert (pad_rows, pad_slots) == (1, 4 * 16 - 12)
+
+
+def test_layout_keeps_interleaved_sequences_separate():
+    """Merging applies only to back-to-back chunks of ONE sequence:
+    rows of different sequences never merge."""
+    from repro.core.scheduler import RaggedLayout
+    p, q = _Running(prefill_remaining=8), _Running(prefill_remaining=8)
+    lay = RaggedLayout()
+    lay.add(p, 4, "prefill")
+    lay.add(q, 4, "prefill")
+    lay.add(q, 2, "prefill")
+    assert [(r.seq, r.n) for r in lay.rows] == [(p, 4), (q, 6)]

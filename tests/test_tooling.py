@@ -1,8 +1,10 @@
 """Tier-1 tree hygiene + tooling smoke: scripts/check_tree.sh (no
-tracked bytecode, src compiles), the tool-calling agent-loop example,
-and the benchmark registry in ``--smoke`` mode (tiny configs, few
-steps) so benchmark scripts can't silently bit-rot."""
+tracked bytecode, src compiles, docs exist with resolving file refs),
+the README quickstart executed verbatim, the tool-calling agent-loop
+example, and the benchmark registry in ``--smoke`` mode (tiny configs,
+few steps) so docs and benchmark scripts can't silently bit-rot."""
 import os
+import re
 import subprocess
 import sys
 from pathlib import Path
@@ -20,6 +22,19 @@ def _env():
 def test_check_tree():
     subprocess.run(["bash", str(ROOT / "scripts" / "check_tree.sh")],
                    check=True, cwd=ROOT, timeout=300)
+
+
+def test_readme_quickstart_executes():
+    """The README's first python code block IS the quickstart — run it
+    verbatim so the documented example can never rot.  It must print
+    generated content and exit cleanly."""
+    readme = (ROOT / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", readme, re.DOTALL)
+    assert blocks, "README.md has no ```python quickstart block"
+    out = subprocess.run([sys.executable, "-c", blocks[0]],
+                         check=True, cwd=ROOT, env=_env(), timeout=580,
+                         capture_output=True, text=True).stdout
+    assert "prefix-cached prompt tokens:" in out, out
 
 
 def test_tool_calling_example_smoke():
@@ -43,6 +58,13 @@ def test_benchmarks_smoke():
     for mod in ("table1_retention", "engine", "grammar", "kernel",
                 "prefix_cache", "roofline"):
         assert mod in prefixes, (mod, out)
-    # the new latency report is part of the contract
+    # the latency + dispatch-fusion report is part of the contract
     assert any(ln.startswith("engine/mixed_ttft_p50") for ln in lines), out
     assert any(ln.startswith("engine/mixed_itl_p95") for ln in lines), out
+    fused = [ln for ln in lines
+             if ln.startswith("engine/mixed_kernel_calls_per_step")]
+    assert fused and fused[0].split(",")[1] == "1.0", out
+    # the run records the perf trajectory in-repo
+    report = ROOT / "BENCH_ragged_step.json"
+    assert report.exists(), "benchmarks.run wrote no report"
+    assert "mixed_kernel_calls_per_step" in report.read_text()
