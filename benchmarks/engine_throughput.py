@@ -15,10 +15,13 @@ from __future__ import annotations
 import threading
 import time
 
+import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+from repro.core.sampler import RequestSampler, SamplingParamsBatch
+from repro.kernels.ops import batched_sample
 
 
 def _throughput_rows(smoke: bool) -> list:
@@ -73,9 +76,12 @@ def _latency_rows(smoke: bool) -> list:
 
     def dispatch_counters():
         s = eng.stats("m")
-        return s["runner"]["attn_kernel_calls"], s["engine"]["exec_steps"]
+        return (s["runner"]["attn_kernel_calls"],
+                s["engine"]["exec_steps"],
+                s["runner"]["host_sync_bytes"],
+                s["runner"]["host_logit_rows"])
 
-    calls0, steps0 = dispatch_counters()
+    calls0, steps0, sync0, logit_rows0 = dispatch_counters()
 
     n_streams = 1 if smoke else 2
     stream_toks = 8 if smoke else 32
@@ -121,8 +127,14 @@ def _latency_rows(smoke: bool) -> list:
     for t in ts + [tl]:
         t.join()
     wall = time.perf_counter() - t0
-    calls, steps = dispatch_counters()
+    calls, steps, sync, logit_rows = dispatch_counters()
     calls, steps = calls - calls0, max(1, steps - steps0)
+    sync, logit_rows = sync - sync0, logit_rows - logit_rows0
+    # standalone timing of the device sampling stage at this workload's
+    # shape (it rides INSIDE the fused step jit, so its cost cannot be
+    # separated there without adding a sync)
+    sample_us = _sample_us(eng.models["m"].tokenizer.vocab_size,
+                           rows=3, iters=2 if smoke else 10)
     eng.shutdown()
 
     def pct(xs, q):
@@ -143,7 +155,41 @@ def _latency_rows(smoke: bool) -> list:
          round(calls / steps, 3), f"{calls}calls/{steps}steps"),
         ("engine/mixed_steps_per_s", round(steps / wall, 2),
          f"{steps}steps/{wall:.2f}s"),
+        # the batched-sampling tentpole as numbers: device sampling cost
+        # per step, and device→host payload per step — token ids and
+        # logprobs only, never [B, V] logit planes (logit_rows == 0)
+        ("engine/mixed_sample_ms_per_step",
+         round(sample_us / 1e3, 3), f"{sample_us/1e3:.3f}ms_device_sample"),
+        ("engine/mixed_host_sync_bytes_per_step",
+         round(sync / steps, 1), f"{logit_rows}logit_rows"),
     ]
+
+
+def _sample_us(vocab: int, rows: int, iters: int) -> float:
+    """Microbench the fused sampling op at the mixed workload's shape
+    (one decode row per stream, model vocab)."""
+    batch = SamplingParamsBatch.build(
+        [(i, RequestSampler(temperature=0.9, top_k=20, top_p=0.95,
+                            seed=i), None) for i in range(rows)], vocab)
+    logits = np.random.default_rng(0).standard_normal(
+        (rows, vocab)).astype(np.float32)
+
+    def call():
+        # the exact static configuration the mixed workload executes:
+        # plane-less, stochastic, no logprobs requested
+        return batched_sample(
+            logits, batch.seeds, batch.counters, batch.temperature,
+            batch.top_k, batch.top_p, batch.freq_pen, batch.pres_pen,
+            batch.rep_pen, batch.bias, batch.counts, batch.mask_bits,
+            use_planes=batch.use_planes, all_greedy=batch.all_greedy,
+            need_logprobs=False)[0]
+
+    jax.block_until_ready(call())                  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = call()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def run(smoke: bool = False) -> list:

@@ -11,8 +11,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.sampler import RequestSampler
 from repro.kernels import ref
+from repro.kernels.ops import batched_sample
 from repro.quant.int4 import quantize_array
 
 
@@ -91,6 +94,35 @@ def run(smoke: bool = False) -> list:
     us = _time(f3, x, qt.data, qt.scales, iters=iters)
     rows.append((f"kernel/w4a16_gemm_{M}x{K}x{N}", us,
                  f"{2*M*K*N/us/1e3:.1f}GFLOP/s(xla-cpu)"))
+
+    # batched on-device sampling (logits→token class): the fused
+    # bias/penalties/mask/temp/top-k/top-p/Gumbel pipeline vs the
+    # per-sequence host loop it replaced
+    Sb, Vv = (4, 256) if smoke else (8, 512)
+    lg = jax.random.normal(ks[0], (Sb, Vv), jnp.float32) * 3
+    seeds = jnp.arange(Sb, dtype=jnp.uint32)
+    ctr = jnp.zeros(Sb, jnp.int32)
+    temp = jnp.full(Sb, 0.9, jnp.float32)
+    topk = jnp.full(Sb, 40, jnp.int32)
+    topp = jnp.full(Sb, 0.95, jnp.float32)
+    zf = jnp.zeros(Sb, jnp.float32)
+    ones = jnp.ones(Sb, jnp.float32)
+    bias = jnp.zeros((Sb, Vv), jnp.float32)
+    cnts = jnp.zeros((Sb, Vv), jnp.float32)
+    maskb = jnp.full((Sb, -(-Vv // 32)), 0xFFFFFFFF, jnp.uint32)
+    f5 = (lambda *a: batched_sample(*a)[0])
+    us = _time(f5, lg, seeds, ctr, temp, topk, topp, zf, zf, ones,
+               bias, cnts, maskb, iters=iters)
+    lg_np = np.asarray(lg)
+    host = [RequestSampler(temperature=0.9, top_k=40, top_p=0.95, seed=i)
+            for i in range(Sb)]
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for i, s in enumerate(host):
+            s.sample(lg_np[i])
+    host_us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append((f"kernel/batched_sample_{Sb}x{Vv}", us,
+                 f"{host_us/us:.1f}x_vs_host_loop"))
 
     # rmsnorm (fusion class)
     R = (2, 64, 256) if smoke else (8, 512, 1024)

@@ -39,6 +39,9 @@ class ToolCall:
     id: str = ""
     function: FunctionCall = field(default_factory=FunctionCall)
     type: str = "function"
+    # set on streaming deltas (OpenAI shape): which call in the
+    # choice's tool_calls list this fragment extends
+    index: Optional[int] = None
 
 
 def _tool_calls_from(lst) -> Optional[List[ToolCall]]:

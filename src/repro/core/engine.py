@@ -4,10 +4,14 @@ Token-budget continuous batching: every engine step executes ONE
 ``Scheduler.plan_step`` — a mixed plan of decode tokens (one per running
 sequence) plus chunked prefill work filling the rest of the per-step
 token budget — and on the paged backend the whole plan dispatches as ONE
-fused ragged attention kernel call (``_execute_plan_fused`` ->
+fused logits→token step (``_execute_plan_fused`` ->
 ``PagedEngineBackend.run_step``): decode tokens are length-1 rows and
 prefill chunks multi-token rows of the same packed ragged layout the
-scheduler emits.  A prompt never prefills monolithically there: a
+scheduler emits, attention is a single ragged kernel call, and batched
+sampling (bias/penalties/grammar bitmasks/temperature/top-k/top-p +
+counter-based Gumbel draw) chains on device inside the same jit — only
+sampled token ids cross back to the host, never ``[B, V]`` logits
+(``stats()["runner"]["host_logit_rows"] == 0``).  A prompt never prefills monolithically there: a
 sequence in the PREFILLING state carries a chunk cursor
 (``_Seq.prefill_ids``/``prefill_pos``) and streams ragged rows across as
 many steps as the budget allows, so a long cold prompt admits once and
@@ -56,14 +60,25 @@ from repro.core import api
 from repro.core.paged_cache import OutOfPages
 from repro.core.paged_runner import PagedEngineBackend, paged_supported
 from repro.core.runner import ModelRunner
-from repro.core.sampler import RequestSampler
+from repro.core.sampler import RequestSampler, SamplingParamsBatch
 from repro.core.scheduler import AdmissionInfo, Scheduler
+from repro.core.tool_stream import ToolCallStreamer
 from repro.grammar import (GrammarMatcher, parse_gbnf, schema_to_gbnf,
                            tools_to_gbnf)
 from repro.grammar.gbnf import JSON_GBNF
 from repro.tokenizer import ByteBPETokenizer, DetokStreamer
 
 _SENTINEL = object()
+
+
+class _GrammarDeadEnd(Exception):
+    """A sampling row's grammar matcher allows NO token (the host
+    sampler's loud "grammar mask excludes every token" case) — carries
+    the affected requests so the step can fail them individually."""
+
+    def __init__(self, requests):
+        super().__init__("grammar mask excludes every token")
+        self.requests = requests
 
 
 @dataclass
@@ -100,6 +115,7 @@ class _Seq:
     prefill_ids: Optional[List[int]] = None   # tokens the KV must cover
     prefill_pos: int = 0                      # chunk cursor (tokens in KV)
     fork_of: Optional["_Seq"] = None          # CoW-fork source sibling
+    tool_stream: Optional[ToolCallStreamer] = None  # delta.tool_calls
 
     @property
     def prefill_remaining(self) -> int:
@@ -177,7 +193,8 @@ class MLCEngine:
                    enable_prefix_cache: bool = True,
                    prefill_chunk_size: int = 16,
                    token_budget: Optional[int] = None,
-                   max_cached_pages: Optional[int] = None):
+                   max_cached_pages: Optional[int] = None,
+                   max_cached_bytes: Optional[int] = None):
         """Load a model under ``name`` for ``chat_completions_create``.
 
         Backends: ``"paged"`` serves every request through the paged KV
@@ -209,6 +226,12 @@ class MLCEngine:
             Cap (pages of ``page_size`` tokens each) on the radix
             prefix cache, enforced with proactive LRU eviction on
             insert; ``None`` means bounded only by the page pool.
+        ``max_cached_bytes``
+            The same cap expressed in BYTES of KV payload — divided by
+            this model's per-page byte cost (``2 * n_layers * page_size
+            * n_kv_heads * head_dim * 2``), so one byte budget can
+            govern several loaded models of different shapes.  When
+            both caps are set the tighter one wins.
         ``page_size`` / ``num_pages``
             Tokens per physical KV page, and the pool size (default:
             ``(max_slots + 2) * ceil(max_context / page_size)`` — every
@@ -238,7 +261,8 @@ class MLCEngine:
                 page_size=page_size, num_pages=num_pages, seed=seed,
                 enable_prefix_cache=enable_prefix_cache,
                 chunk_size=prefill_chunk_size,
-                max_cached_pages=max_cached_pages)
+                max_cached_pages=max_cached_pages,
+                max_cached_bytes=max_cached_bytes)
             scheduler = Scheduler(max_slots=max_slots,
                                   max_context=max_context,
                                   page_manager=runner.pm)
@@ -382,7 +406,9 @@ class MLCEngine:
                     seed=None if req.seed is None else req.seed + i),
                 matcher=(GrammarMatcher(grammar, tok)
                          if grammar is not None else None),
-                streamer=DetokStreamer(tok))
+                streamer=DetokStreamer(tok),
+                tool_stream=(ToolCallStreamer()
+                             if tool_grammar and req.stream else None))
             seq.request = r
             r.seqs.append(seq)
         return r
@@ -502,13 +528,15 @@ class MLCEngine:
         """The single plan-execution path: revalidate the planner's
         ragged layout, bind this step's admissions so their first chunks
         join the same batch, and dispatch EVERYTHING (decode rows +
-        prefill chunks) as one fused ``run_step`` — one attention kernel
-        invocation per engine step.
+        prefill chunks) as one fused logits→token ``run_step`` — one
+        attention kernel invocation per engine step, with batched
+        sampling chained on device so only token ids (plus requested
+        top-logprobs rows) cross back to the host: ``[B, V]`` logits
+        never do (``stats()["runner"]["host_logit_rows"]`` stays 0).
 
         In-flight prefill rows precede admissions in the layout, so an
         older half-prefilled prompt claims its pages first — a newcomer
         must not starve it into an OutOfPages preempt/restart loop."""
-        sched = lm.scheduler
         rows: List[tuple] = []                 # (seq, tokens, kind)
         for row in plan.layout.rows:
             seq = row.seq
@@ -528,9 +556,26 @@ class MLCEngine:
             rows.extend(self._bind_admission(lm, r, first))
         if not rows:
             return False
+        while True:
+            try:
+                batch, consumers, n_top = self._pack_sampling(lm, rows)
+                break
+            except _GrammarDeadEnd as e:
+                # fail ONLY the dead-ended requests (loudly, like the
+                # host sampler always did) and dispatch the rest
+                dead = {id(r) for r in e.requests}
+                for r in e.requests:
+                    self._evict_request(lm, r, publish=False)
+                    self._fail(r, RuntimeError(
+                        "grammar mask excludes every token"))
+                rows = [t for t in rows if id(t[0].request) not in dead]
+                if not rows:
+                    return True
         try:
-            logits = lm.runner.run_step(
-                [(s.slot, toks, kind) for s, toks, kind in rows])
+            res = lm.runner.run_step(
+                [(s.slot, toks, kind) for s, toks, kind in rows],
+                sampling=batch, n_top=n_top,
+                return_logits=False)   # no token due -> transfer nothing
         except OutOfPages:
             self._preempt_newest(lm)
             return True
@@ -543,23 +588,77 @@ class MLCEngine:
                 self._evict_request(lm, r, publish=False)
                 self._fail(r, e)
             return True
-        lm.exec_steps += 1       # before logit consumption wakes callers:
+        lm.exec_steps += 1       # before token consumption wakes callers:
         #                          stats() must never see calls > steps
+        sampled = {}             # id(consumer seq) -> its sample row
+        for i, s in enumerate(consumers):
+            sampled[id(s)] = (int(res.tokens[i]), float(res.logprob[i]),
+                              res.top_ids[i], res.top_lps[i])
         for seq, toks, kind in rows:
             if seq.finish_reason is not None or seq.slot < 0:
                 continue                       # finished/aborted mid-loop
             if kind == "decode":
                 seq.generated.append(seq.next_token)
                 seq.pos += 1
-                self._consume_logits(lm, seq, logits[seq.slot])
+                self._consume_sampled(lm, seq, sampled[id(seq)])
             else:
                 seq.prefill_pos += len(toks)
                 if seq.prefill_remaining == 0:
                     try:
-                        self._complete_prefill(lm, seq, logits[seq.slot])
+                        self._complete_prefill(lm, seq, sampled=sampled)
                     except Exception as e:     # CoW fork ran out of pages
                         self._recover_prefill_failure(lm, seq.request, e)
         return True
+
+    def _pack_sampling(self, lm: _LoadedModel, rows: List[tuple]):
+        """Build the step's :class:`SamplingParamsBatch`: one sampling
+        row per decode row, plus — for each prefill row whose tokens
+        complete the prompt — one row for the sequence and each of its
+        fork-pending siblings (all drawing from the SAME parent logits
+        row with their own seeds), skipping resumed sequences that
+        already hold a pending token.  Grammar masks are exported as
+        packed bitmasks at pack time (the matcher state is exactly
+        post-last-accepted-token here); a matcher that allows NO token
+        raises :class:`_GrammarDeadEnd` naming the affected requests —
+        the device op would otherwise sample a grammar-illegal token
+        silently where the host sampler always failed loudly.  Returns
+        ``(batch | None, consumer seqs in batch order, bucketed
+        top-logprobs K)``."""
+        specs: List[tuple] = []
+        consumers: List[_Seq] = []
+        dead: Dict[int, _Request] = {}
+        n_top = 0
+        for b, (seq, toks, kind) in enumerate(rows):
+            if kind == "decode":
+                targets = [seq]
+            elif len(toks) == seq.prefill_remaining:
+                sibs = [s for s in seq.request.seqs
+                        if s.fork_of is seq and s.finish_reason is None]
+                targets = [s for s in [seq] + sibs
+                           if s.next_token is None]
+            else:
+                continue                       # mid-prompt: no token
+            for s in targets:
+                mask = s.matcher.token_bitmask() if s.matcher else None
+                if mask is not None and not mask.any():
+                    dead[id(s.request)] = s.request
+                    continue
+                specs.append((b, s.sampler, mask))
+                consumers.append(s)
+                req = s.request.req
+                if req.logprobs and req.top_logprobs > 0:
+                    n_top = max(n_top, req.top_logprobs)
+        if dead:
+            raise _GrammarDeadEnd(list(dead.values()))
+        if not specs:
+            return None, [], 0                 # mid-prompt-only step
+        vocab = lm.tokenizer.vocab_size
+        if n_top > 0:                          # bucket: bounded jit variants
+            n_top = min(1 << (n_top - 1).bit_length(), vocab)
+        batch = SamplingParamsBatch.build(specs, vocab)
+        batch.need_logprobs = any(s.request.req.logprobs
+                                  for s in consumers)
+        return batch, consumers, n_top
 
     def _claim_admission(self, lm: _LoadedModel, r: _Request):
         """Take a planned admission off the queue and vet its choice
@@ -793,10 +892,13 @@ class MLCEngine:
             r.cached_tokens,
             int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
 
-    def _complete_prefill(self, lm: _LoadedModel, seq: _Seq,
-                          logits: np.ndarray):
+    def _complete_prefill(self, lm: _LoadedModel, seq: _Seq, *,
+                          sampled: Optional[dict] = None):
         """The last prompt chunk landed: CoW-fork any waiting siblings
-        off the now-complete prompt KV, then sample first tokens."""
+        off the now-complete prompt KV, then consume the first tokens
+        the fused step already sampled on device (``sampled`` maps
+        ``id(seq)`` to each consumer's sample row — siblings drew from
+        the same logits row with their own seeds)."""
         r = seq.request
         seq.prefill_ids = None
         seq.prefill_pos = 0
@@ -815,7 +917,7 @@ class MLCEngine:
                 self._emit_role(r, s)
                 s.role_sent = True
             if s.next_token is None:           # fresh (not resumed) seq
-                self._consume_logits(lm, s, logits)
+                self._consume_sampled(lm, s, sampled[id(s)])
 
     def _prefill_dense(self, lm: _LoadedModel, r: _Request,
                        pending: List[_Seq]):
@@ -861,6 +963,9 @@ class MLCEngine:
     # -- token consumption ---------------------------------------------
     def _consume_logits(self, lm: _LoadedModel, seq: _Seq,
                         logits: np.ndarray):
+        """Dense-backend fallback: host-side sampling of a logits row
+        through :class:`RequestSampler` (the device path's oracle),
+        then the shared token consumption."""
         r = seq.request
         req = r.req
         tok = lm.tokenizer
@@ -869,6 +974,32 @@ class MLCEngine:
         t = seq.sampler.sample(logits[:V], mask)
         if req.logprobs:
             self._record_logprob(tok, seq, logits[:V], t, req.top_logprobs)
+        self._consume_token(lm, seq, t)
+
+    def _consume_sampled(self, lm: _LoadedModel, seq: _Seq,
+                         sample: tuple):
+        """Fused-path consumption of a device-sampled token: record the
+        batched top-logprobs gather (no logits re-materialization), then
+        the shared token consumption."""
+        t, lp, top_ids, top_lps = sample
+        req = seq.request.req
+        tok = lm.tokenizer
+        if req.logprobs:
+            entry = _lp_entry(tok, api.TokenLogprob, t, lp)
+            entry.top_logprobs = [
+                _lp_entry(tok, api.TopLogprob, int(i), float(v))
+                for i, v in zip(top_ids[:req.top_logprobs],
+                                top_lps[:req.top_logprobs])]
+            seq.logprobs.append(entry)
+        self._consume_token(lm, seq, t)
+
+    def _consume_token(self, lm: _LoadedModel, seq: _Seq, t: int):
+        """Advance one choice by its sampled token: grammar accept,
+        penalty bookkeeping, detokenized streaming, and the
+        EOS/stop/length finish checks."""
+        r = seq.request
+        req = r.req
+        tok = lm.tokenizer
         if seq.matcher is not None:
             seq.matcher.accept_token(t)
         seq.sampler.observe(t)
@@ -894,18 +1025,14 @@ class MLCEngine:
 
     def _record_logprob(self, tok, seq: _Seq, logits: np.ndarray,
                         t: int, top_k: int):
+        """Dense-path logprobs: log-softmax the host logits row (the
+        fused path gathers these on device instead)."""
         ls = logits.astype(np.float64)
         m = ls.max()
         ls = ls - m - np.log(np.exp(ls - m).sum())
-
-        def entry(cls, i):
-            return cls(token=tok.decode([i]), logprob=float(ls[i]),
-                       bytes=(list(tok.token_bytes(i))
-                              if i >= tok.n_special else None))
-
-        top = ([entry(api.TopLogprob, int(i))
+        top = ([_lp_entry(tok, api.TopLogprob, int(i), float(ls[i]))
                 for i in np.argsort(-ls)[:top_k]] if top_k > 0 else [])
-        e = entry(api.TokenLogprob, int(t))
+        e = _lp_entry(tok, api.TokenLogprob, int(t), float(ls[t]))
         e.top_logprobs = top
         seq.logprobs.append(e)
 
@@ -925,9 +1052,13 @@ class MLCEngine:
                     index=seq.index)]))
 
     def _emit_progress(self, r: _Request, seq: _Seq):
-        # forced tool calls stream nothing until the call is complete —
-        # the arguments JSON arrives whole, in the final chunk
-        if not r.req.stream or r.tool_grammar:
+        if not r.req.stream:
+            return
+        if r.tool_grammar:
+            # forced tool calls stream OpenAI-style delta.tool_calls:
+            # an opening id+name delta, then argument-JSON fragments as
+            # the constrained decode produces them
+            self._emit_tool_deltas(r, seq)
             return
         safe = self._safe_len(r.req, seq)
         if safe > seq.emitted:
@@ -941,6 +1072,18 @@ class MLCEngine:
             r.out.put(api.ChatCompletionChunk(
                 id=r.rid, model=r.model, choices=[choice]))
             seq.emitted = safe
+
+    def _emit_tool_deltas(self, r: _Request, seq: _Seq):
+        """Stream the new tool-call deltas the accumulated text unlocks
+        (one chunk per delta, mirroring OpenAI's chunking)."""
+        if seq.tool_stream is None:
+            return
+        for delta in seq.tool_stream.feed(seq.text):
+            r.out.put(api.ChatCompletionChunk(
+                id=r.rid, model=r.model,
+                choices=[api.ChunkChoice(
+                    delta=api.ChoiceDelta(content="", tool_calls=[delta]),
+                    index=seq.index)]))
 
     # -- completion ------------------------------------------------------
     def _finish_seq(self, lm: _LoadedModel, seq: _Seq, reason: str):
@@ -968,10 +1111,18 @@ class MLCEngine:
             seq.slot = -1
         last = r.done()
         if req.stream:
+            if r.tool_grammar and seq.tool_stream is not None:
+                # flush any argument fragments the detok flush surfaced
+                self._emit_tool_deltas(r, seq)
             delta = api.ChoiceDelta(
                 content="" if reason == "tool_calls"
                 else seq.text[seq.emitted:])
-            if reason == "tool_calls":
+            if reason == "tool_calls" and not (
+                    seq.tool_stream is not None
+                    and seq.tool_stream.emitted):
+                # non-incremental path (opportunistic "auto" parses):
+                # the whole call rides the final chunk; incrementally
+                # streamed calls were already delivered as fragments
                 delta.tool_calls = seq.tool_calls
             choice = api.ChunkChoice(delta=delta, index=seq.index,
                                      finish_reason=reason)
@@ -1112,6 +1263,13 @@ class MLCEngine:
     def shutdown(self):
         self._shutdown = True
         self._wake.set()
+
+
+def _lp_entry(tok, cls, i: int, lp: float):
+    """One logprob entry (token string + bytes) for token id ``i``."""
+    return cls(token=tok.decode([i]), logprob=lp,
+               bytes=(list(tok.token_bytes(i))
+                      if i >= tok.n_special else None))
 
 
 def _parse_tool_calls(text: str,

@@ -44,8 +44,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paged_cache import OutOfPages, PageManager
 from repro.core.prefix_cache import PrefixCache
+from repro.core.sampler import SampleResult, SamplingParamsBatch
 from repro.kernels.ops import (paged_attention, paged_prefill_attention,
                                paged_ragged_attention)
+from repro.kernels.sampling import batched_sample
 from repro.models import model
 from repro.models.attention import _project, _qk_norm
 from repro.models.layers import apply_rope, mlp, rmsnorm
@@ -66,7 +68,8 @@ class PagedModelRunner:
                  pages_per_seq: int = 8, seed: int = 0,
                  enable_prefix_cache: bool = True,
                  chunk_size: int = 16,
-                 max_cached_pages: Optional[int] = None):
+                 max_cached_pages: Optional[int] = None,
+                 max_cached_bytes: Optional[int] = None):
         assert paged_supported(cfg), f"{cfg.name}: paged path needs pure GQA"
         assert chunk_size >= 1
         self.cfg = cfg
@@ -75,8 +78,15 @@ class PagedModelRunner:
         self.max_slots = max_slots
         self.chunk_size = chunk_size
         self.pm = PageManager(num_pages, page_size, max_slots, pages_per_seq)
+        # K + V planes across every layer, bf16 — what one physical page
+        # of THIS model actually costs, so a byte cap can govern several
+        # loaded models with one number
+        self.page_bytes = (2 * cfg.n_layers * page_size * cfg.n_kv_heads
+                           * cfg.head_dim * 2)
         self.prefix_cache = (
-            PrefixCache(self.pm, max_cached_pages=max_cached_pages)
+            PrefixCache(self.pm, max_cached_pages=max_cached_pages,
+                        max_cached_bytes=max_cached_bytes,
+                        page_bytes=self.page_bytes)
             if enable_prefix_cache else None)
         self.seq_tokens: Dict[int, List[int]] = {}   # tokens whose KV is paged
         self.last_prefill_info: Dict[str, int] = {"prefix_cached_tokens": 0}
@@ -87,6 +97,11 @@ class PagedModelRunner:
         self.n_decode_steps = 0           # batched decode steps
         self.n_decode_tokens = 0          # tokens decoded across the batch
         self.n_ragged_steps = 0           # fused ragged kernel steps
+        self.n_sampled_tokens = 0         # tokens sampled ON DEVICE
+        #: logit ROWS ([V] float vectors) pulled device→host — 0 on the
+        #: fused engine path, where only sampled token ids cross back
+        self.host_logit_rows = 0
+        self.host_sync_bytes = 0          # device→host payload bytes
         #: bounded trace of jitted steps, for liveness assertions/tests:
         #: ("decode", batch_size) | ("chunk", n_valid_tokens) |
         #: ("ragged", n_decode_rows, n_prefill_tokens)
@@ -110,6 +125,14 @@ class PagedModelRunner:
         # run_step pads both to powers of two so the count stays bounded
         # at O(log(max_slots) * log(max chunk tokens))
         self._ragged_jit = jax.jit(self._ragged_step, donate_argnums=(1, 2))
+        # the fused logits→token variant the engine drives: sampling is
+        # chained after ragged attention INSIDE the same jitted step, so
+        # a whole engine step stays one dispatch and only token ids (not
+        # [B, V] logits) come back; variants add (S, n_top) buckets
+        self._ragged_sample_jit = jax.jit(
+            self._ragged_sample_step, donate_argnums=(1, 2),
+            static_argnames=("vocab", "n_top", "use_planes",
+                             "all_greedy", "need_logprobs"))
 
         def _copy(k, v, src, dst):
             return (k.at[:, dst].set(k[:, src]),
@@ -254,6 +277,35 @@ class PagedModelRunner:
         out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
         return out, k_pages, v_pages
 
+    def _ragged_sample_step(self, params, k_pages, v_pages, tokens, pos,
+                            page_tables, contexts, starts, lengths,
+                            page_idx, page_off, parent, seeds, counters,
+                            temperature, top_k, top_p, freq_pen,
+                            pres_pen, rep_pen, bias, counts, mask_bits,
+                            *, vocab: int, n_top: int,
+                            use_planes: bool, all_greedy: bool,
+                            need_logprobs: bool):
+        """The fused logits→token step: ragged attention, then batched
+        sampling over the rows' last-valid-token logits, in ONE jit.
+
+        ``parent [S]`` maps each sampling row to the attention row whose
+        logits it draws from (several sampling rows may share a parent —
+        ``n``-way siblings sampling one freshly prefilled prompt); the
+        remaining per-row arrays are the :class:`SamplingParamsBatch`
+        fields.  Returns ``(token [S], logprob [S], top_ids [S, n_top],
+        top_lps [S, n_top])`` plus the updated page pools — ``[B, V]``
+        logits never leave the device."""
+        logits, k_pages, v_pages = self._ragged_step(
+            params, k_pages, v_pages, tokens, pos, page_tables,
+            contexts, starts, lengths, page_idx, page_off)
+        rows = logits[parent][:, :vocab]
+        out = batched_sample(rows, seeds, counters, temperature, top_k,
+                             top_p, freq_pen, pres_pen, rep_pen, bias,
+                             counts, mask_bits, n_top=n_top,
+                             use_planes=use_planes, all_greedy=all_greedy,
+                             need_logprobs=need_logprobs)
+        return out, k_pages, v_pages
+
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
         layers = list(params["decoder"]["prefix"])
@@ -342,6 +394,8 @@ class PagedModelRunner:
         self.n_prefill_tokens += T
         self.step_log.append(("chunk", T))
         out = np.asarray(logits[T - 1].astype(jnp.float32))
+        self.host_logit_rows += 1
+        self.host_sync_bytes += out.nbytes
         self._last_logits_np = out
         return out
 
@@ -371,8 +425,9 @@ class PagedModelRunner:
             b *= 2
         return b
 
-    def run_step(self, rows: List[Tuple[int, List[int], str]]
-                 ) -> Dict[int, np.ndarray]:
+    def run_step(self, rows: List[Tuple[int, List[int], str]],
+                 sampling: Optional[SamplingParamsBatch] = None,
+                 n_top: int = 0, return_logits: bool = True):
         """Execute one fused ragged step: ONE attention kernel call for
         a whole engine step's mixed decode + prefill work.
 
@@ -390,9 +445,19 @@ class PagedModelRunner:
 
         Raises :class:`OutOfPages` BEFORE any sequence state mutates
         when the page pool cannot back every row (the engine preempts
-        and replans).  Returns each row's last-valid-token logits
-        ``{sid: [V] float32}`` — for decode rows the next-token logits,
-        for prefill rows the logits after the chunk's final token.
+        and replans).
+
+        With ``sampling`` (a :class:`SamplingParamsBatch` whose
+        ``parent`` entries index into ``rows``) the step is the fused
+        logits→token pipeline: batched sampling chains after ragged
+        attention inside the SAME jitted call and a
+        :class:`SampleResult` (token ids + logprobs, ordered like the
+        batch) returns — ``[B, V]`` logits never cross the device→host
+        boundary.  Without it (the legacy/test path) each row's
+        last-valid-token logits return as ``{sid: [V] float32}``,
+        counted by ``host_logit_rows`` — unless ``return_logits=False``
+        (a step that only advances mid-prompt prefill produces no token
+        and must transfer nothing).
         """
         assert rows, "run_step needs at least one row"
         sids = [sid for sid, _, _ in rows]
@@ -440,13 +505,19 @@ class PagedModelRunner:
             contexts[b] = start + n
             starts[b] = start
             lengths[b] = n
-        logits, self.k_pages, self.v_pages = self._ragged_jit(
-            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
-            jnp.asarray(pos), jnp.asarray(page_tables),
-            jnp.asarray(contexts), jnp.asarray(starts),
-            jnp.asarray(lengths), jnp.asarray(page_idx),
-            jnp.asarray(page_off))
-        out = np.asarray(logits.astype(jnp.float32))
+        attn_args = (jnp.asarray(tok), jnp.asarray(pos),
+                     jnp.asarray(page_tables), jnp.asarray(contexts),
+                     jnp.asarray(starts), jnp.asarray(lengths),
+                     jnp.asarray(page_idx), jnp.asarray(page_off))
+        if sampling is not None:
+            sampled = self._dispatch_sampled(sampling, n_top, attn_args)
+        else:
+            logits, self.k_pages, self.v_pages = self._ragged_jit(
+                self.params, self.k_pages, self.v_pages, *attn_args)
+            if return_logits:
+                out = np.asarray(logits.astype(jnp.float32))
+                self.host_logit_rows += B
+                self.host_sync_bytes += out[:B].nbytes
         n_dec = n_pf = 0
         result: Dict[int, np.ndarray] = {}
         for b, (sid, toks, kind) in enumerate(rows):
@@ -458,10 +529,56 @@ class PagedModelRunner:
             else:
                 n_pf += len(toks)
                 self.n_prefill_tokens += len(toks)
-            result[sid] = out[b]
+            if sampling is None and return_logits:
+                result[sid] = out[b]
         self.n_ragged_steps += 1
         self.step_log.append(("ragged", n_dec, n_pf))
-        return result
+        return sampled if sampling is not None else result
+
+    def _dispatch_sampled(self, sampling: SamplingParamsBatch,
+                          n_top: int, attn_args: tuple) -> SampleResult:
+        """Run the fused attention+sampling jit for one packed step and
+        pull back only the per-row sample outputs.  The sampling-row
+        count is bucketed to a power of two (pad rows sample greedily
+        from attention row 0 and are dropped), keeping jit variants
+        bounded like the (B, C) attention buckets."""
+        S = len(sampling)
+        assert S >= 1, "sampled step needs at least one sampling row"
+        Sb = self._bucket(S)
+
+        def pad(a, fill=0):
+            out = np.full((Sb,) + a.shape[1:], fill, a.dtype)
+            out[:S] = a
+            return out
+
+        (token, lp, top_ids, top_lps), self.k_pages, self.v_pages = \
+            self._ragged_sample_jit(
+                self.params, self.k_pages, self.v_pages, *attn_args,
+                jnp.asarray(pad(sampling.parent)),
+                jnp.asarray(pad(sampling.seeds)),
+                jnp.asarray(pad(sampling.counters)),
+                jnp.asarray(pad(sampling.temperature)),
+                jnp.asarray(pad(sampling.top_k)),
+                jnp.asarray(pad(sampling.top_p)),
+                jnp.asarray(pad(sampling.freq_pen)),
+                jnp.asarray(pad(sampling.pres_pen)),
+                jnp.asarray(pad(sampling.rep_pen)),
+                jnp.asarray(pad(sampling.bias)),
+                jnp.asarray(pad(sampling.counts)),
+                jnp.asarray(pad(sampling.mask_bits, 0xFFFFFFFF)),
+                vocab=sampling.vocab, n_top=n_top,
+                use_planes=sampling.use_planes,
+                all_greedy=sampling.all_greedy,
+                need_logprobs=sampling.need_logprobs)
+        res = SampleResult(tokens=np.asarray(token)[:S],
+                           logprob=np.asarray(lp)[:S],
+                           top_ids=np.asarray(top_ids)[:S],
+                           top_lps=np.asarray(top_lps)[:S])
+        self.n_sampled_tokens += S
+        self.host_sync_bytes += (res.tokens.nbytes + res.logprob.nbytes
+                                 + res.top_ids.nbytes
+                                 + res.top_lps.nbytes)
+        return res
 
     def fork_seq(self, src_sid: int) -> int:
         """Copy-on-write fork of a live sequence: the new sequence shares
@@ -534,6 +651,8 @@ class PagedModelRunner:
         self.n_decode_tokens += B
         self.step_log.append(("decode", B))
         out = np.asarray(logits[:, 0].astype(jnp.float32))
+        self.host_logit_rows += B
+        self.host_sync_bytes += out.nbytes
         return {s: out[i] for i, s in enumerate(sids)}
 
     def free(self, seq_id: int, publish: bool = False):
@@ -564,6 +683,9 @@ class PagedModelRunner:
                "decode_steps": self.n_decode_steps,
                "decode_tokens": self.n_decode_tokens,
                "ragged_steps": self.n_ragged_steps,
+               "sampled_tokens": self.n_sampled_tokens,
+               "host_logit_rows": self.host_logit_rows,
+               "host_sync_bytes": self.host_sync_bytes,
                "attn_kernel_calls": (self.n_ragged_steps
                                      + self.n_prefill_chunks
                                      + self.n_decode_steps)}
@@ -597,7 +719,8 @@ class PagedEngineBackend:
                  max_context: int = 256, page_size: int = 16,
                  num_pages: Optional[int] = None, seed: int = 0,
                  enable_prefix_cache: bool = True, chunk_size: int = 16,
-                 max_cached_pages: Optional[int] = None):
+                 max_cached_pages: Optional[int] = None,
+                 max_cached_bytes: Optional[int] = None):
         pages_per_seq = -(-max_context // page_size)
         if num_pages is None:
             # room for every slot at full context plus cache headroom
@@ -606,7 +729,8 @@ class PagedEngineBackend:
             cfg, params, num_pages=num_pages, page_size=page_size,
             max_slots=max_slots, pages_per_seq=pages_per_seq, seed=seed,
             enable_prefix_cache=enable_prefix_cache, chunk_size=chunk_size,
-            max_cached_pages=max_cached_pages)
+            max_cached_pages=max_cached_pages,
+            max_cached_bytes=max_cached_bytes)
         self.cfg = cfg
         self.max_context = max_context
         self.max_slots = max_slots
@@ -643,16 +767,24 @@ class PagedEngineBackend:
         returns the last token's logits."""
         return self.runner.prefill_chunk(self._slot_seq[slot], tokens)
 
-    def run_step(self, rows: List[Tuple[int, List[int], str]]
-                 ) -> Dict[int, np.ndarray]:
+    def run_step(self, rows: List[Tuple[int, List[int], str]],
+                 sampling: Optional[SamplingParamsBatch] = None,
+                 n_top: int = 0, return_logits: bool = True):
         """Fused plan execution: ``rows`` are ``(slot, tokens, kind)``
         ragged rows (see :meth:`PagedModelRunner.run_step`); one
-        attention kernel call covers them all.  Returns per-slot
-        last-valid-token logits.  Raises :class:`OutOfPages` before any
-        state mutates when the pool cannot back the whole step."""
+        attention kernel call covers them all.  With ``sampling``
+        (``parent`` indexes into ``rows``) the step samples on device
+        and returns a :class:`SampleResult`; otherwise per-slot
+        last-valid-token logits return (the legacy/test path) — or
+        nothing at all with ``return_logits=False``.  Raises
+        :class:`OutOfPages` before any state mutates when the pool
+        cannot back the whole step."""
         out = self.runner.run_step(
             [(self._slot_seq[slot], toks, kind)
-             for slot, toks, kind in rows])
+             for slot, toks, kind in rows],
+            sampling=sampling, n_top=n_top, return_logits=return_logits)
+        if sampling is not None or not return_logits:
+            return out
         return {slot: out[self._slot_seq[slot]] for slot, _, _ in rows}
 
     def fork_slot(self, src_slot: int, dst_slot: int):

@@ -81,10 +81,22 @@ class PrefixCache:
     """Radix tree token-ids -> physical KV pages, with LRU eviction."""
 
     def __init__(self, pm: PageManager,
-                 max_cached_pages: Optional[int] = None):
+                 max_cached_pages: Optional[int] = None,
+                 max_cached_bytes: Optional[int] = None,
+                 page_bytes: Optional[int] = None):
         self.pm = pm
         self.page_size = pm.page_size
         self.max_cached_pages = max_cached_pages
+        # byte-based cap: pages x per-model page bytes.  One byte budget
+        # can govern the caches of several loaded models whose page
+        # sizes/shapes differ — each converts it to its own page count.
+        self.max_cached_bytes = max_cached_bytes
+        self.page_bytes = page_bytes
+        if max_cached_bytes is not None:
+            assert page_bytes, "byte cap needs the per-model page_bytes"
+            by_bytes = max_cached_bytes // page_bytes
+            self.max_cached_pages = (by_bytes if max_cached_pages is None
+                                     else min(max_cached_pages, by_bytes))
         self.root = _Node(None, (), None, 0)
         self._clock = 0
         self._pages: set = set()             # pages the cache holds a ref on
@@ -284,10 +296,14 @@ class PrefixCache:
         return len(self._pages)
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "hit_tokens": self.hit_tokens,
-                "evictions": self.evictions,
-                "cap_evictions": self.cap_evictions,
-                "max_cached_pages": self.max_cached_pages,
-                "cached_pages": self.cached_pages,
-                "evictable_pages": self.evictable_pages()}
+        out = {"hits": self.hits, "misses": self.misses,
+               "hit_tokens": self.hit_tokens,
+               "evictions": self.evictions,
+               "cap_evictions": self.cap_evictions,
+               "max_cached_pages": self.max_cached_pages,
+               "cached_pages": self.cached_pages,
+               "evictable_pages": self.evictable_pages()}
+        if self.page_bytes:
+            out["cached_bytes"] = self.cached_pages * self.page_bytes
+            out["max_cached_bytes"] = self.max_cached_bytes
+        return out

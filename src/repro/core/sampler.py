@@ -1,11 +1,38 @@
-"""Per-request sampling: temperature / top-k / top-p, penalties, logit
-bias, seeded RNG, and grammar bitmask application.  Runs on host (numpy)
-— logits arrive from the accelerator once per step.
+"""Per-request sampling params + the host sampling fallback/oracle.
+
+Since the batched device sampler landed (``kernels/sampling.py``), the
+paged engine path never materializes logits on the host: the whole
+pipeline — logit bias, frequency/presence/repetition penalties, grammar
+bitmask, temperature, top-k, top-p, and the draw — runs on the
+accelerator inside the fused ragged step, and only sampled token ids
+cross back.  :class:`RequestSampler` remains in two roles:
+
+* the **dense-backend fallback** (that path still pulls logits to host
+  and samples here, in the same pipeline order), and
+* the **property-test oracle** for the device op — greedy results must
+  match exactly; stochastic results must match at the distribution
+  level (:meth:`RequestSampler.dist` exposes the final filtered
+  distribution the draw is taken from).
+
+:class:`SamplingParamsBatch` is the packed struct-of-arrays form of one
+step's sampling rows the engine ships to ``run_step``: per-row scalars
+(temperature/top-k/top-p/penalties, counter-based PRNG seeds), dense
+bias and generated-token-count planes, and packed ``uint32`` grammar
+bitmasks.  ``parent[s]`` names the attention row whose logits row ``s``
+samples from — several rows may share one parent (``n``-way siblings
+sampling a freshly completed prompt prefill).
+
+RNG contract: the device draw is counter-based — row ``s`` uses
+``fold_in(PRNGKey(seed), counter)`` where ``seed`` is the request seed
+plus the choice index and ``counter`` counts tokens this sequence has
+sampled (``n_sampled``).  The host fallback keeps its stateful
+generator; both are deterministic under a fixed request seed.
 """
 from __future__ import annotations
 
 from collections import Counter
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,21 +51,31 @@ class RequestSampler:
         self.presence_penalty = presence_penalty
         self.repetition_penalty = repetition_penalty
         self.logit_bias = logit_bias or {}
-        self.rng = np.random.default_rng(seed)
+        # an unseeded request still needs a concrete seed for the
+        # counter-based device PRNG — draw one, then both paths (host
+        # stateful generator, device counter keys) derive from it
+        self.seed = (int(seed) if seed is not None
+                     else int(np.random.default_rng().integers(2**31 - 1)))
+        self.rng = np.random.default_rng(self.seed)
         self.counts: Counter = Counter()       # generated-token counts
+        self.n_sampled = 0                     # device PRNG counter
 
     def observe(self, token: int):
         self.counts[token] += 1
+        self.n_sampled += 1
 
-    def sample(self, logits: np.ndarray,
-               grammar_mask: Optional[np.ndarray] = None) -> int:
-        logits = logits.astype(np.float64).copy()
+    def penalized(self, logits: np.ndarray,
+                  grammar_mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Bias + penalties + grammar mask (the pipeline prefix shared
+        by the greedy and stochastic arms).  float32 end to end so the
+        host oracle and the device op round identically."""
+        logits = logits.astype(np.float32).copy()
         for t, b in self.logit_bias.items():
             if 0 <= t < logits.shape[0]:
                 logits[t] += b
         if self.counts:
             idx = np.fromiter(self.counts.keys(), dtype=np.int64)
-            cnt = np.fromiter(self.counts.values(), dtype=np.float64)
+            cnt = np.fromiter(self.counts.values(), dtype=np.float32)
             logits[idx] -= self.frequency_penalty * cnt
             logits[idx] -= self.presence_penalty
             if self.repetition_penalty != 1.0:
@@ -50,15 +87,25 @@ class RequestSampler:
             if not grammar_mask.any():
                 raise RuntimeError("grammar mask excludes every token")
             logits = np.where(grammar_mask, logits, -np.inf)
-        if self.temperature == 0.0:
-            return int(np.argmax(logits))
+        return logits
+
+    def dist(self, logits: np.ndarray,
+             grammar_mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """The final filtered/renormalized distribution a stochastic
+        draw is taken from (temperature > 0) — also the oracle the
+        device sampler is property-tested against."""
+        logits = self.penalized(logits, grammar_mask)
+        assert self.temperature > 0.0, "greedy has no distribution"
         logits = logits / self.temperature
         if self.top_k > 0:
-            kth = np.partition(logits, -self.top_k)[-self.top_k]
+            # top_k >= vocab means "disabled" (the device op and ref
+            # oracle clamp the same way)
+            k = min(self.top_k, logits.shape[0])
+            kth = np.partition(logits, -k)[-k]
             logits = np.where(logits >= kth, logits, -np.inf)
-        probs = _softmax(logits)
+        probs = _softmax(logits, fallback_mask=grammar_mask)
         if self.top_p < 1.0:
-            order = np.argsort(-probs)
+            order = np.argsort(-probs, kind="stable")
             csum = np.cumsum(probs[order])
             cutoff = max(1, int(np.searchsorted(csum, self.top_p) + 1))
             keep = order[:cutoff]
@@ -66,17 +113,142 @@ class RequestSampler:
             mask[keep] = True
             probs = np.where(mask, probs, 0.0)
             probs = probs / probs.sum()
+        return probs
+
+    def sample(self, logits: np.ndarray,
+               grammar_mask: Optional[np.ndarray] = None) -> int:
+        if self.temperature == 0.0:
+            return _argmax_allowed(self.penalized(logits, grammar_mask),
+                                   grammar_mask)
+        probs = self.dist(logits, grammar_mask)
         return int(self.rng.choice(probs.shape[0], p=probs))
 
 
-def _softmax(x: np.ndarray) -> np.ndarray:
+def _argmax_allowed(x: np.ndarray,
+                    mask: Optional[np.ndarray] = None) -> int:
+    """Argmax restricted to grammar-allowed tokens: even when every
+    allowed logit is -inf (all-underflow degenerate) the result is an
+    allowed token, never a masked one."""
+    if mask is None:
+        return int(np.argmax(x))
+    idx = np.flatnonzero(mask)
+    return int(idx[np.argmax(x[idx])])
+
+
+def _softmax(x: np.ndarray,
+             fallback_mask: Optional[np.ndarray] = None) -> np.ndarray:
     m = np.max(x[np.isfinite(x)]) if np.isfinite(x).any() else 0.0
     e = np.exp(np.clip(x - m, -700, 50))
     e[~np.isfinite(x)] = 0.0
     s = e.sum()
     if s <= 0:
-        # degenerate: fall back to argmax one-hot
+        # degenerate (every candidate underflowed): one-hot argmax,
+        # restricted to the grammar-allowed set — the unrestricted
+        # argmax could land on a masked token when the allowed logits
+        # are all -inf
         out = np.zeros_like(e)
-        out[int(np.argmax(x))] = 1.0
+        out[_argmax_allowed(x, fallback_mask)] = 1.0
         return out
     return e / s
+
+
+@dataclass
+class SamplingParamsBatch:
+    """Struct-of-arrays sampling params for one fused step's ``S``
+    sampling rows (built host-side, consumed inside the jitted step).
+
+    ``parent[s]`` indexes the attention row providing row ``s``'s
+    logits; ``vocab`` bounds sampling to the tokenizer's vocabulary
+    (model vocab may be padded larger).  The dense ``[S, V]``
+    bias/count planes are only materialized when some row actually
+    carries logit bias or penalties (``use_planes``) — the common case
+    ships placeholder ``[S, 1]`` zeros and the device op statically
+    skips the stage, so per-step host→device traffic is scalars plus
+    mask words, not ``2·S·V`` floats."""
+    parent: np.ndarray        # [S] int32 — attention row index
+    seeds: np.ndarray         # [S] uint32
+    counters: np.ndarray      # [S] int32
+    temperature: np.ndarray   # [S] f32
+    top_k: np.ndarray         # [S] int32
+    top_p: np.ndarray         # [S] f32
+    freq_pen: np.ndarray      # [S] f32
+    pres_pen: np.ndarray      # [S] f32
+    rep_pen: np.ndarray       # [S] f32
+    bias: np.ndarray          # [S, V] f32 ([S, 1] when not use_planes)
+    counts: np.ndarray        # [S, V] f32 ([S, 1] when not use_planes)
+    mask_bits: np.ndarray     # [S, ceil(V/32)] uint32
+    vocab: int
+    use_planes: bool = True   # static: any bias/penalty row in batch
+    all_greedy: bool = False  # static: every row temperature == 0
+    #: static: some consumer requested logprobs (set by the engine —
+    #: the builder only sees samplers); False skips the [S, V]
+    #: log-softmax on device
+    need_logprobs: bool = True
+
+    def __len__(self) -> int:
+        return int(self.parent.shape[0])
+
+    @classmethod
+    def build(cls, specs: List[Tuple[int, object, Optional[np.ndarray]]],
+              vocab: int) -> "SamplingParamsBatch":
+        """Pack ``(parent_row, RequestSampler, packed_bitmask|None)``
+        specs into device-ready arrays (all-ones bitmask = row
+        unconstrained)."""
+        s_count = len(specs)
+        words = -(-vocab // 32)
+        use_planes = any(
+            bool(sampler.logit_bias)
+            or (bool(sampler.counts)
+                and bool(sampler.frequency_penalty
+                         or sampler.presence_penalty
+                         or sampler.repetition_penalty != 1.0))
+            for _, sampler, _ in specs)
+        plane_v = vocab if use_planes else 1
+        out = cls(
+            parent=np.zeros(s_count, np.int32),
+            seeds=np.zeros(s_count, np.uint32),
+            counters=np.zeros(s_count, np.int32),
+            temperature=np.zeros(s_count, np.float32),
+            top_k=np.zeros(s_count, np.int32),
+            top_p=np.ones(s_count, np.float32),
+            freq_pen=np.zeros(s_count, np.float32),
+            pres_pen=np.zeros(s_count, np.float32),
+            rep_pen=np.ones(s_count, np.float32),
+            bias=np.zeros((s_count, plane_v), np.float32),
+            counts=np.zeros((s_count, plane_v), np.float32),
+            mask_bits=np.full((s_count, words), 0xFFFFFFFF, np.uint32),
+            vocab=vocab, use_planes=use_planes,
+            all_greedy=all(sampler.temperature == 0.0
+                           for _, sampler, _ in specs))
+        for s, (row, sampler, bitmask) in enumerate(specs):
+            out.parent[s] = row
+            out.seeds[s] = np.uint32(sampler.seed & 0xFFFFFFFF)
+            out.counters[s] = sampler.n_sampled
+            out.temperature[s] = sampler.temperature
+            out.top_k[s] = sampler.top_k
+            out.top_p[s] = sampler.top_p
+            out.freq_pen[s] = sampler.frequency_penalty
+            out.pres_pen[s] = sampler.presence_penalty
+            out.rep_pen[s] = sampler.repetition_penalty
+            if use_planes:
+                for t, b in sampler.logit_bias.items():
+                    if 0 <= t < vocab:
+                        out.bias[s, t] = b
+                for t, c in sampler.counts.items():
+                    if 0 <= t < vocab:
+                        out.counts[s, t] = c
+            if bitmask is not None:
+                out.mask_bits[s, :bitmask.shape[0]] = bitmask
+                out.mask_bits[s, bitmask.shape[0]:] = 0
+        return out
+
+
+@dataclass
+class SampleResult:
+    """Device-sampled step output, one entry per sampling row: token
+    ids, raw-distribution logprobs of the sampled tokens, and the
+    optional batched top-``K`` logprobs gather."""
+    tokens: np.ndarray        # [S] int32
+    logprob: np.ndarray       # [S] f32
+    top_ids: np.ndarray       # [S, K] int32
+    top_lps: np.ndarray       # [S, K] f32

@@ -67,10 +67,20 @@ class AdmissionInfo:
 @dataclass
 class RaggedRow:
     """One row of the packed ragged step layout: ``n`` consecutive
-    tokens of one sequence (``kind="decode"`` rows always carry 1)."""
+    tokens of one sequence (``kind="decode"`` rows always carry 1).
+
+    ``completes`` marks a prefill row whose tokens finish the
+    sequence's prompt this step — the row whose final logits the fused
+    step SAMPLES from (for the sequence and any fork-pending siblings);
+    mid-prompt rows produce no token and their logits never leave the
+    device.  Decode rows always sample.  The flag is the planner's
+    statement of that contract (exercised by the planner unit tests);
+    the engine re-derives it at execution time because admission rows
+    join the layout after planning and planned rows can shrink."""
     seq: object
     n: int
     kind: str                             # "decode" | "prefill"
+    completes: bool = False               # prefill row finishing the prompt
 
 
 @dataclass
@@ -213,6 +223,10 @@ class Scheduler:
                 plan.layout.add(seq, n, "prefill")
                 used += n
                 rem -= n
+                if rem == 0:
+                    # this row's final token finishes the prompt: the
+                    # fused step samples its logits on device
+                    plan.layout.rows[-1].completes = True
         # admissions into whatever budget is left, cheapest suffix first
         # probing every waiting request costs a radix walk each — skip
         # the whole pass when no slot or budget could admit anything

@@ -35,6 +35,20 @@ class _Trie:
 _TRIE_CACHE: Dict[int, _Trie] = {}
 
 
+def pack_token_bitmask(mask: np.ndarray) -> np.ndarray:
+    """Pack a bool ``[V]`` token mask into ``uint32 [ceil(V/32)]`` words
+    (bit ``v % 32`` of word ``v // 32`` = token ``v`` allowed) — the
+    wire format the device sampling op consumes, 32x smaller than the
+    bool mask it replaces on the host→device path."""
+    v = mask.shape[-1]
+    w = -(-v // 32)
+    padded = np.zeros(w * 32, dtype=bool)
+    padded[:v] = mask
+    bits = padded.reshape(w, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)).sum(
+        axis=1, dtype=np.uint32)
+
+
 def _token_trie(tokenizer) -> _Trie:
     key = id(tokenizer)
     if key in _TRIE_CACHE:
@@ -173,3 +187,8 @@ class GrammarMatcher:
         if self.can_terminate():
             mask[self.tok.eos_id] = True
         return mask
+
+    def token_bitmask(self) -> np.ndarray:
+        """``token_mask()`` packed to ``uint32 [ceil(V/32)]`` for the
+        batched device sampler (see :func:`pack_token_bitmask`)."""
+        return pack_token_bitmask(self.token_mask())

@@ -17,6 +17,7 @@ from repro.kernels.paged_attention import (paged_prefill_attention
 from repro.kernels.paged_attention import (paged_ragged_attention
                                            as _paged_ragged)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.sampling import batched_sample as _batched_sample
 from repro.kernels.w4a16_gemm import w4a16_gemm as _w4a16
 
 
@@ -57,6 +58,27 @@ def paged_ragged_attention(q, k_pages, v_pages, page_tables, contexts,
     ``PagedModelRunner.run_step``)."""
     return _paged_ragged(q, k_pages, v_pages, page_tables, contexts,
                          starts, scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_top", "use_planes",
+                                             "all_greedy",
+                                             "need_logprobs"))
+def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
+                   freq_pen, pres_pen, rep_pen, bias, counts, mask_bits,
+                   *, n_top: int = 0, use_planes: bool = True,
+                   all_greedy: bool = False, need_logprobs: bool = True):
+    """One fused logits→token sampling op over ``[S, V]`` rows (bias,
+    penalties, grammar bitmask, temperature/top-k/top-p, counter-based
+    Gumbel-max draw, optional top-``n_top`` logprobs gather).  The
+    engine path chains the same function INSIDE the fused ragged step
+    jit (``PagedModelRunner.run_step``) so sampling adds no dispatch;
+    this standalone wrapper serves tests and benchmarks.  Jit variants
+    are keyed by ``(S, V, n_top)`` — callers bucket S."""
+    return _batched_sample(logits, seeds, counters, temperature, top_k,
+                           top_p, freq_pen, pres_pen, rep_pen, bias,
+                           counts, mask_bits, n_top=n_top,
+                           use_planes=use_planes, all_greedy=all_greedy,
+                           need_logprobs=need_logprobs)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",

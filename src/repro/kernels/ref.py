@@ -133,6 +133,70 @@ def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.reshape(B, C, H, D).astype(q.dtype)
 
 
+def batched_sample_ref(logits, seeds, counters, temperature, top_k,
+                       top_p, freq_pen, pres_pen, rep_pen, bias, counts,
+                       mask_bits, *, n_top: int = 0):
+    """Row-at-a-time oracle for ``kernels.sampling.batched_sample``.
+
+    Mirrors the host ``RequestSampler`` pipeline order (bias →
+    frequency/presence/repetition penalties → grammar mask →
+    temperature → top-k → top-p) one row at a time with no batched
+    tricks, then draws the same counter-based Gumbel noise — the
+    batched op must match token-for-token.
+    """
+    import numpy as np
+
+    from repro.kernels.sampling import ALLOWED_FLOOR, FILTERED, MASKED
+
+    logits = np.asarray(logits, np.float32)
+    S, V = logits.shape
+    tokens = np.zeros(S, np.int32)
+    for s in range(S):
+        x = logits[s] + np.asarray(bias[s], np.float32)
+        cnt = np.asarray(counts[s], np.float32)
+        seen = cnt > 0
+        x = x - float(freq_pen[s]) * cnt
+        x = np.where(seen, x - float(pres_pen[s]), x)
+        rep = float(rep_pen[s])
+        x = np.where(seen, np.where(x > 0, x / rep, x * rep), x)
+        words = np.asarray(mask_bits[s], np.uint32)
+        allowed = ((words[np.arange(V) // 32]
+                    >> (np.arange(V) % 32).astype(np.uint32)) & 1) \
+            .astype(bool)
+        x = np.where(allowed, np.maximum(x, ALLOWED_FLOOR), MASKED)
+        if float(temperature[s]) == 0.0:
+            tokens[s] = int(np.argmax(x))
+            continue
+        z = x / float(temperature[s])
+        k = int(top_k[s])
+        if k > 0:
+            kth = np.sort(z)[::-1][min(k, V) - 1]
+            z = np.where(z < kth, FILTERED, z)
+        if float(top_p[s]) < 1.0:     # top_p >= 1: filter disabled
+            e = np.exp(z - z.max())
+            p = e / e.sum()
+            order = np.argsort(-p, kind="stable")
+            csum = np.cumsum(p[order])
+            keep_sorted = (csum - p[order]) < float(top_p[s])
+            keep_sorted[0] = True       # host keeps >= 1 token (top-1)
+            keep = np.zeros(V, bool)
+            keep[order] = keep_sorted
+            z = np.where(keep, z, FILTERED)
+        key = jax.random.fold_in(jax.random.PRNGKey(int(seeds[s])),
+                                 int(counters[s]))
+        g = np.asarray(jax.random.gumbel(key, (V,), jnp.float32))
+        tokens[s] = int(np.argmax(z + g))
+    ls = np.asarray(jax.nn.log_softmax(jnp.asarray(logits), axis=-1))
+    lp = ls[np.arange(S), tokens]
+    if n_top > 0:
+        top_ids = np.argsort(-ls, axis=-1, kind="stable")[:, :n_top]
+        top_lps = np.take_along_axis(ls, top_ids, axis=-1)
+    else:
+        top_ids = np.zeros((S, 0), np.int32)
+        top_lps = np.zeros((S, 0), np.float32)
+    return tokens, lp, top_ids.astype(np.int32), top_lps
+
+
 def w4a16_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                    group: int) -> jax.Array:
     """x: [M,K] bf16; w_packed: [K//2, N] int8 (2 nibbles along K);

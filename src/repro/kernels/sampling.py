@@ -1,0 +1,175 @@
+"""Batched on-device sampling: one fused logits→token op per step.
+
+This is the device half of the WebLLM lesson that per-token host
+round-trips dominate small-batch decode: instead of pulling ``[B, V]``
+logits to the host and running a per-sequence numpy softmax/argsort/
+``rng.choice`` loop, the whole step's sampling pipeline — logit bias,
+frequency/presence/repetition penalties, grammar bitmasks, temperature,
+top-k, top-p, and the random draw — runs as ONE compiled op over the
+packed ``[S, V]`` logit rows and returns sampled token ids ``[S]``
+(plus an optional batched top-logprobs gather), so only ``S`` ints (not
+``S×V`` floats) cross the device→host boundary per emitted token.
+
+Everything here is jnp: on the CPU host XLA fuses the pipeline the same
+way it executes the interpret-mode Pallas attention kernels; on a TPU
+host the op compiles natively and rides the same jitted step as the
+fused ragged attention (``PagedModelRunner.run_step``), adding zero
+extra dispatches.
+
+Randomness is **counter-based**, not stateful: row ``s`` draws Gumbel
+noise from ``fold_in(PRNGKey(seeds[s]), counters[s])`` where the seed is
+``request.seed + choice_index`` and the counter is how many tokens that
+sequence has sampled so far.  Seeded runs are therefore deterministic
+regardless of batch composition, step boundaries, or preempt/resume —
+and ``n`` sibling choices are bit-identical to ``n`` independent seeded
+requests.  ``temperature == 0`` reduces exactly to argmax (no noise).
+
+Masking uses large *finite* sentinels rather than ``-inf`` so degenerate
+rows stay well-defined: grammar-disallowed tokens sit at ``MASKED``
+(-1e38) strictly below the ``ALLOWED_FLOOR`` (-1e37) every allowed token
+is clamped to, so even when every allowed logit underflows the argmax
+still lands on an allowed token (mirroring the host sampler's fixed
+degenerate fallback).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: grammar-disallowed tokens are pinned here — strictly below any
+#: allowed token, which is clamped to ALLOWED_FLOOR at worst
+MASKED = -1e38
+#: the worst value an *allowed* token can take after bias/penalties
+ALLOWED_FLOOR = -1e37
+#: top-k / top-p filtered tokens (allowed by the grammar but cut from
+#: the sampling support) — below the floor so Gumbel noise can never
+#: resurrect them, but distinct from MASKED for debuggability
+FILTERED = -3e37
+
+
+def unpack_bitmask(mask_bits: jax.Array, vocab: int) -> jax.Array:
+    """Unpack ``uint32 [S, ceil(V/32)]`` grammar bitmasks (bit ``v%32``
+    of word ``v//32`` = token ``v`` allowed) into bool ``[S, V]``."""
+    idx = jnp.arange(vocab)
+    words = mask_bits[:, idx // 32]                        # [S, V]
+    return ((words >> (idx % 32).astype(jnp.uint32)) & 1).astype(bool)
+
+
+def _penalized(logits, bias, counts, freq_pen, pres_pen, rep_pen,
+               mask_bits, use_planes):
+    """Bias + penalties + grammar mask, mirroring the host
+    ``RequestSampler`` pipeline order exactly (the oracle contract).
+    With ``use_planes=False`` (a static batch-level flag: no row has
+    bias/penalties) the dense ``[S, V]`` planes are placeholder-shaped
+    and the whole penalty stage is skipped — the common hot path
+    uploads only per-row scalars and mask words."""
+    x = logits.astype(jnp.float32)
+    if use_planes:
+        x = x + bias
+        seen = counts > 0
+        x = x - freq_pen[:, None] * counts
+        x = jnp.where(seen, x - pres_pen[:, None], x)
+        rep = rep_pen[:, None]
+        x = jnp.where(seen, jnp.where(x > 0, x / rep, x * rep), x)
+    allowed = unpack_bitmask(mask_bits, logits.shape[-1])
+    # finite sentinels: allowed tokens never sink below ALLOWED_FLOOR,
+    # disallowed ones sit strictly under it — an all-underflow row still
+    # argmaxes to an allowed token
+    return jnp.where(allowed, jnp.maximum(x, ALLOWED_FLOOR), MASKED)
+
+
+def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
+                   freq_pen, pres_pen, rep_pen, bias, counts, mask_bits,
+                   *, n_top: int = 0, use_planes: bool = True,
+                   all_greedy: bool = False, need_logprobs: bool = True):
+    """Sample one token per row of ``logits [S, V]`` in a single device
+    op.
+
+    Per-row params (all ``[S]``): ``seeds``/``counters`` drive the
+    counter-based PRNG; ``temperature == 0`` is exact argmax; ``top_k ==
+    0`` / ``top_p >= 1`` disable those filters.  ``bias``/``counts`` are
+    dense ``[S, V]`` (logit bias and generated-token counts for the
+    frequency/presence/repetition penalties); ``mask_bits`` is the
+    packed ``uint32 [S, ceil(V/32)]`` grammar bitmask (all-ones when a
+    row is unconstrained).  ``use_planes``, ``all_greedy``, and
+    ``need_logprobs`` are STATIC batch-level flags skipping whole
+    stages for the common cases: no row carries bias/penalties (planes
+    placeholder-shaped, stage skipped), every row has ``temperature ==
+    0`` (the sort/softmax/Gumbel stochastic pipeline is skipped), no
+    row asked for logprobs (the ``[S, V]`` log-softmax is skipped and
+    the logprob outputs are zeros).
+
+    The draw is Gumbel-max over the filtered distribution: ``argmax(x/T
+    + g)`` samples exactly ``softmax(x/T)`` restricted to the surviving
+    support, with no renormalization or cumulative-inverse transform —
+    and collapses to plain argmax at ``T == 0``.
+
+    Returns ``(token [S] int32, logprob [S] f32, top_ids [S, n_top]
+    int32, top_lps [S, n_top] f32)``: ``logprob`` is the sampled token's
+    log-probability under the *raw* distribution (pre-bias/penalty/mask,
+    the OpenAI ``logprobs`` semantics), and the top arrays are the
+    batched ``top_logprobs`` gather (empty when ``n_top == 0``)."""
+    S, V = logits.shape
+    assert n_top <= V, (n_top, V)
+    x = _penalized(logits, bias, counts, freq_pen, pres_pen, rep_pen,
+                   mask_bits, use_planes)
+    greedy = jnp.argmax(x, axis=-1)
+
+    if all_greedy:
+        token = greedy.astype(jnp.int32)
+    else:
+        # temperature (guarded for the greedy rows), then top-k
+        t = jnp.where(temperature > 0, temperature, 1.0)
+        z = x / t[:, None]
+        srt = jnp.sort(z, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(
+            srt, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+        z = jnp.where((top_k > 0)[:, None] & (z < kth), FILTERED, z)
+
+        # top-p over the softmax of the surviving support.  Keep rule
+        # matches numpy searchsorted-left + 1: token j (prob-desc
+        # order) survives iff the cumulative mass BEFORE it is < p.
+        m = jnp.max(z, axis=-1, keepdims=True)
+        e = jnp.exp(z - m)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        order = jnp.argsort(-p, axis=-1, stable=True)
+        sp = jnp.take_along_axis(p, order, axis=-1)
+        keep_sorted = (jnp.cumsum(sp, axis=-1) - sp) < top_p[:, None]
+        # the host keeps AT LEAST the top token (max(1, cutoff)): a
+        # top_p <= 0 row must degrade to top-1, not filter everything
+        keep_sorted = keep_sorted.at[:, 0].set(True)
+        inv = jnp.argsort(order, axis=-1, stable=True)
+        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+        # top_p >= 1 disables the filter entirely (the host-oracle
+        # semantics): float32 cumsum rounding must not cut a real tail
+        # token
+        keep = keep | (top_p >= 1.0)[:, None]
+        z = jnp.where(keep, z, FILTERED)
+
+        # counter-based per-row keys: deterministic for a (seed,
+        # counter) pair no matter how rows are batched across steps
+        def _noise(seed, counter):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+            return jax.random.gumbel(key, (V,), jnp.float32)
+
+        g = jax.vmap(_noise)(seeds, counters)
+        stoch = jnp.argmax(z + g, axis=-1)
+        token = jnp.where(temperature == 0.0, greedy,
+                          stoch).astype(jnp.int32)
+
+    # raw-distribution logprobs (the OpenAI semantics: what the model
+    # believed, not what the filters allowed); skipped as a whole when
+    # no row in the batch asked
+    if need_logprobs or n_top > 0:
+        ls = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        lp = jnp.take_along_axis(ls, token[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    else:
+        lp = jnp.zeros((S,), jnp.float32)
+    if n_top > 0:
+        top_lps, top_ids = jax.lax.top_k(ls, n_top)
+        top_ids = top_ids.astype(jnp.int32)
+    else:
+        top_ids = jnp.zeros((S, 0), jnp.int32)
+        top_lps = jnp.zeros((S, 0), jnp.float32)
+    return token, lp, top_ids, top_lps

@@ -223,7 +223,9 @@ def test_run_step_out_of_pages_is_atomic(setup):
 def test_engine_one_kernel_call_per_step():
     """Acceptance: on the paged backend every engine step that executes
     work dispatches exactly ONE attention kernel call (previously >= 1
-    per sequence)."""
+    per sequence), and — since batched on-device sampling — NO logit
+    row ever crosses the device→host boundary (``host_logit_rows == 0``:
+    only sampled token ids come back)."""
     cfg = get_config("llama-3.1-8b", reduced=True)
     eng = MLCEngine()
     eng.load_model("m", cfg, max_slots=3, max_context=128, seed=0,
@@ -244,6 +246,12 @@ def test_engine_one_kernel_call_per_step():
     assert s["engine"]["exec_steps"] > 0
     assert s["runner"]["ragged_steps"] == s["runner"]["attn_kernel_calls"]
     assert s["runner"]["attn_kernel_calls"] == s["engine"]["exec_steps"]
+    assert s["runner"]["host_logit_rows"] == 0
+    assert s["runner"]["sampled_tokens"] > 0
+    # device→host traffic is tokens/logprobs, not [B, V] logit planes:
+    # a handful of bytes per sampled token
+    assert s["runner"]["host_sync_bytes"] \
+        <= 16 * s["runner"]["sampled_tokens"]
     eng.shutdown()
 
 
@@ -260,11 +268,11 @@ def test_poisoned_fused_step_fails_request_not_loop():
     orig = backend.run_step
     state = {"armed": True}
 
-    def poisoned(rows):
+    def poisoned(rows, **kw):
         if state["armed"]:
             state["armed"] = False
             raise RuntimeError("poisoned step")
-        return orig(rows)
+        return orig(rows, **kw)
 
     backend.run_step = poisoned
     with pytest.raises(RuntimeError, match="poisoned step"):
@@ -275,6 +283,35 @@ def test_poisoned_fused_step_fails_request_not_loop():
     r = eng.chat_completions_create(ChatCompletionRequest(
         messages=[ChatMessage("user", "still alive?")], model="m",
         max_tokens=4, temperature=0.0))
+    assert r.usage.completion_tokens > 0
+    eng.shutdown()
+
+
+def test_grammar_dead_end_fails_request_not_engine(monkeypatch):
+    """A grammar state that allows NO next token fails THAT request
+    loudly ("grammar mask excludes every token" — the host sampler's
+    historical behavior) instead of letting the device op sample a
+    grammar-illegal token silently; the engine survives for later
+    requests."""
+    import numpy as np
+
+    from repro.grammar.matcher import GrammarMatcher
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    eng = MLCEngine()
+    eng.load_model("m", cfg, max_slots=2, max_context=128, seed=0,
+                   backend="paged", prefill_chunk_size=4)
+    monkeypatch.setattr(
+        GrammarMatcher, "token_bitmask",
+        lambda self: np.zeros(-(-self.tok.vocab_size // 32), np.uint32))
+    with pytest.raises(RuntimeError, match="excludes every token"):
+        eng.chat_completions_create(ChatCompletionRequest(
+            messages=[ChatMessage("user", "json please")], model="m",
+            max_tokens=8, temperature=0.0,
+            response_format={"type": "json_object"}))
+    monkeypatch.undo()
+    r = eng.chat_completions_create(ChatCompletionRequest(
+        messages=[ChatMessage("user", "still alive?")], model="m",
+        max_tokens=3, temperature=0.0))
     assert r.usage.completion_tokens > 0
     eng.shutdown()
 

@@ -111,6 +111,31 @@ def test_tool_choice_required_yields_parseable_calls(engine):
     assert args["city"] in ("paris", "tokyo")
 
 
+def test_tool_call_streams_incremental_deltas(engine):
+    """A constrained tool call streams OpenAI-style delta.tool_calls:
+    an opening id+name delta, then argument-JSON fragments whose
+    concatenation is the exact arguments payload — instead of one whole
+    call buffered into the final chunk."""
+    chunks = list(engine.chat_completions_create(_req(
+        max_tokens=120, temperature=0.8, seed=9, stream=True,
+        tools=TOOLS, tool_choice="required")))
+    deltas = [tc for c in chunks if c.choices
+              for tc in (c.choices[0].delta.tool_calls or [])]
+    assert len(deltas) >= 2                   # opening + >= 1 fragment
+    assert deltas[0].id.startswith("call_")
+    assert deltas[0].index == 0
+    assert deltas[0].function.name == "get_weather"
+    args = "".join(d.function.arguments for d in deltas)
+    assert json.loads(args)["city"] in ("paris", "tokyo")
+    final = next(c for c in chunks
+                 if c.choices and c.choices[0].finish_reason)
+    assert final.choices[0].finish_reason == "tool_calls"
+    # the call was delivered incrementally — not re-sent whole
+    assert final.choices[0].delta.tool_calls is None
+    for c in chunks:
+        json.dumps(c.to_dict())               # worker-boundary safe
+
+
 def test_tool_choice_named_function(engine):
     resp = engine.chat_completions_create(_req(
         max_tokens=120, temperature=0.8, seed=8, tools=TOOLS,

@@ -112,6 +112,45 @@ def test_max_cached_pages_proactive_eviction():
     assert pm.num_free_pages + cache.cached_pages == 16
 
 
+def test_max_cached_bytes_cap():
+    """The byte-based cap converts to a per-model page count via
+    page_bytes (tighter of the two caps wins) and is enforced the same
+    proactive way — one byte budget can govern several loaded models."""
+    pm = _pm()
+    # 3 pages worth of bytes at 128 B/page
+    cache = PrefixCache(pm, max_cached_bytes=3 * 128 + 50, page_bytes=128)
+    assert cache.max_cached_pages == 3
+    for base in (0, 100, 200):
+        s = pm.new_seq()
+        pm.append_tokens(s.seq_id, 8)
+        cache.insert([base + i for i in range(8)], pm.seqs[s.seq_id].pages)
+        pm.free_seq(s.seq_id)
+        assert cache.cached_pages <= 3
+    st = cache.stats()
+    assert st["max_cached_bytes"] == 3 * 128 + 50
+    assert st["cached_bytes"] == st["cached_pages"] * 128 <= 3 * 128
+    # both caps set: the tighter one wins
+    tight = PrefixCache(_pm(), max_cached_pages=1,
+                        max_cached_bytes=10 * 128, page_bytes=128)
+    assert tight.max_cached_pages == 1
+
+
+def test_max_cached_bytes_engine_knob():
+    """load_model(max_cached_bytes=...) reaches the cache with the
+    model's real per-page KV byte cost."""
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    eng = MLCEngine()
+    page_bytes = (2 * cfg.n_layers * 16 * cfg.n_kv_heads
+                  * cfg.head_dim * 2)
+    eng.load_model("m", cfg, max_slots=2, max_context=128, seed=0,
+                   backend="paged", page_size=16,
+                   max_cached_bytes=2 * page_bytes)
+    pc = eng.models["m"].runner.prefix_cache
+    assert pc.page_bytes == page_bytes
+    assert pc.max_cached_pages == 2
+    eng.shutdown()
+
+
 def test_peek_len_is_pure():
     """peek_len reports the cached-prefix length without perturbing LRU
     clocks or hit/miss counters (the scheduler probes every step)."""

@@ -79,3 +79,19 @@ def test_frequency_penalty_accumulates():
     assert s.sample(logits) == 0
     s.observe(0)
     assert s.sample(logits) == 1
+
+
+def test_degenerate_allowed_underflow_respects_mask():
+    """Regression: when every grammar-ALLOWED logit is -inf (e.g. a
+    -inf logit_bias), the degenerate softmax fallback used to argmax the
+    raw vector and could return a masked token.  It must pick an
+    allowed one — greedy and stochastic alike."""
+    V = 16
+    mask = np.zeros(V, bool)
+    mask[[5, 9]] = True
+    for temp in (0.0, 1.0):
+        s = RequestSampler(temperature=temp, seed=3,
+                           logit_bias={5: float("-inf"),
+                                       9: float("-inf")})
+        for _ in range(5):
+            assert s.sample(np.zeros(V), mask) in (5, 9)

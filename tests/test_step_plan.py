@@ -158,6 +158,23 @@ def test_plan_emits_packed_ragged_layout():
     assert plan.layout.offsets(stride=16) == [0, 16, 32]
 
 
+def test_layout_marks_prompt_completing_rows():
+    """A merged prefill row that exhausts the sequence's remaining
+    prompt is flagged ``completes`` (the fused step samples its final
+    logits on device); mid-prompt rows and decode rows are not."""
+    s = Scheduler(max_slots=4, max_context=64)
+    d = _Running(next_token=1)
+    short = _Running(prefill_remaining=6)    # finishes within budget
+    long = _Running(prefill_remaining=40)    # stays mid-prompt
+    for x in (d, short, long):
+        s.admit(x)
+    plan = s.plan_step(15, chunk_size=4)
+    rows = {id(r.seq): r for r in plan.layout.rows}
+    assert rows[id(d)].completes is False and rows[id(d)].kind == "decode"
+    assert rows[id(short)].completes is True and rows[id(short)].n == 6
+    assert rows[id(long)].completes is False
+
+
 def test_ragged_layout_pad_counts():
     """Bucketing a 3-row / 12-token layout to (4, 16) pads 1 whole row
     and 52 query slots in total."""

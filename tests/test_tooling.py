@@ -64,6 +64,14 @@ def test_benchmarks_smoke():
     fused = [ln for ln in lines
              if ln.startswith("engine/mixed_kernel_calls_per_step")]
     assert fused and fused[0].split(",")[1] == "1.0", out
+    # batched on-device sampling: the mixed workload moves NO logit
+    # rows device→host (token ids + logprobs only)
+    sync = [ln for ln in lines
+            if ln.startswith("engine/mixed_host_sync_bytes_per_step")]
+    assert sync and sync[0].split(",")[2] == "0logit_rows", out
+    assert any(ln.startswith("engine/mixed_sample_ms_per_step")
+               for ln in lines), out
+    assert any(ln.startswith("kernel/batched_sample") for ln in lines), out
     # the run records the perf trajectory in-repo
     report = ROOT / "BENCH_ragged_step.json"
     assert report.exists(), "benchmarks.run wrote no report"
