@@ -38,6 +38,8 @@ REGISTRY = [
      "radix prefix cache: turn-2 prefill latency + tok/s, cached vs cold"),
     ("benchmarks.roofline_report",
      "dry-run roofline table summary (reads benchmarks/dryrun_results)"),
+    ("benchmarks.router_bench",
+     "replicated serving: pool aggregate tok/s + prefix-affinity hit rate"),
 ]
 
 

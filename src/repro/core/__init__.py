@@ -1,7 +1,8 @@
 from repro.core.api import (ChatCompletionRequest, ChatCompletionResponse,  # noqa
                             ChatMessage, FunctionCall, Logprobs,
                             ResponseFormat, ToolCall)
-from repro.core.engine import MLCEngine  # noqa: F401
+from repro.core.engine import EngineCrashed, MLCEngine  # noqa: F401
 from repro.core.paged_runner import PagedEngineBackend  # noqa: F401
 from repro.core.prefix_cache import PrefixCache  # noqa: F401
-from repro.core.worker import ServiceWorkerMLCEngine  # noqa: F401
+from repro.core.router import NoHealthyReplicas, RouterEngine  # noqa: F401
+from repro.core.worker import ServiceWorkerMLCEngine, WorkerCrashed  # noqa: F401

@@ -124,6 +124,8 @@ class ChatCompletionRequest:
     temperature: float = 1.0
     top_p: float = 1.0
     top_k: int = 0
+    # min-p filter: drop tokens with p < min_p * max(p) (0 = disabled)
+    min_p: float = 0.0
     frequency_penalty: float = 0.0
     presence_penalty: float = 0.0
     repetition_penalty: float = 1.0

@@ -163,6 +163,13 @@ class _LoadedModel:
     image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
 
 
+class EngineCrashed(RuntimeError):
+    """The engine loop thread died (unexpected exception, or shutdown
+    with requests still in flight): every live request is failed with
+    this instead of hanging toward ``STALL_TIMEOUT_S``.  Typed so the
+    worker boundary and the router can treat it as 'replica dead'."""
+
+
 class MLCEngine:
     """Backend engine.  See ServiceWorkerMLCEngine for the frontend."""
 
@@ -398,7 +405,7 @@ class MLCEngine:
                 index=i,
                 sampler=RequestSampler(
                     temperature=req.temperature, top_p=req.top_p,
-                    top_k=req.top_k,
+                    top_k=req.top_k, min_p=req.min_p,
                     frequency_penalty=req.frequency_penalty,
                     presence_penalty=req.presence_penalty,
                     repetition_penalty=req.repetition_penalty,
@@ -425,24 +432,52 @@ class MLCEngine:
                 self._thread.start()
 
     def _loop(self):
-        idle_since = time.time()
-        while not self._shutdown:
-            busy = self.step()
-            if busy:
-                idle_since = time.time()
-            else:
-                if time.time() - idle_since > 5.0:
-                    # retire — but re-check for work under the lock so a
-                    # request enqueued this instant is not stranded
-                    with self._lock:
-                        if any(lm.scheduler.waiting or lm.scheduler.running
-                               for lm in self.models.values()):
-                            idle_since = time.time()
-                            continue
-                        self._thread = None
-                        return
-                self._wake.wait(timeout=0.05)
-                self._wake.clear()
+        try:
+            idle_since = time.time()
+            while not self._shutdown:
+                busy = self.step()
+                if busy:
+                    idle_since = time.time()
+                else:
+                    if time.time() - idle_since > 5.0:
+                        # retire — but re-check for work under the lock
+                        # so a request enqueued this instant is not
+                        # stranded
+                        with self._lock:
+                            if any(lm.scheduler.waiting
+                                   or lm.scheduler.running
+                                   for lm in self.models.values()):
+                                idle_since = time.time()
+                                continue
+                            self._thread = None
+                            return
+                    self._wake.wait(timeout=0.05)
+                    self._wake.clear()
+        except BaseException as e:
+            # step() already contains the per-batch failure handling; an
+            # exception escaping to here means the loop itself is broken.
+            # Fail everything live with a typed error — callers must
+            # never ride the stall timeout for a dead loop.
+            self._die(EngineCrashed(f"engine loop crashed: {e!r}"))
+            return
+        # _shutdown was requested: anything still live will never be
+        # stepped again, so fail it promptly and typed.  (A loop thread
+        # spawned AFTER shutdown lands here immediately, giving
+        # post-shutdown submissions the same clean error.)
+        self._die(EngineCrashed("engine shut down with requests in flight"))
+
+    def _die(self, exc: Exception):
+        """Fail every live request with ``exc`` (loop-death path)."""
+        with self._lock:
+            live = list(self._requests.values())
+        for r in live:
+            try:
+                lm = self.models.get(r.model)
+                if lm is not None:
+                    self._evict_request(lm, r, publish=False)
+            except Exception:
+                pass            # engine state may already be broken
+            self._fail(r, exc)
 
     def step(self) -> bool:
         """One engine step across all models.  Returns True if any work."""

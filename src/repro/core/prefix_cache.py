@@ -41,6 +41,20 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.paged_cache import PageManager
 
 
+def page_prefix_keys(ids, page_size: int) -> List[Tuple[int, ...]]:
+    """The page-granular key chain the radix tree uses for ``ids``: one
+    ``page_size``-token tuple per FULL leading page, in order.  The
+    i-th key is the edge into depth-``i+1`` of the tree.  Exposed as a
+    module function so supervisors can mirror the cache's keying
+    exactly without holding a live tree — ``core/router.py`` builds its
+    prefix-affinity map from these same keys, which is what makes
+    'route turn 2 to the replica holding turn 1's pages' line up with
+    what that replica's ``PrefixCache`` can actually serve."""
+    n_full = len(ids) // page_size
+    return [tuple(ids[j * page_size:(j + 1) * page_size])
+            for j in range(n_full)]
+
+
 def _common_prefix(a, b) -> int:
     n = 0
     for x, y in zip(a, b):
@@ -127,8 +141,8 @@ class PrefixCache:
         node = self.root
         pages: List[int] = []
         i = 0
-        while i + ps <= len(ids):
-            child = node.children.get(tuple(ids[i:i + ps]))
+        for key in page_prefix_keys(ids, ps):
+            child = node.children.get(key)
             if child is None:
                 break
             child.last_access = self._clock
@@ -161,8 +175,8 @@ class PrefixCache:
         ps = self.page_size
         node = self.root
         i = 0
-        while i + ps <= len(ids):
-            child = node.children.get(tuple(ids[i:i + ps]))
+        for key in page_prefix_keys(ids, ps):
+            child = node.children.get(key)
             if child is None:
                 break
             node = child
@@ -187,8 +201,7 @@ class PrefixCache:
         ps = self.page_size
         node = self.root
         n_full = len(ids) // ps
-        for j in range(n_full):
-            key = tuple(ids[j * ps:(j + 1) * ps])
+        for j, key in enumerate(page_prefix_keys(ids, ps)):
             child = node.children.get(key)
             if child is None:
                 child = _Node(node, key, pages[j], self._clock)

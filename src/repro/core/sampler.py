@@ -39,7 +39,8 @@ import numpy as np
 
 class RequestSampler:
     def __init__(self, *, temperature: float = 1.0, top_p: float = 1.0,
-                 top_k: int = 0, frequency_penalty: float = 0.0,
+                 top_k: int = 0, min_p: float = 0.0,
+                 frequency_penalty: float = 0.0,
                  presence_penalty: float = 0.0,
                  repetition_penalty: float = 1.0,
                  logit_bias: Optional[Dict[int, float]] = None,
@@ -47,6 +48,10 @@ class RequestSampler:
         self.temperature = max(0.0, temperature)
         self.top_p = top_p
         self.top_k = top_k
+        # min-p filter: drop tokens with p < min_p * max(p).  Clamped to
+        # [0, 1] — the top token always survives, so min_p can never
+        # empty the distribution (device op clamps identically)
+        self.min_p = min(1.0, max(0.0, min_p))
         self.frequency_penalty = frequency_penalty
         self.presence_penalty = presence_penalty
         self.repetition_penalty = repetition_penalty
@@ -104,14 +109,20 @@ class RequestSampler:
             kth = np.partition(logits, -k)[-k]
             logits = np.where(logits >= kth, logits, -np.inf)
         probs = _softmax(logits, fallback_mask=grammar_mask)
+        # top-p and min-p both filter on the SAME pre-filter probs, then
+        # one renormalization — matching the device op stage order
+        keep = None
         if self.top_p < 1.0:
             order = np.argsort(-probs, kind="stable")
             csum = np.cumsum(probs[order])
             cutoff = max(1, int(np.searchsorted(csum, self.top_p) + 1))
-            keep = order[:cutoff]
-            mask = np.zeros_like(probs, dtype=bool)
-            mask[keep] = True
-            probs = np.where(mask, probs, 0.0)
+            keep = np.zeros_like(probs, dtype=bool)
+            keep[order[:cutoff]] = True
+        if self.min_p > 0.0:
+            mp = probs >= self.min_p * probs.max()
+            keep = mp if keep is None else keep & mp
+        if keep is not None:
+            probs = np.where(keep, probs, 0.0)
             probs = probs / probs.sum()
         return probs
 
@@ -171,6 +182,7 @@ class SamplingParamsBatch:
     temperature: np.ndarray   # [S] f32
     top_k: np.ndarray         # [S] int32
     top_p: np.ndarray         # [S] f32
+    min_p: np.ndarray         # [S] f32 (0 = filter disabled)
     freq_pen: np.ndarray      # [S] f32
     pres_pen: np.ndarray      # [S] f32
     rep_pen: np.ndarray       # [S] f32
@@ -211,6 +223,7 @@ class SamplingParamsBatch:
             temperature=np.zeros(s_count, np.float32),
             top_k=np.zeros(s_count, np.int32),
             top_p=np.ones(s_count, np.float32),
+            min_p=np.zeros(s_count, np.float32),
             freq_pen=np.zeros(s_count, np.float32),
             pres_pen=np.zeros(s_count, np.float32),
             rep_pen=np.ones(s_count, np.float32),
@@ -227,6 +240,7 @@ class SamplingParamsBatch:
             out.temperature[s] = sampler.temperature
             out.top_k[s] = sampler.top_k
             out.top_p[s] = sampler.top_p
+            out.min_p[s] = getattr(sampler, "min_p", 0.0)
             out.freq_pen[s] = sampler.frequency_penalty
             out.pres_pen[s] = sampler.presence_penalty
             out.rep_pen[s] = sampler.repetition_penalty

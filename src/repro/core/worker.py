@@ -14,17 +14,34 @@ crosses the boundary the same JSON-only way (``{"kind": "stats"}``), so
 a frontend can watch scheduler/page/prefix-cache counters live —
 including the fused-dispatch figures (``runner.attn_kernel_calls`` vs
 ``engine.exec_steps``; see ``MLCEngine.stats``).
+
+Crash signaling crosses the port as well: if the serve thread dies
+unexpectedly it posts ``{"kind": "crash"}`` on its way down, and the
+frontend additionally polls the serve thread's liveness while waiting —
+either way every pending call (and every later one) fails promptly with
+a typed :class:`WorkerCrashed` instead of hanging toward a stall/queue
+timeout.  Supervisors (``core/router.py``) use the same machinery via
+:meth:`ServiceWorkerMLCEngine.kill_pending` when an external heartbeat
+declares the replica dead.
 """
 from __future__ import annotations
 
 import json
 import queue
 import threading
+import time
 import uuid
 from typing import Dict, Iterator, Optional, Union
 
 from repro.core import api
-from repro.core.engine import MLCEngine
+from repro.core.engine import EngineCrashed, MLCEngine
+
+
+class WorkerCrashed(RuntimeError):
+    """The backend worker died (serve thread gone, or declared dead by a
+    supervisor's heartbeat): in-flight calls can never complete.  Typed —
+    distinct from per-request errors — so a supervising router can tell
+    'this replica is gone, restart it' from 'this request was bad'."""
 
 
 class _MessagePort:
@@ -35,32 +52,35 @@ class _MessagePort:
         self.to_client: "queue.Queue[str]" = queue.Queue()
 
 
-def _get(q: "queue.Queue[dict]", mid: str, what: str) -> dict:
-    """Frontend-side wait.  Longer than the backend's own stall window
-    (MLCEngine.STALL_TIMEOUT_S = 300 s): a genuinely stalled backend
-    reports itself through an {"kind": "error"} message first, so a slow
-    grammar-constrained generation that streams no chunks for minutes is
-    not killed — and a dead worker still surfaces a clear error instead
-    of a bare queue.Empty."""
-    try:
-        return q.get(timeout=600)
-    except queue.Empty:
-        raise TimeoutError(
-            f"worker unresponsive: no {what} for message {mid} "
-            "within 600 s") from None
-
-
 class BackendWorker:
     """Owns the real MLCEngine; speaks only JSON over the port."""
 
-    def __init__(self, port: _MessagePort, engine: Optional[MLCEngine] = None):
+    def __init__(self, port: _MessagePort, engine: Optional[MLCEngine] = None,
+                 replica_id: Optional[str] = None):
         self.port = port
         self.engine = engine or MLCEngine()
+        self.replica_id = replica_id        # pool slot name (router mode)
         self._rids: Dict[str, str] = {}     # message id -> engine request id
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
     def _serve(self):
+        try:
+            self._serve_loop()
+        except BaseException as e:
+            # crash signaling on the port: whatever killed the serve
+            # thread (malformed message, broken engine object, ...) is
+            # broadcast so the frontend fails pending calls promptly
+            # with a typed WorkerCrashed instead of waiting out a
+            # timeout.  The thread then dies; the replica is gone.
+            self._post({"kind": "crash",
+                        "message": f"backend worker crashed: {e!r}",
+                        "replica": self.replica_id})
+
+    def _serve_loop(self):
         while True:
             raw = self.port.to_worker.get()
             msg = json.loads(raw)
@@ -95,9 +115,11 @@ class BackendWorker:
                                 "message": f"stats failed: {e}"})
                 else:
                     self._post({"kind": "stats", "id": msg.get("id"),
-                                "data": data})
+                                "data": data, "replica": self.replica_id})
             elif kind == "ping":
-                self._post({"kind": "pong", "id": msg.get("id")})
+                # heartbeat message: supervisors poll this for liveness
+                self._post({"kind": "pong", "id": msg.get("id"),
+                            "replica": self.replica_id})
 
     def _run_completion(self, msg: dict):
         mid = msg["id"]
@@ -117,7 +139,11 @@ class BackendWorker:
                             "data": resp.to_dict()})
                 self._post({"kind": "done", "id": mid})
         except Exception as e:                      # surfaced to frontend
-            self._post({"kind": "error", "id": mid, "message": str(e)})
+            # etype lets the typed crash errors survive JSON: the
+            # frontend re-raises EngineCrashed as EngineCrashed, so a
+            # router can tell a dead engine loop from a bad request
+            self._post({"kind": "error", "id": mid, "message": str(e),
+                        "etype": type(e).__name__})
         finally:
             self._rids.pop(mid, None)
 
@@ -128,10 +154,14 @@ class BackendWorker:
 class ServiceWorkerMLCEngine:
     """Frontend handle: endpoint-like API, JSON-only transport."""
 
-    def __init__(self, backend_engine: Optional[MLCEngine] = None):
+    def __init__(self, backend_engine: Optional[MLCEngine] = None,
+                 replica_id: Optional[str] = None):
+        self.replica_id = replica_id
         self.port = _MessagePort()
-        self.worker = BackendWorker(self.port, backend_engine)
+        self.worker = BackendWorker(self.port, backend_engine,
+                                    replica_id=replica_id)
         self._pending: Dict[str, "queue.Queue[dict]"] = {}
+        self._crashed: Optional[str] = None      # reason, once dead
         self._lock = threading.Lock()
         self._rx = threading.Thread(target=self._dispatch, daemon=True)
         self._rx.start()
@@ -141,6 +171,9 @@ class ServiceWorkerMLCEngine:
         while True:
             raw = self.port.to_client.get()
             msg = json.loads(raw)
+            if msg.get("kind") == "crash":       # broadcast, no id
+                self.kill_pending(msg.get("message", "worker crashed"))
+                continue
             mid = msg.get("id")
             with self._lock:
                 q = self._pending.get(mid)
@@ -149,6 +182,58 @@ class ServiceWorkerMLCEngine:
 
     def _send(self, obj: dict):
         self.port.to_worker.put(json.dumps(obj))
+
+    def kill_pending(self, reason: str):
+        """Declare the worker dead: every pending call — and every later
+        one — fails promptly with :class:`WorkerCrashed`.  Invoked by the
+        rx thread on a ``crash`` port message, by ``_get`` when it finds
+        the serve thread gone, and by supervisors (``RouterEngine``)
+        whose heartbeat timed out."""
+        with self._lock:
+            if self._crashed is None:
+                self._crashed = reason
+            qs = list(self._pending.values())
+        for q in qs:
+            q.put({"kind": "crash", "message": reason})
+
+    def _get(self, q: "queue.Queue[dict]", mid: str, what: str,
+             timeout: float = 600.0) -> dict:
+        """Frontend-side wait.  The default window is longer than the
+        backend's own stall window (MLCEngine.STALL_TIMEOUT_S = 300 s): a
+        genuinely stalled backend reports itself through an
+        ``{"kind": "error"}`` message first, so a slow grammar-constrained
+        generation that streams no chunks for minutes is not killed.  The
+        wait POLLS (short queue timeouts) so a worker that dies
+        mid-stream surfaces a typed WorkerCrashed within a poll tick —
+        never a bare queue.Empty after 600 s."""
+        deadline = time.monotonic() + timeout
+        while True:
+            if self._crashed is not None:
+                raise WorkerCrashed(self._crashed)
+            try:
+                msg = q.get(timeout=0.2)
+            except queue.Empty:
+                if not self.worker.alive():
+                    self.kill_pending(
+                        f"backend worker thread died (no {what} for "
+                        f"message {mid})")
+                    continue             # next pass raises WorkerCrashed
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"worker unresponsive: no {what} for message "
+                        f"{mid} within {timeout:.0f} s") from None
+                continue
+            if msg.get("kind") == "crash":
+                raise WorkerCrashed(msg.get("message", "worker crashed"))
+            return msg
+
+    @staticmethod
+    def _raise_error(msg: dict):
+        """Re-raise a boundary error with its original type when it is
+        one of the typed crash errors (``etype`` rides the JSON)."""
+        if msg.get("etype") == "EngineCrashed":
+            raise EngineCrashed(msg["message"])
+        raise RuntimeError(msg["message"])
 
     def chat_completions_create(
             self, request: Union[api.ChatCompletionRequest, dict],
@@ -161,6 +246,8 @@ class ServiceWorkerMLCEngine:
         """
         if isinstance(request, api.ChatCompletionRequest):
             request = request.to_dict()
+        if self._crashed is not None:
+            raise WorkerCrashed(self._crashed)
         mid = request_id or uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()
         with self._lock:
@@ -173,11 +260,11 @@ class ServiceWorkerMLCEngine:
         if request.get("stream"):
             return self._stream(mid, q)
         try:
-            msg = _get(q, mid, "response")
+            msg = self._get(q, mid, "response")
             if msg["kind"] == "error":
                 # no trailing "done" follows an error — just surface it
-                raise RuntimeError(msg["message"])
-            done = _get(q, mid, "done marker")
+                self._raise_error(msg)
+            done = self._get(q, mid, "done marker")
             assert done["kind"] == "done"
             return api.ChatCompletionResponse.from_dict(msg["data"])
         finally:
@@ -188,13 +275,13 @@ class ServiceWorkerMLCEngine:
         done = False
         try:
             while True:
-                msg = _get(q, mid, "chunk")
+                msg = self._get(q, mid, "chunk")
                 if msg["kind"] == "done":
                     done = True
                     return
                 if msg["kind"] == "error":
                     done = True
-                    raise RuntimeError(msg["message"])
+                    self._raise_error(msg)
                 yield api.ChatCompletionChunk.from_dict(msg["data"])
         finally:
             # closing the iterator mid-stream aborts the backend request
@@ -212,18 +299,42 @@ class ServiceWorkerMLCEngine:
         partial response instead of waiting out the generation."""
         self._send({"kind": "abort", "id": request_id})
 
-    def stats(self, model: Optional[str] = None) -> dict:
-        """Engine/scheduler/runner counters, fetched over the boundary."""
+    def stats(self, model: Optional[str] = None,
+              timeout: float = 600.0) -> dict:
+        """Engine/scheduler/runner counters, fetched over the boundary.
+        ``timeout`` bounds the wait — supervisors use a short one as the
+        liveness heartbeat (a healthy serve thread answers stats in
+        microseconds; a dead one raises within the window)."""
+        if self._crashed is not None:
+            raise WorkerCrashed(self._crashed)
         mid = uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()
         with self._lock:
             self._pending[mid] = q
         try:
             self._send({"kind": "stats", "id": mid, "model": model})
-            msg = _get(q, mid, "stats")
+            msg = self._get(q, mid, "stats", timeout=timeout)
             if msg["kind"] == "error":
                 raise RuntimeError(msg["message"])
             return msg["data"]
+        finally:
+            self._drop(mid)
+
+    def ping(self, timeout: float = 2.0) -> bool:
+        """Round-trip liveness probe over the port (heartbeat message).
+        True iff the serve thread answered within ``timeout``."""
+        if self._crashed is not None:
+            return False
+        mid = uuid.uuid4().hex
+        q: "queue.Queue[dict]" = queue.Queue()
+        with self._lock:
+            self._pending[mid] = q
+        try:
+            self._send({"kind": "ping", "id": mid})
+            msg = self._get(q, mid, "pong", timeout=timeout)
+            return msg.get("kind") == "pong"
+        except (TimeoutError, WorkerCrashed):
+            return False
         finally:
             self._drop(mid)
 

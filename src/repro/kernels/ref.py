@@ -134,15 +134,15 @@ def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
 
 
 def batched_sample_ref(logits, seeds, counters, temperature, top_k,
-                       top_p, freq_pen, pres_pen, rep_pen, bias, counts,
-                       mask_bits, *, n_top: int = 0):
+                       top_p, min_p, freq_pen, pres_pen, rep_pen, bias,
+                       counts, mask_bits, *, n_top: int = 0):
     """Row-at-a-time oracle for ``kernels.sampling.batched_sample``.
 
     Mirrors the host ``RequestSampler`` pipeline order (bias →
     frequency/presence/repetition penalties → grammar mask →
-    temperature → top-k → top-p) one row at a time with no batched
-    tricks, then draws the same counter-based Gumbel noise — the
-    batched op must match token-for-token.
+    temperature → top-k → top-p/min-p) one row at a time with no
+    batched tricks, then draws the same counter-based Gumbel noise —
+    the batched op must match token-for-token.
     """
     import numpy as np
 
@@ -172,15 +172,20 @@ def batched_sample_ref(logits, seeds, counters, temperature, top_k,
         if k > 0:
             kth = np.sort(z)[::-1][min(k, V) - 1]
             z = np.where(z < kth, FILTERED, z)
-        if float(top_p[s]) < 1.0:     # top_p >= 1: filter disabled
+        tp, mp = float(top_p[s]), float(min_p[s])
+        if tp < 1.0 or mp > 0.0:      # top_p >= 1 / min_p <= 0: disabled
             e = np.exp(z - z.max())
             p = e / e.sum()
-            order = np.argsort(-p, kind="stable")
-            csum = np.cumsum(p[order])
-            keep_sorted = (csum - p[order]) < float(top_p[s])
-            keep_sorted[0] = True       # host keeps >= 1 token (top-1)
-            keep = np.zeros(V, bool)
-            keep[order] = keep_sorted
+            keep = np.ones(V, bool)
+            if tp < 1.0:
+                order = np.argsort(-p, kind="stable")
+                csum = np.cumsum(p[order])
+                keep_sorted = (csum - p[order]) < tp
+                keep[:] = False
+                keep[order] = keep_sorted
+            if mp > 0.0:              # min-p on the same pre-filter probs
+                keep &= p >= mp * p.max()
+            keep[int(np.argmax(p))] = True  # host keeps >= 1 token (top-1)
             z = np.where(keep, z, FILTERED)
         key = jax.random.fold_in(jax.random.PRNGKey(int(seeds[s])),
                                  int(counters[s]))

@@ -79,15 +79,18 @@ def _penalized(logits, bias, counts, freq_pen, pres_pen, rep_pen,
 
 
 def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
-                   freq_pen, pres_pen, rep_pen, bias, counts, mask_bits,
-                   *, n_top: int = 0, use_planes: bool = True,
+                   min_p, freq_pen, pres_pen, rep_pen, bias, counts,
+                   mask_bits, *, n_top: int = 0, use_planes: bool = True,
                    all_greedy: bool = False, need_logprobs: bool = True):
     """Sample one token per row of ``logits [S, V]`` in a single device
     op.
 
     Per-row params (all ``[S]``): ``seeds``/``counters`` drive the
     counter-based PRNG; ``temperature == 0`` is exact argmax; ``top_k ==
-    0`` / ``top_p >= 1`` disable those filters.  ``bias``/``counts`` are
+    0`` / ``top_p >= 1`` / ``min_p <= 0`` disable those filters (min-p
+    drops tokens whose probability under the post-top-k softmax is below
+    ``min_p * max(p)`` — the top token always survives).
+    ``bias``/``counts`` are
     dense ``[S, V]`` (logit bias and generated-token counts for the
     frequency/presence/repetition penalties); ``mask_bits`` is the
     packed ``uint32 [S, ceil(V/32)]`` grammar bitmask (all-ones when a
@@ -135,15 +138,21 @@ def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
         order = jnp.argsort(-p, axis=-1, stable=True)
         sp = jnp.take_along_axis(p, order, axis=-1)
         keep_sorted = (jnp.cumsum(sp, axis=-1) - sp) < top_p[:, None]
-        # the host keeps AT LEAST the top token (max(1, cutoff)): a
-        # top_p <= 0 row must degrade to top-1, not filter everything
-        keep_sorted = keep_sorted.at[:, 0].set(True)
-        inv = jnp.argsort(order, axis=-1, stable=True)
-        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
         # top_p >= 1 disables the filter entirely (the host-oracle
         # semantics): float32 cumsum rounding must not cut a real tail
         # token
-        keep = keep | (top_p >= 1.0)[:, None]
+        keep_sorted = keep_sorted | (top_p >= 1.0)[:, None]
+        # min-p on the SAME pre-filter probs (sorted space, sp[:, :1]
+        # is max(p)): token survives iff p >= min_p * max(p); min_p <= 0
+        # disables the filter
+        keep_sorted = keep_sorted & (
+            (sp >= min_p[:, None] * sp[:, :1]) | (min_p <= 0.0)[:, None])
+        # the host keeps AT LEAST the top token (max(1, cutoff)): a
+        # degenerate row (top_p <= 0, min_p > 1) must degrade to top-1,
+        # not filter everything
+        keep_sorted = keep_sorted.at[:, 0].set(True)
+        inv = jnp.argsort(order, axis=-1, stable=True)
+        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
         z = jnp.where(keep, z, FILTERED)
 
         # counter-based per-row keys: deterministic for a (seed,

@@ -40,8 +40,8 @@ def _device(batch: SamplingParamsBatch, logits: np.ndarray, n_top=0):
     out = batched_sample(
         logits[batch.parent].astype(np.float32), batch.seeds,
         batch.counters, batch.temperature, batch.top_k, batch.top_p,
-        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
-        batch.counts, batch.mask_bits, n_top=n_top,
+        batch.min_p, batch.freq_pen, batch.pres_pen, batch.rep_pen,
+        batch.bias, batch.counts, batch.mask_bits, n_top=n_top,
         use_planes=batch.use_planes)
     return tuple(np.asarray(x) for x in out)
 
@@ -51,6 +51,7 @@ def _sampler(rng, *, temperature) -> RequestSampler:
         temperature=temperature,
         top_k=int(rng.integers(0, V + 1)),
         top_p=float(rng.uniform(0.05, 1.0)) if rng.random() < 0.7 else 1.0,
+        min_p=float(rng.uniform(0.0, 0.5)) if rng.random() < 0.5 else 0.0,
         frequency_penalty=float(rng.uniform(0, 1.5)),
         presence_penalty=float(rng.uniform(0, 1.5)),
         repetition_penalty=float(rng.choice([1.0, 0.7, 1.8])),
@@ -101,9 +102,9 @@ def test_stochastic_support_and_ref_equivalence(data_seed):
     tokens, lp, top_ids, top_lps = _device(batch, logits, n_top=4)
     rtok, rlp, rtids, rtlps = ref.batched_sample_ref(
         logits[batch.parent], batch.seeds, batch.counters,
-        batch.temperature, batch.top_k, batch.top_p, batch.freq_pen,
-        batch.pres_pen, batch.rep_pen, batch.bias, batch.counts,
-        batch.mask_bits, n_top=4)
+        batch.temperature, batch.top_k, batch.top_p, batch.min_p,
+        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
+        batch.counts, batch.mask_bits, n_top=4)
     assert np.array_equal(tokens, rtok)
     np.testing.assert_allclose(lp, rlp, atol=1e-5)
     np.testing.assert_allclose(top_lps, rtlps, atol=1e-5)
@@ -174,8 +175,8 @@ def test_planeless_batch_matches_dense_planes():
     lean, _, _, _ = _device(batch, logits)
     dense = np.asarray(batched_sample(
         logits, batch.seeds, batch.counters, batch.temperature,
-        batch.top_k, batch.top_p, batch.freq_pen, batch.pres_pen,
-        batch.rep_pen, np.zeros((S, V), np.float32),
+        batch.top_k, batch.top_p, batch.min_p, batch.freq_pen,
+        batch.pres_pen, batch.rep_pen, np.zeros((S, V), np.float32),
         np.zeros((S, V), np.float32), batch.mask_bits,
         use_planes=True)[0])
     assert np.array_equal(lean, dense)
@@ -245,6 +246,70 @@ def test_bitmask_pack_roundtrip():
         idx = np.arange(v)
         unpacked = (packed[idx // 32] >> (idx % 32).astype(np.uint32)) & 1
         assert np.array_equal(unpacked.astype(bool), m)
+
+
+def test_min_p_filters_tail_and_matches_host_support():
+    """min_p drops exactly the tokens with p < min_p * max(p) from both
+    the host dist and the device support; empirical device draws stay
+    inside it."""
+    # probs ~ softmax([4, 3, 2, 1, 0, ...]): ratios to max are
+    # 1, e^-1 (.37), e^-2 (.135), e^-3 (.05), ...
+    logits = np.full((1, V), -40.0, np.float32)
+    logits[0, :5] = np.array([4, 3, 2, 1, 0], np.float32)
+    s = RequestSampler(temperature=1.0, min_p=0.2, seed=7)
+    dist = s.dist(logits[0])
+    assert set(np.flatnonzero(dist)) == {0, 1}      # .37 in, .135 out
+    n = 256
+    batch = SamplingParamsBatch.build([(0, s, None)] * n, V)
+    batch.counters[:] = np.arange(n)
+    tokens, _, _, _ = _device(batch, logits)
+    assert set(int(t) for t in tokens) <= {0, 1}
+    assert len(set(int(t) for t in tokens)) == 2    # both actually drawn
+    # min_p=0 is an exact no-op: same dist as a min_p-less sampler
+    s0 = RequestSampler(temperature=1.0, min_p=0.0, seed=7)
+    base = RequestSampler(temperature=1.0, seed=7)
+    np.testing.assert_array_equal(s0.dist(logits[0]), base.dist(logits[0]))
+
+
+def test_min_p_one_degrades_to_top1():
+    """min_p=1.0 keeps only max-probability tokens — argmax-like, but
+    still a draw among exact ties; the top token always survives."""
+    rng = np.random.default_rng(11)
+    logits = rng.standard_normal((1, V)).astype(np.float32) * 3
+    s = RequestSampler(temperature=1.3, min_p=1.0, seed=5)
+    dist = s.dist(logits[0])
+    assert set(np.flatnonzero(dist)) == {int(np.argmax(logits[0]))}
+    batch = SamplingParamsBatch.build([(0, s, None)] * 8, V)
+    batch.counters[:] = np.arange(8)
+    tokens, _, _, _ = _device(batch, logits)
+    assert (tokens == int(np.argmax(logits[0]))).all()
+    # out-of-range request values clamp instead of emptying the support
+    assert RequestSampler(temperature=1.0, min_p=7.5).min_p == 1.0
+    assert RequestSampler(temperature=1.0, min_p=-3.0).min_p == 0.0
+
+
+def test_min_p_composes_with_top_p_and_grammar_mask():
+    """min_p and top_p filter the SAME pre-filter probs and the result
+    respects the grammar mask — device ≡ ref token-for-token, and every
+    draw is mask-allowed."""
+    rng = np.random.default_rng(13)
+    logits = (rng.standard_normal((S, V)) * 3).astype(np.float32)
+    mask = np.zeros(V, bool)
+    mask[: V // 2] = True
+    samplers = [RequestSampler(temperature=0.9, top_p=0.8, min_p=0.1,
+                               seed=i) for i in range(S)]
+    specs = [(i, samplers[i], pack_token_bitmask(mask)) for i in range(S)]
+    batch = SamplingParamsBatch.build(specs, V)
+    tokens, lp, _, _ = _device(batch, logits)
+    rtok, rlp, _, _ = ref.batched_sample_ref(
+        logits[batch.parent], batch.seeds, batch.counters,
+        batch.temperature, batch.top_k, batch.top_p, batch.min_p,
+        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
+        batch.counts, batch.mask_bits)
+    assert np.array_equal(tokens, rtok)
+    for i in range(S):
+        assert mask[int(tokens[i])], i
+        assert samplers[i].dist(logits[i], mask)[int(tokens[i])] > 0, i
 
 
 def test_grammar_mask_respected_even_when_allowed_underflow():

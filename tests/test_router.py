@@ -1,0 +1,285 @@
+"""RouterEngine: the replicated serving tier.
+
+Covers the ISSUE's acceptance surface: (a) worker-boundary semantics
+hold through a 2-replica pool (streaming with n>1, tool calls, abort,
+seeded determinism); (b) prefix-affinity dispatch — turn 2 of a
+conversation lands on the replica holding turn 1's radix prefix and
+actually adopts cached pages (``usage.extra["prefix_cached_tokens"] >
+0``); (c) crash lifecycle — a replica dying mid-request surfaces a
+typed error promptly, is respawned, and its affinity entries are
+invalidated so later requests re-route cleanly; (d) graceful draining;
+(e) the router ``stats()`` shape."""
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ChatCompletionRequest, ChatMessage, EngineCrashed,
+                        MLCEngine, RouterEngine)
+
+TOOLS = [{
+    "type": "function",
+    "function": {
+        "name": "lookup",
+        "description": "Look up a key",
+        "parameters": {
+            "type": "object",
+            "properties": {"key": {"enum": ["a", "b"]}},
+            "required": ["key"],
+        },
+    },
+}]
+
+
+def _factory():
+    eng = MLCEngine()
+    # paged backend so each replica has a radix prefix cache; page_size 8
+    # keeps affinity page-granular at test prompt lengths
+    eng.load_model("m", get_config("llama-3.1-8b", reduced=True),
+                   max_slots=2, max_context=96, seed=0,
+                   backend="paged", page_size=8)
+    return eng
+
+
+def _make_router(**kw):
+    kw.setdefault("replicas", 2)
+    kw.setdefault("heartbeat_s", 0.05)
+    return RouterEngine(_factory, **kw)
+
+
+def _req(**kw):
+    kw.setdefault("messages", [ChatMessage("user", "hello")])
+    kw.setdefault("model", "m")
+    kw.setdefault("max_tokens", 5)
+    kw.setdefault("seed", 3)
+    kw.setdefault("temperature", 0.9)
+    return ChatCompletionRequest(**kw)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    r = _make_router()
+    yield r
+    r.shutdown()
+
+
+# -- (a) worker-boundary semantics through the pool ----------------------
+def test_n2_stream_through_pool_interleaves_choices(pool):
+    chunks = list(pool.chat_completions_create(_req(n=2, stream=True)))
+    idx = [c.choices[0].index for c in chunks if c.choices]
+    assert set(idx) == {0, 1}
+    assert idx.index(1) < max(i for i, v in enumerate(idx) if v == 0)
+    finishes = {c.choices[0].index for c in chunks
+                if c.choices and c.choices[0].finish_reason}
+    assert finishes == {0, 1}
+    assert chunks[-1].usage is not None
+
+
+def test_tool_call_roundtrip_through_pool(pool):
+    resp = pool.chat_completions_create(_req(
+        max_tokens=100, temperature=0.8, seed=11,
+        tools=TOOLS, tool_choice="required"))
+    c = resp.choices[0]
+    assert c.finish_reason == "tool_calls"
+    assert c.message.tool_calls[0].function.name == "lookup"
+
+
+def test_seeded_determinism_through_pool(pool):
+    a = pool.chat_completions_create(_req(seed=21))
+    b = pool.chat_completions_create(_req(seed=21))
+    assert (a.choices[0].message.content
+            == b.choices[0].message.content)
+
+
+def test_abort_mid_stream_frees_the_routed_replica(pool):
+    it = pool.chat_completions_create(_req(max_tokens=200, stream=True))
+    for _ in range(3):
+        next(it)
+    busy = [rep for rep in pool._replicas if rep.in_flight][0]
+    it.close()                       # router closes the worker iterator
+    deadline = time.time() + 60      # -> abort posted -> slots freed
+    while time.time() < deadline:
+        st = busy.backend.stats("m")["scheduler"]
+        if st["running"] == 0 and st["free_slots"] == 2:
+            break
+        time.sleep(0.05)
+    st = busy.backend.stats("m")["scheduler"]
+    assert st["running"] == 0 and st["free_slots"] == 2
+    assert busy.in_flight == 0
+
+
+def test_abort_by_request_id_routes_to_owner(pool):
+    import threading
+    out = []
+    rid = "router-abort-rid"
+
+    def go():
+        out.append(pool.chat_completions_create(
+            _req(max_tokens=200), request_id=rid))
+
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    deadline = time.time() + 60
+    while time.time() < deadline and rid not in pool._rids:
+        time.sleep(0.01)
+    owner = pool._rids[rid][0]       # abort as soon as the request is
+    while time.time() < deadline:    # admitted on the routed backend
+        if owner.backend.stats("m")["scheduler"]["running"] > 0:
+            break
+        time.sleep(0.005)
+    pool.abort(rid)
+    t.join(timeout=60)
+    assert not t.is_alive()
+    assert out[0].choices[0].finish_reason == "abort"
+
+
+# -- (b) prefix-affinity dispatch ----------------------------------------
+def _turns(opening: str):
+    """A two-turn conversation whose opening words differ so the two
+    conversations in the test share no full page."""
+    return [ChatMessage("user", f"{opening} tell me about paged caches")]
+
+
+def test_turn2_routes_to_prefix_holder_and_reuses_pages():
+    router = _make_router()
+    try:
+        conv_a = _turns("alpha")
+        conv_b = _turns("zebra")
+        # turn 1: no affinity anywhere -> least-loaded round-robins the
+        # two conversations onto distinct replicas (dispatch tiebreak)
+        ra = router.chat_completions_create(_req(messages=conv_a, seed=1))
+        rb = router.chat_completions_create(_req(messages=conv_b, seed=2))
+        per = router.stats()["per_replica"]
+        assert [p["dispatches"] for p in per] == [1, 1]
+        assert sum(p["affinity_hits"] for p in per) == 0
+        # turn 2: resubmit each conversation with its history — affinity
+        # must route each to the replica that served ITS turn 1, where
+        # the radix cache actually serves the prefix
+        conv_a += [ChatMessage("assistant", ra.choices[0].message.content),
+                   ChatMessage("user", "and more please")]
+        conv_b += [ChatMessage("assistant", rb.choices[0].message.content),
+                   ChatMessage("user", "and more please")]
+        ra2 = router.chat_completions_create(_req(messages=conv_a, seed=1))
+        rb2 = router.chat_completions_create(_req(messages=conv_b, seed=2))
+        assert ra2.usage.extra["prefix_cached_tokens"] > 0
+        assert rb2.usage.extra["prefix_cached_tokens"] > 0
+        st = router.stats()
+        per = st["per_replica"]
+        assert [p["dispatches"] for p in per] == [2, 2]
+        assert [p["affinity_hits"] for p in per] == [1, 1]
+        assert st["affinity_hit_rate"] == pytest.approx(0.5)
+        assert st["aggregate_completion_tokens"] > 0
+        assert st["aggregate_tok_s"] > 0
+    finally:
+        router.shutdown()
+
+
+# -- (c) crash lifecycle -------------------------------------------------
+def test_replica_crash_typed_error_restart_and_affinity_invalidation():
+    router = _make_router()
+    try:
+        conv = _turns("alpha")
+        r1 = router.chat_completions_create(_req(messages=conv, seed=1))
+        conv += [ChatMessage("assistant", r1.choices[0].message.content),
+                 ChatMessage("user", "continue")]
+        owner = max(router._replicas, key=lambda r: r.dispatches)
+        # turn 2 streams on the affinity holder; kill its engine mid-way
+        it = router.chat_completions_create(
+            _req(messages=conv, seed=1, max_tokens=300, stream=True))
+        next(it)
+        t0 = time.monotonic()
+        owner.backend.shutdown()
+        with pytest.raises(EngineCrashed):
+            for _ in it:
+                pass
+        assert time.monotonic() - t0 < 30   # typed, prompt — no stall
+        # the monitor respawns the slot
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            p = router.stats()["per_replica"][owner.slot]
+            if p["restarts"] == 1 and p["state"] == "healthy":
+                break
+            time.sleep(0.05)
+        p = router.stats()["per_replica"][owner.slot]
+        assert p["restarts"] == 1 and p["state"] == "healthy"
+        assert p["generation"] == 1
+        # affinity entries for the dead incarnation are invalid: the
+        # SAME conversation re-routes cleanly (no hit on the fresh
+        # replica's empty cache) and succeeds
+        hits0 = sum(r.affinity_hits for r in router._replicas)
+        r3 = router.chat_completions_create(_req(messages=conv, seed=1))
+        assert r3.choices[0].message.content
+        assert sum(r.affinity_hits for r in router._replicas) == hits0
+    finally:
+        router.shutdown()
+
+
+def test_crash_with_single_replica_rejects_then_recovers():
+    router = _make_router(replicas=1)
+    try:
+        it = router.chat_completions_create(
+            _req(max_tokens=300, stream=True))
+        next(it)
+        router._replicas[0].backend.shutdown()
+        with pytest.raises(EngineCrashed):
+            for _ in it:
+                pass
+        # after respawn the pool serves again
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            p = router.stats()["per_replica"][0]
+            if p["state"] == "healthy" and p["restarts"] == 1:
+                break
+            time.sleep(0.05)
+        resp = router.chat_completions_create(_req())
+        assert resp.choices[0].message.content
+    finally:
+        router.shutdown()
+
+
+# -- (d) draining --------------------------------------------------------
+def test_drain_recycles_without_dropping_requests():
+    router = _make_router()
+    try:
+        router.chat_completions_create(_req(seed=5))
+        router.drain(0)
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            p = router.stats()["per_replica"][0]
+            if p["recycles"] == 1 and p["state"] == "healthy":
+                break
+            time.sleep(0.05)
+        p = router.stats()["per_replica"][0]
+        assert p["recycles"] == 1 and p["state"] == "healthy"
+        assert p["restarts"] == 0            # graceful, not a crash
+        resp = router.chat_completions_create(_req(seed=6))
+        assert resp.choices[0].message.content
+    finally:
+        router.shutdown()
+
+
+# -- (e) stats shape -----------------------------------------------------
+def test_stats_shape(pool):
+    pool.chat_completions_create(_req(seed=9))
+    st = pool.stats()
+    for key in ("replicas", "dispatches", "affinity_hits",
+                "affinity_hit_rate", "affinity_entries", "restarts",
+                "recycles", "aggregate_completion_tokens",
+                "aggregate_tok_s", "per_replica"):
+        assert key in st, key
+    assert st["replicas"] == 2 and len(st["per_replica"]) == 2
+    for p in st["per_replica"]:
+        for key in ("replica", "state", "generation", "in_flight",
+                    "dispatches", "served", "affinity_hits",
+                    "affinity_hit_rate", "restarts", "recycles",
+                    "engine"):
+            assert key in p, key
+    # heartbeat snapshots arrive within a beat or two
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        if all(p["engine"] is not None
+               for p in pool.stats()["per_replica"]):
+            break
+        time.sleep(0.05)
+    eng = pool.stats(model="m")["per_replica"][0]["engine"]
+    assert eng is not None and "scheduler" in eng

@@ -56,8 +56,14 @@ def test_benchmarks_smoke():
     assert not any(",ERROR," in ln for ln in lines), out
     prefixes = {ln.split("/")[0].split(",")[0] for ln in lines}
     for mod in ("table1_retention", "engine", "grammar", "kernel",
-                "prefix_cache", "roofline"):
+                "prefix_cache", "roofline", "router"):
         assert mod in prefixes, (mod, out)
+    # replicated serving tier: aggregate tok/s for pool sizes 1 and 2
+    # plus the prefix-affinity hit-rate row
+    for row in ("router/aggregate_tok_s_replicas1",
+                "router/aggregate_tok_s_replicas2",
+                "router/affinity_hit_rate"):
+        assert any(ln.startswith(row) for ln in lines), (row, out)
     # the latency + dispatch-fusion report is part of the contract
     assert any(ln.startswith("engine/mixed_ttft_p50") for ln in lines), out
     assert any(ln.startswith("engine/mixed_itl_p95") for ln in lines), out

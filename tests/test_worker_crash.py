@@ -1,0 +1,112 @@
+"""A backend dying mid-stream must surface a TYPED error to the waiting
+frontend — promptly, never a hang toward the 600 s boundary timeout or
+the engine's STALL_TIMEOUT_S.  Regression tests for the silent-failure
+mode: before crash signaling, a dead serve thread or engine loop left
+the frontend iterator blocked on an empty queue.
+
+Two kill vectors, two typed errors:
+
+* engine loop death (``shutdown`` with requests in flight, or an
+  exception inside ``_loop``) → :class:`EngineCrashed`, carried across
+  the JSON port via the ``etype`` field;
+* serve thread death (malformed port message) → a ``crash`` broadcast
+  → :class:`WorkerCrashed` for every pending AND every later call.
+"""
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ChatCompletionRequest, ChatMessage, EngineCrashed,
+                        MLCEngine, ServiceWorkerMLCEngine, WorkerCrashed)
+
+
+def _stack():
+    backend = MLCEngine()
+    backend.load_model("m", get_config("llama-3.1-8b", reduced=True),
+                       max_slots=2, max_context=96, seed=0)
+    return ServiceWorkerMLCEngine(backend), backend
+
+
+def _req(**kw):
+    kw.setdefault("messages", [ChatMessage("user", "hello")])
+    kw.setdefault("model", "m")
+    kw.setdefault("seed", 3)
+    kw.setdefault("temperature", 0.9)
+    return ChatCompletionRequest(**kw)
+
+
+def test_engine_death_mid_stream_raises_typed_error_fast():
+    """Kill the backend engine while a stream is mid-generation: the
+    frontend iterator must raise EngineCrashed (the typed error, its
+    type preserved across JSON) within seconds, not stall."""
+    front, backend = _stack()
+    it = front.chat_completions_create(_req(max_tokens=300, stream=True))
+    for _ in range(2):                       # generation is running
+        next(it)
+    backend.shutdown()                       # engine loop exits with the
+    t0 = time.monotonic()                    # request still in flight
+    with pytest.raises(EngineCrashed):
+        for _ in it:
+            pass
+    assert time.monotonic() - t0 < 30       # prompt, not a stall timeout
+
+
+def test_engine_death_fails_blocking_call_too():
+    front, backend = _stack()
+    import threading
+    err = []
+
+    def go():
+        try:
+            front.chat_completions_create(_req(max_tokens=300))
+        except BaseException as e:
+            err.append(e)
+
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    # wait until the request is actually live inside the engine
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        if backend.stats("m")["scheduler"]["running"] > 0:
+            break
+        time.sleep(0.02)
+    backend.shutdown()
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert len(err) == 1 and isinstance(err[0], EngineCrashed)
+
+
+def test_serve_thread_death_surfaces_worker_crashed():
+    """Garbage on the port kills the serve loop; it posts a crash
+    message on the way down, so pending calls fail with WorkerCrashed
+    and LATER calls fail immediately instead of queueing forever."""
+    front, backend = _stack()
+    it = front.chat_completions_create(_req(max_tokens=300, stream=True))
+    next(it)
+    front.port.to_worker.put("this is not json")   # serve thread dies
+    t0 = time.monotonic()
+    with pytest.raises(WorkerCrashed):
+        for _ in it:
+            pass
+    assert time.monotonic() - t0 < 30
+    assert not front.worker.alive()
+    with pytest.raises(WorkerCrashed):             # sticky: new calls too
+        front.chat_completions_create(_req(max_tokens=2))
+    assert front.ping() is False
+    backend.shutdown()
+
+
+def test_supervisor_kill_pending_is_typed_and_sticky():
+    """The router's heartbeat path: kill_pending() fails the in-flight
+    wait with WorkerCrashed carrying the supervisor's reason."""
+    front, backend = _stack()
+    it = front.chat_completions_create(_req(max_tokens=300, stream=True))
+    next(it)
+    front.kill_pending("heartbeat timed out (test)")
+    with pytest.raises(WorkerCrashed, match="heartbeat timed out"):
+        for _ in it:
+            pass
+    with pytest.raises(WorkerCrashed):
+        front.stats()
+    backend.shutdown()
