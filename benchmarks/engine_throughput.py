@@ -179,7 +179,8 @@ def _sample_us(vocab: int, rows: int, iters: int) -> float:
         # plane-less, stochastic, no logprobs requested
         return batched_sample(
             logits, batch.seeds, batch.counters, batch.temperature,
-            batch.top_k, batch.top_p, batch.min_p, batch.freq_pen,
+            batch.top_k, batch.top_p, batch.min_p, batch.typical_p,
+            batch.freq_pen,
             batch.pres_pen, batch.rep_pen, batch.bias, batch.counts,
             batch.mask_bits, use_planes=batch.use_planes,
             all_greedy=batch.all_greedy, need_logprobs=False)[0]

@@ -121,8 +121,8 @@ def run(smoke: bool = False) -> list:
     maskb = jnp.full((Sb, -(-Vv // 32)), 0xFFFFFFFF, jnp.uint32)
     f5 = (lambda *a: batched_sample(*a, use_planes=False,
                                     need_logprobs=False)[0])
-    us = _time(f5, lg, seeds, ctr, temp, topk, topp, zf, zf, zf, ones,
-               bias1, cnts1, maskb, iters=iters)
+    us = _time(f5, lg, seeds, ctr, temp, topk, topp, zf, ones, zf, zf,
+               ones, bias1, cnts1, maskb, iters=iters)
     host = [RequestSampler(temperature=0.9, top_k=40, top_p=0.95, seed=i)
             for i in range(Sb)]
     t0 = time.perf_counter()

@@ -39,4 +39,10 @@ if [ "$missing" -ne 0 ]; then
     exit 1
 fi
 
+# static-analysis gate: the four concurrency passes over the serving
+# core (lock discipline, donation safety, protocol exhaustiveness,
+# thread hygiene) plus the docs cross-check.  Only findings NOT in the
+# committed baseline fail — introducing a new one breaks the build.
+PYTHONPATH=src python -m repro.analysis.lint --baseline
+
 echo "check_tree: OK"

@@ -1,0 +1,24 @@
+"""repro.analysis — stdlib-ast static analysis for the threaded serving core.
+
+Four passes over ``src/repro/core`` + ``src/repro/kernels`` (run as
+``python -m repro.analysis.lint``):
+
+* :mod:`repro.analysis.locks`    — GUARDED_BY lock discipline + the
+  declared lock-acquisition hierarchy (deadlock reports).
+* :mod:`repro.analysis.donation` — use-after-donate of buffers passed to
+  ``jax.jit(..., donate_argnums=...)`` call sites.
+* :mod:`repro.analysis.protocol` — worker JSON-boundary exhaustiveness:
+  every emitted ``{"kind": ...}`` literal has a peer handler branch and
+  every typed-error ``etype`` tag roundtrips.
+* :mod:`repro.analysis.threads`  — thread hygiene: named +
+  daemon-or-joined threads, guarded thread targets, no silent broad
+  ``except`` in serve loops.
+
+Plus a docs cross-check (:mod:`repro.analysis.docs_check`) that keeps
+``docs/ARCHITECTURE.md``'s threading section consistent with the
+annotations, and a findings baseline gate used by
+``scripts/check_tree.sh``.
+
+The analyzer is purely syntactic: analyzed files are parsed, never
+imported, so corpus snippets and half-broken trees lint fine.
+"""

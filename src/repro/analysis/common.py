@@ -1,0 +1,197 @@
+"""Shared plumbing for the analysis passes: the Finding record, parsed
+module handles, waiver comments, and the cross-module class registry
+(including the per-class annotation conventions every pass reads).
+
+Annotation conventions (all plain class-level literals, so they are
+readable at runtime AND by ``ast.literal_eval`` here):
+
+``_GUARDED_BY = {"_lock": ("attr", ...)}``
+    Attributes of *self* that may only be read/written while
+    ``with self._lock`` is held.  ``__init__`` is exempt (construction
+    happens-before publication).
+
+``_GUARDED_FIELDS = {"_lock": ("field", ...)}``
+    Record fields of *owned* objects (accessed through any non-self
+    receiver inside the declaring class's methods) guarded by the
+    declaring class's lock — e.g. ``_Replica`` fields guarded by
+    ``RouterEngine._lock``.
+
+``_ASSUMES_HELD = {"_lock": ("method", ...)}``
+    Methods whose contract is "caller holds the lock": their bodies are
+    analyzed as if the lock were held, and every *call site* of them
+    inside the class must itself hold the lock.
+
+``_THREAD_CONFINED = ("attr", ...)`` / ``_CROSS_THREAD = ("method", ...)``
+    Lock-free classes whose mutable state is confined to one thread
+    (the engine loop).  Methods listed in ``_CROSS_THREAD`` are the
+    only ones other threads may call; inside them, confined attributes
+    must not be mutated and must not be iterated directly (snapshot
+    with ``list(...)`` first), and only other ``_CROSS_THREAD`` methods
+    of self may be called.
+
+Waivers: a finding whose source line carries ``lint: ignore[<rule>]``
+is suppressed (counted separately in the report).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_IGNORE_RE = re.compile(r"lint:\s*ignore\[([a-z0-9_,\- ]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer finding.  ``key`` (the baseline identity) excludes
+    the line number so baselines survive unrelated edits."""
+
+    rule: str          # e.g. "lock-discipline"
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    scope: str         # "Class.method" (or "<module>")
+    message: str       # human detail; MUST NOT embed line numbers
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.scope}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.scope}] {self.message}"
+
+
+@dataclass
+class Module:
+    """A parsed source file plus the raw lines (for waiver comments)."""
+
+    path: Path
+    rel: str                      # path relative to the lint root, posix
+    tree: ast.Module
+    lines: List[str]
+
+    def waived_rules(self, line: int) -> Tuple[str, ...]:
+        if 1 <= line <= len(self.lines):
+            m = _IGNORE_RE.search(self.lines[line - 1])
+            if m:
+                return tuple(r.strip() for r in m.group(1).split(","))
+        return ()
+
+
+def load_module(path: Path, root: Path) -> Module:
+    src = path.read_text()
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return Module(path=path, rel=rel, tree=ast.parse(src, filename=str(path)),
+                  lines=src.splitlines())
+
+
+# -- class registry -------------------------------------------------------
+
+_ANNOTATIONS = ("_GUARDED_BY", "_GUARDED_FIELDS", "_ASSUMES_HELD",
+                "_THREAD_CONFINED", "_CROSS_THREAD")
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: Module
+    node: ast.ClassDef
+    #: annotation name -> literal value (dict/tuple), absent if undeclared
+    annotations: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def guarded_by(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self.annotations.get("_GUARDED_BY", {}))
+
+    @property
+    def guarded_fields(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self.annotations.get("_GUARDED_FIELDS", {}))
+
+    @property
+    def assumes_held(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self.annotations.get("_ASSUMES_HELD", {}))
+
+    @property
+    def thread_confined(self) -> Tuple[str, ...]:
+        return tuple(self.annotations.get("_THREAD_CONFINED", ()))
+
+    @property
+    def cross_thread(self) -> Tuple[str, ...]:
+        return tuple(self.annotations.get("_CROSS_THREAD", ()))
+
+    def methods(self) -> Dict[str, ast.FunctionDef]:
+        out: Dict[str, ast.FunctionDef] = {}
+        for stmt in self.node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out[stmt.name] = stmt
+        return out
+
+
+def build_class_map(modules: Sequence[Module]) -> Dict[str, ClassInfo]:
+    """All top-level classes across the analyzed modules, keyed by class
+    name (the serving core has no duplicate class names; on collision
+    the first module wins, matching the hierarchy config's intent)."""
+    out: Dict[str, ClassInfo] = {}
+    for mod in modules:
+        for node in mod.tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            info = ClassInfo(name=node.name, module=mod, node=node)
+            for stmt in node.body:
+                if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Name)
+                        and stmt.targets[0].id in _ANNOTATIONS):
+                    try:
+                        info.annotations[stmt.targets[0].id] = \
+                            ast.literal_eval(stmt.value)
+                    except ValueError:
+                        pass         # non-literal registry: ignored
+            out.setdefault(node.name, info)
+    return out
+
+
+# -- small AST helpers used by several passes -----------------------------
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> ``"X"`` (else None)."""
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def flatten_targets(target: ast.AST) -> List[ast.AST]:
+    """Assignment target tree -> flat list of leaf targets."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[ast.AST] = []
+        for elt in target.elts:
+            out.extend(flatten_targets(elt))
+        return out
+    if isinstance(target, ast.Starred):
+        return flatten_targets(target.value)
+    return [target]
+
+
+def is_broad_handler(handler: ast.ExceptHandler) -> bool:
+    """bare ``except:``, ``except Exception``, ``except BaseException``,
+    or a tuple containing either."""
+    t = handler.type
+    if t is None:
+        return True
+    names = []
+    for node in ([t.elts if isinstance(t, ast.Tuple) else [t]][0]):
+        if isinstance(node, ast.Name):
+            names.append(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.append(node.attr)
+    return any(n in ("Exception", "BaseException") for n in names)

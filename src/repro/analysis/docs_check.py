@@ -1,0 +1,113 @@
+"""Docs cross-check — ``docs/ARCHITECTURE.md`` §"Threading model and
+lock hierarchy" cannot drift from the code annotations.
+
+Checks (all emitted as findings so the CI gate sees them):
+
+* ``doc-section-missing`` — the threading section heading is absent.
+* ``doc-lock-missing`` — a lock declared in a ``_GUARDED_BY`` registry
+  is never mentioned as ``ClassName.<lock>`` in the docs.
+* ``doc-order-drift`` — the documented acquisition-order line (a line
+  containing "acquisition order:") does not list exactly
+  :data:`repro.analysis.hierarchy.LOCK_ORDER`.
+* ``doc-thread-missing`` — a named thread population (the constant
+  prefix of every ``threading.Thread(name=...)``) is undocumented.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Sequence, Set, Tuple
+
+from repro.analysis import hierarchy
+from repro.analysis.common import Finding, Module, build_class_map
+
+_SECTION_RE = re.compile(r"^#+.*Threading model", re.IGNORECASE | re.MULTILINE)
+_ORDER_LINE_RE = re.compile(r"acquisition order:(.*)$",
+                            re.IGNORECASE | re.MULTILINE)
+_LOCK_TOKEN_RE = re.compile(r"(\w+\._\w+)")
+
+
+def _declared_locks(modules: Sequence[Module]) -> Set[str]:
+    out: Set[str] = set()
+    for cls in build_class_map(modules).values():
+        for lock in cls.guarded_by:
+            out.add(f"{cls.name}.{lock}")
+        for lock in cls.guarded_fields:
+            out.add(f"{cls.name}.{lock}")
+    return out
+
+
+def _thread_name_prefixes(modules: Sequence[Module]) -> Set[Tuple[str, str, int]]:
+    """(prefix, rel, line) for every ``threading.Thread(name=...)``: the
+    whole literal, or the leading constant of an f-string."""
+    out: Set[Tuple[str, str, int]] = set()
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and ((isinstance(node.func, ast.Attribute)
+                          and node.func.attr == "Thread")
+                         or (isinstance(node.func, ast.Name)
+                             and node.func.id == "Thread"))):
+                continue
+            for kw in node.keywords:
+                if kw.arg != "name":
+                    continue
+                v = kw.value
+                prefix = None
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    prefix = v.value
+                elif (isinstance(v, ast.JoinedStr) and v.values
+                      and isinstance(v.values[0], ast.Constant)):
+                    prefix = str(v.values[0].value)
+                if prefix:
+                    out.add((prefix.rstrip("-[{"), mod.rel, node.lineno))
+    return out
+
+
+def run(modules: Sequence[Module], doc_path: Path,
+        rel: str = "docs/ARCHITECTURE.md") -> List[Finding]:
+    findings: List[Finding] = []
+    if not doc_path.exists():
+        return [Finding(rule="doc-section-missing", path=rel, line=1,
+                        scope="<doc>",
+                        message="docs/ARCHITECTURE.md not found — the "
+                                "threading model must be documented")]
+    text = doc_path.read_text()
+    if not _SECTION_RE.search(text):
+        findings.append(Finding(
+            rule="doc-section-missing", path=rel, line=1, scope="<doc>",
+            message='no "Threading model" section heading in '
+                    'docs/ARCHITECTURE.md'))
+        return findings
+
+    for lock in sorted(_declared_locks(modules)):
+        if lock not in text:
+            findings.append(Finding(
+                rule="doc-lock-missing", path=rel, line=1, scope="<doc>",
+                message=f"declared lock {lock} is not documented in the "
+                        f"threading section"))
+
+    m = _ORDER_LINE_RE.search(text)
+    if not m:
+        findings.append(Finding(
+            rule="doc-order-drift", path=rel, line=1, scope="<doc>",
+            message='no "acquisition order:" line documenting the lock '
+                    'hierarchy'))
+    else:
+        doc_order = tuple(_LOCK_TOKEN_RE.findall(m.group(1)))
+        if doc_order != hierarchy.LOCK_ORDER:
+            findings.append(Finding(
+                rule="doc-order-drift", path=rel, line=1, scope="<doc>",
+                message=f"documented lock order {' -> '.join(doc_order)} "
+                        f"!= declared "
+                        f"{' -> '.join(hierarchy.LOCK_ORDER)}"))
+
+    for prefix, code_rel, line in sorted(_thread_name_prefixes(modules)):
+        if prefix not in text:
+            findings.append(Finding(
+                rule="doc-thread-missing", path=code_rel, line=line,
+                scope="<doc>",
+                message=f'thread population "{prefix}" is not documented '
+                        f'in the threading section'))
+    return findings

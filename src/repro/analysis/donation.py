@@ -1,0 +1,275 @@
+"""Pass 2 — donation safety for ``jax.jit(..., donate_argnums=...)``.
+
+When a buffer is donated to a jitted call its storage is reused for the
+outputs: every later read of the old reference is a use-after-donate
+(XLA may error, or silently read clobbered memory on some backends).
+The safe idiom in this tree is *rebinding in the same statement*::
+
+    logits, self.k_pages, self.v_pages = self._step(
+        self.params, self.k_pages, self.v_pages, ...)
+
+Rules
+-----
+``donate-no-rebind``
+    An argument in a donated position is a ``self.X`` attribute or a
+    local name that is NOT rebound from the result in the same
+    assignment statement.
+``donate-alias-read``
+    A local alias of a donated buffer (``kp = self.k_pages`` earlier in
+    the function) is read after the donating call.
+``donate-params``
+    Model parameters (``self.params`` / a name containing "params")
+    appear in a donated position — donating weights destroys the model
+    for every later step.
+
+Registry discovery (purely syntactic):
+* ``self.X = jax.jit(fn, donate_argnums=(...))`` or
+  ``X = jax.jit(fn, donate_argnums=...)`` -> calls to ``self.X(...)`` /
+  ``X(...)`` are donating call sites;
+* ``@jax.jit(... donate_argnums ...)`` /
+  ``@partial(jax.jit, donate_argnums=...)`` decorated functions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import (Finding, Module, flatten_targets,
+                                   self_attr)
+
+
+def _is_jax_jit(func: ast.AST) -> bool:
+    return ((isinstance(func, ast.Attribute) and func.attr == "jit")
+            or (isinstance(func, ast.Name) and func.id == "jit"))
+
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit`` / ``partial(jax.jit, ...)`` call,
+    or None if the call doesn't donate."""
+    if not isinstance(call, ast.Call):
+        return None
+    is_jit = _is_jax_jit(call.func)
+    is_partial_jit = (isinstance(call.func, ast.Name)
+                      and call.func.id == "partial" and call.args
+                      and _is_jax_jit(call.args[0]))
+    if not (is_jit or is_partial_jit):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            try:
+                val = ast.literal_eval(kw.value)
+            except ValueError:
+                return None
+            if isinstance(val, int):
+                return (val,)
+            return tuple(int(v) for v in val)
+    return None
+
+
+def _token(node: ast.AST) -> Optional[Tuple[str, str]]:
+    """A trackable buffer reference: ("self", attr) or ("local", name)."""
+    name = self_attr(node)
+    if name is not None:
+        return ("self", name)
+    if isinstance(node, ast.Name):
+        return ("local", node.id)
+    return None
+
+
+def _fmt(tok: Tuple[str, str]) -> str:
+    return f"self.{tok[1]}" if tok[0] == "self" else tok[1]
+
+
+class _FuncScanner:
+    """Linear scan of one function body in source order."""
+
+    def __init__(self, registry: Dict[str, Tuple[int, ...]],
+                 rel: str, scope: str, findings: List[Finding]):
+        self.registry = registry
+        self.rel = rel
+        self.scope = scope
+        self.findings = findings
+        #: alias name -> token it aliases (one level, lexical)
+        self.aliases: Dict[str, Tuple[str, str]] = {}
+        #: tokens whose storage has been donated (pending rebinding)
+        self.dead: Dict[Tuple[str, str], int] = {}   # token -> donate line
+
+    def _emit(self, rule: str, line: int, message: str):
+        self.findings.append(Finding(rule=rule, path=self.rel, line=line,
+                                     scope=self.scope, message=message))
+
+    def _callee_name(self, call: ast.Call) -> Optional[str]:
+        name = self_attr(call.func)
+        if name is not None:
+            return name
+        if isinstance(call.func, ast.Name):
+            return call.func.id
+        return None
+
+    def _find_donating_call(self, node: ast.AST) -> Optional[ast.Call]:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = self._callee_name(sub)
+                if name is not None and name in self.registry:
+                    return sub
+        return None
+
+    def _equiv(self, tok: Tuple[str, str]) -> Set[Tuple[str, str]]:
+        """The donated token plus every lexical alias of the same buffer."""
+        out = {tok}
+        if tok[0] == "local" and tok[1] in self.aliases:
+            out.add(self.aliases[tok[1]])
+        for name, target in self.aliases.items():
+            if target in out:
+                out.add(("local", name))
+        return out
+
+    def _check_reads(self, node: ast.AST):
+        """Flag reads of donated-and-not-rebound tokens."""
+        if not self.dead:
+            return
+        for sub in ast.walk(node):
+            tok = _token(sub)
+            if tok in self.dead and isinstance(getattr(sub, "ctx", None),
+                                               ast.Load):
+                self._emit("donate-alias-read", sub.lineno,
+                           f"read of {_fmt(tok)} after its buffer was "
+                           f"donated (donated as a jit argument; rebind "
+                           f"from the call result first)")
+                del self.dead[tok]      # one report per token
+
+    def _handle_call(self, call: ast.Call, targets: List[ast.AST],
+                     line: int):
+        name = self._callee_name(call)
+        positions = self.registry.get(name or "")
+        if positions is None:
+            return
+        bound: Set[Tuple[str, str]] = set()
+        for t in targets:
+            tok = _token(t)
+            if tok is not None:
+                bound.add(tok)
+        for pos in positions:
+            if pos >= len(call.args):
+                continue
+            arg = call.args[pos]
+            tok = _token(arg)
+            if tok is None:
+                continue
+            if "params" in tok[1]:
+                self._emit("donate-params", line,
+                           f"{_fmt(tok)} is passed in donated position "
+                           f"{pos} of {name}() — donating model weights "
+                           f"destroys them for every later call")
+                continue
+            if tok in bound:
+                # rebound in the same statement: aliases of the OLD
+                # buffer are still dead
+                for eq in self._equiv(tok) - {tok}:
+                    if eq not in bound:
+                        self.dead[eq] = line
+            else:
+                self._emit("donate-no-rebind", line,
+                           f"{_fmt(tok)} is donated to {name}() but not "
+                           f"rebound from the result in the same "
+                           f"statement — later reads are "
+                           f"use-after-donate")
+                for eq in self._equiv(tok):
+                    if eq not in bound:
+                        self.dead[eq] = line
+
+    def scan_body(self, body: Sequence[ast.stmt]):
+        for stmt in body:
+            # donating calls are only recognized in SIMPLE statements
+            # (Assign/Expr); compound statements recurse below so each
+            # inner statement is judged exactly once
+            call = None
+            if isinstance(stmt, (ast.Assign, ast.Expr)):
+                call = self._find_donating_call(stmt)
+            if call is None:
+                # reads of already-donated tokens: whole statement for
+                # simple statements, header expressions only for
+                # compound ones (their bodies recurse below, after any
+                # revival rebinds inside them are seen in order)
+                if isinstance(stmt, ast.If) or isinstance(stmt, ast.While):
+                    self._check_reads(stmt.test)
+                elif isinstance(stmt, ast.For):
+                    self._check_reads(stmt.iter)
+                elif isinstance(stmt, ast.With):
+                    for item in stmt.items:
+                        self._check_reads(item.context_expr)
+                elif isinstance(stmt, (ast.Try, ast.FunctionDef,
+                                       ast.AsyncFunctionDef, ast.ClassDef)):
+                    pass
+                else:
+                    self._check_reads(stmt)
+            if isinstance(stmt, ast.Assign):
+                targets: List[ast.AST] = []
+                for t in stmt.targets:
+                    targets.extend(flatten_targets(t))
+                if call is not None:
+                    self._handle_call(call, targets, stmt.lineno)
+                # rebinding a dead token revives it; simple aliases
+                # (name = self.X) are tracked for later donation checks
+                for t in targets:
+                    tok = _token(t)
+                    if tok is None:
+                        continue
+                    self.dead.pop(tok, None)
+                    if tok[0] == "local":
+                        src = _token(stmt.value)
+                        if src is not None and len(targets) == 1:
+                            self.aliases[tok[1]] = src
+                        else:
+                            self.aliases.pop(tok[1], None)
+            elif call is not None:
+                # donating call whose result is discarded
+                self._handle_call(call, [], stmt.lineno)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue        # nested defs get their own scanner
+            # recurse into nested blocks in source order
+            for attr in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, attr, None)
+                if inner:
+                    self.scan_body(inner)
+            for h in getattr(stmt, "handlers", []) or []:
+                self.scan_body(h.body)
+
+
+def run(modules: Sequence[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        # 1. registry of donating callables in this module
+        registry: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                pos = _donated_positions(node.value)
+                if pos is None:
+                    continue
+                for t in node.targets:
+                    tok = _token(t)
+                    if tok is not None:
+                        registry[tok[1]] = pos
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        pos = _donated_positions(dec)
+                        if pos is not None:
+                            registry[node.name] = pos
+        if not registry:
+            continue
+        # 2. scan every function for donating call sites
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = node.name
+                parent_cls = next(
+                    (c.name for c in ast.walk(mod.tree)
+                     if isinstance(c, ast.ClassDef) and node in c.body),
+                    None)
+                if parent_cls:
+                    scope = f"{parent_cls}.{node.name}"
+                sc = _FuncScanner(registry, mod.rel, scope, findings)
+                sc.scan_body(node.body)
+    return findings

@@ -1,0 +1,42 @@
+"""The declared lock-acquisition hierarchy of the serving core, plus the
+attribute-name -> class typing hints the lock pass uses to resolve
+cross-class calls (Python has no static types; the serving core's
+receiver names are stable enough to declare here).
+
+``LOCK_ORDER`` lists locks OUTERMOST FIRST: a thread holding a lock may
+only acquire locks that appear LATER in the order.  Acquiring an
+earlier lock — or re-acquiring the same non-reentrant lock — while a
+later one is held is a deadlock report.
+
+This tuple is the single source of truth: the static lock pass enforces
+it, :mod:`repro.analysis.docs_check` asserts ``docs/ARCHITECTURE.md``
+documents exactly this order, and ``tests/test_thread_safety.py``'s
+runtime recorder asserts observed acquisition order is consistent with
+it.
+"""
+from __future__ import annotations
+
+#: Outermost -> innermost.  router above worker above engine: the router
+#: briefly takes its own lock to pick a replica, then calls into the
+#: frontend handle (worker lock), which posts to the backend engine
+#: (engine lock).  No code path may climb back up while holding a lower
+#: lock.
+LOCK_ORDER = (
+    "RouterEngine._lock",
+    "ServiceWorkerMLCEngine._lock",
+    "MLCEngine._lock",
+)
+
+#: Receiver-name -> class-name typing hints for call resolution in the
+#: lock pass: ``self.engine.abort(...)`` / ``front.stats(...)`` resolve
+#: through this table.  Names not listed stay unresolved (no findings).
+ATTR_TYPES = {
+    "engine": "MLCEngine",
+    "backend": "MLCEngine",
+    "front": "ServiceWorkerMLCEngine",
+    "worker": "BackendWorker",
+    "scheduler": "Scheduler",
+    "prefix_cache": "PrefixCache",
+    "pm": "PageManager",
+    "router": "RouterEngine",
+}

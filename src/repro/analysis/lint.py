@@ -1,0 +1,166 @@
+"""``python -m repro.analysis.lint`` — the four-pass static analyzer
+over the threaded serving core, with a findings baseline gate.
+
+Default mode (no positional paths) analyzes ``src/repro/core`` +
+``src/repro/kernels`` under ``--root`` (the repo root by default) and
+cross-checks ``docs/ARCHITECTURE.md``.  Explicit positional paths
+analyze just those files (no docs check) — that is how the self-test
+corpus under ``tests/lint_corpus/`` is linted.
+
+Exit status: 0 iff no unsuppressed findings.  ``--baseline`` suppresses
+findings whose line-number-free key appears in the committed baseline
+file (``src/repro/analysis/baseline.json``) — NEW findings still fail,
+which is the CI contract ``scripts/check_tree.sh`` enforces.  Stale
+baseline entries are reported (stderr) but do not fail the gate.
+
+``--json PATH`` writes the machine-readable report::
+
+    {"findings": [{"rule", "path", "line", "scope", "message", "key"}],
+     "counts": {rule: n}, "waived": n, "baseline_suppressed": n,
+     "baseline_stale": [...], "elapsed_s": t}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import Counter
+from pathlib import Path
+from typing import List
+
+from repro.analysis import docs_check, donation, locks, protocol, threads
+from repro.analysis.common import Finding, Module, load_module
+
+_PKG_DIR = Path(__file__).resolve().parent
+DEFAULT_BASELINE = _PKG_DIR / "baseline.json"
+#: analyzed by default, relative to --root
+DEFAULT_TARGETS = ("src/repro/core", "src/repro/kernels")
+
+
+def _collect_files(root: Path, paths: List[str]) -> List[Path]:
+    if paths:
+        out = []
+        for p in paths:
+            pp = Path(p)
+            if pp.is_dir():
+                out.extend(sorted(pp.glob("*.py")))
+            else:
+                out.append(pp)
+        return out
+    files: List[Path] = []
+    for target in DEFAULT_TARGETS:
+        d = root / target
+        if d.is_dir():
+            files.extend(sorted(d.glob("*.py")))
+    return files
+
+
+def run_passes(modules: List[Module], with_docs: bool,
+               root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(locks.run(modules))
+    findings.extend(donation.run(modules))
+    findings.extend(protocol.run(modules))
+    findings.extend(threads.run(modules))
+    if with_docs:
+        findings.extend(docs_check.run(modules,
+                                       root / "docs" / "ARCHITECTURE.md"))
+    return findings
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static analysis of the threaded serving core")
+    ap.add_argument("paths", nargs="*",
+                    help="explicit files/dirs (default: the serving core "
+                         "under --root, plus the docs cross-check)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: inferred from this package)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="suppress findings present in the baseline file; "
+                         "only NEW findings fail")
+    ap.add_argument("--baseline-file", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline file from current findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.monotonic()
+    root = Path(args.root) if args.root else _PKG_DIR.parents[2]
+    files = _collect_files(root, args.paths)
+    if not files:
+        print(f"lint: no python files found under {root}", file=sys.stderr)
+        return 2
+    modules = [load_module(f, root) for f in files]
+    findings = run_passes(modules, with_docs=not args.paths, root=root)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+
+    # line-comment waivers (lint: ignore[rule])
+    by_rel = {m.rel: m for m in modules}
+    kept: List[Finding] = []
+    waived = 0
+    for f in findings:
+        mod = by_rel.get(f.path)
+        if mod is not None and f.rule in mod.waived_rules(f.line):
+            waived += 1
+        else:
+            kept.append(f)
+    findings = kept
+
+    baseline_path = Path(args.baseline_file)
+    if args.write_baseline:
+        baseline_path.write_text(json.dumps(
+            {"keys": sorted(f.key for f in findings)}, indent=1) + "\n")
+        print(f"lint: wrote {len(findings)} baseline keys to "
+              f"{baseline_path}")
+        return 0
+
+    suppressed = 0
+    stale: List[str] = []
+    if args.baseline:
+        keys = set()
+        if baseline_path.exists():
+            keys = set(json.loads(baseline_path.read_text())
+                       .get("keys", []))
+        current = {f.key for f in findings}
+        stale = sorted(keys - current)
+        kept = []
+        for f in findings:
+            if f.key in keys:
+                suppressed += 1
+            else:
+                kept.append(f)
+        findings = kept
+
+    elapsed = time.monotonic() - t0
+    if not args.quiet:
+        for f in findings:
+            print(f.render())
+        if stale:
+            print(f"lint: {len(stale)} stale baseline entries (fixed "
+                  f"findings still listed in {baseline_path.name}); "
+                  f"refresh with --write-baseline", file=sys.stderr)
+        summary = (f"lint: {len(findings)} findings"
+                   f" ({waived} waived, {suppressed} baselined)"
+                   f" across {len(files)} files in {elapsed:.2f}s")
+        print(summary, file=sys.stderr)
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps({
+            "findings": [{"rule": f.rule, "path": f.path, "line": f.line,
+                          "scope": f.scope, "message": f.message,
+                          "key": f.key} for f in findings],
+            "counts": dict(Counter(f.rule for f in findings)),
+            "waived": waived,
+            "baseline_suppressed": suppressed,
+            "baseline_stale": stale,
+            "elapsed_s": round(elapsed, 3),
+        }, indent=1) + "\n")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,329 @@
+"""Pass 1 — lock discipline + the declared lock-acquisition hierarchy.
+
+Rules
+-----
+``lock-discipline``
+    A ``_GUARDED_BY`` attribute of self is read/written outside
+    ``with self.<lock>`` (``__init__`` exempt), or a ``_GUARDED_FIELDS``
+    record field is touched through a non-self receiver outside the
+    declaring class's lock.
+``assumes-held``
+    A method declared in ``_ASSUMES_HELD`` ("caller holds the lock") is
+    called from a context that does not hold the lock.
+``lock-order``
+    A code path acquires a lock that precedes an already-held lock in
+    :data:`repro.analysis.hierarchy.LOCK_ORDER`, or (re-)acquires a
+    non-reentrant lock it already holds — directly via nested ``with``,
+    or transitively through a resolvable call chain.
+``cross-thread-mutation`` / ``unsnapshotted-iteration`` /
+``cross-thread-call``
+    A ``_CROSS_THREAD`` method of a lock-free (thread-confined) class
+    mutates confined state, iterates a confined collection without
+    snapshotting (``list(...)`` first), or calls a self-method that is
+    not itself declared cross-thread-safe.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import hierarchy
+from repro.analysis.common import (ClassInfo, Finding, Module,
+                                   build_class_map, self_attr)
+
+_MUTATORS = {"append", "appendleft", "add", "insert", "extend", "update",
+             "pop", "popleft", "popitem", "remove", "discard", "clear",
+             "setdefault"}
+
+
+@dataclass
+class LocksConfig:
+    lock_order: Tuple[str, ...] = hierarchy.LOCK_ORDER
+    attr_types: Dict[str, str] = field(
+        default_factory=lambda: dict(hierarchy.ATTR_TYPES))
+
+
+@dataclass
+class _CallSite:
+    callee: Tuple[str, str]          # (class, method)
+    line: int
+    held: Tuple[str, ...]            # lock ids held at the call
+    scope: str                       # caller "Class.method"
+    rel: str                         # caller module path
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """One pass over one method body: guarded-attribute checks with a
+    held-lock stack, direct ``with``-acquire ordering, confined-state
+    rules, and collection of call sites + direct acquires for the
+    transitive hierarchy phase."""
+
+    def __init__(self, cls: ClassInfo, meth: ast.FunctionDef,
+                 cfg: LocksConfig, findings: List[Finding]):
+        self.cls = cls
+        self.meth = meth
+        self.cfg = cfg
+        self.findings = findings
+        self.scope = f"{cls.name}.{meth.name}"
+        self.rel = cls.module.rel
+        self.is_init = meth.name == "__init__"
+        self.held: List[str] = []
+        self.calls: List[_CallSite] = []
+        self.acquires: Set[str] = set()
+        # lock name -> guarded self attrs / guarded foreign fields
+        self.guarded = {k: set(v) for k, v in cls.guarded_by.items()}
+        self.fields = {k: set(v) for k, v in cls.guarded_fields.items()}
+        # method -> locks it assumes held
+        self.assumed: Dict[str, Set[str]] = {}
+        for lock, meths in cls.assumes_held.items():
+            for m in meths:
+                self.assumed.setdefault(m, set()).add(lock)
+        for lock in self.assumed.get(meth.name, ()):
+            self.held.append(self._lock_id(lock))
+        self.cross = meth.name in cls.cross_thread
+        self.confined = set(cls.thread_confined)
+        self._seen: Set[Tuple[str, str, int]] = set()
+
+    # -- helpers ---------------------------------------------------------
+    def _lock_id(self, lock_attr: str) -> str:
+        return f"{self.cls.name}.{lock_attr}"
+
+    def _emit(self, rule: str, line: int, message: str):
+        key = (rule, message, line)
+        if key not in self._seen:
+            self._seen.add(key)
+            self.findings.append(Finding(rule=rule, path=self.rel,
+                                         line=line, scope=self.scope,
+                                         message=message))
+
+    def _is_lock_attr(self, name: str) -> bool:
+        return (name in self.guarded or name in self.fields
+                or name in self.cls.assumes_held or "lock" in name)
+
+    def _check_acquire(self, lock_id: str, line: int):
+        if lock_id in self.held:
+            self._emit("lock-order", line,
+                       f"re-acquires non-reentrant {lock_id} already "
+                       f"held on this path (self-deadlock)")
+            return
+        order = self.cfg.lock_order
+        if lock_id in order:
+            for h in self.held:
+                if h in order and order.index(h) > order.index(lock_id):
+                    self._emit(
+                        "lock-order", line,
+                        f"acquires {lock_id} while holding {h} — "
+                        f"violates declared order "
+                        f"{' -> '.join(order)}")
+
+    def scan(self):
+        for stmt in self.meth.body:
+            self.visit(stmt)
+
+    # -- lock regions ----------------------------------------------------
+    def visit_With(self, node: ast.With):
+        acquired: List[str] = []
+        for item in node.items:
+            self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+            name = self_attr(item.context_expr)
+            if name is not None and self._is_lock_attr(name):
+                lock_id = self._lock_id(name)
+                self._check_acquire(lock_id, node.lineno)
+                self.acquires.add(lock_id)
+                acquired.append(lock_id)
+        self.held.extend(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in acquired:
+            self.held.pop()
+
+    # -- guarded attribute accesses --------------------------------------
+    def visit_Attribute(self, node: ast.Attribute):
+        name = self_attr(node)
+        if name is not None:
+            if not self.is_init:
+                for lock, attrs in self.guarded.items():
+                    if name in attrs and self._lock_id(lock) not in self.held:
+                        ctx = ("write" if isinstance(node.ctx,
+                                                     (ast.Store, ast.Del))
+                               else "read")
+                        self._emit("lock-discipline", node.lineno,
+                                   f"{ctx} of self.{name} (guarded by "
+                                   f"self.{lock}) without the lock held")
+        elif not self.is_init:
+            # record fields of owned objects (non-self receiver)
+            for lock, fields in self.fields.items():
+                if node.attr in fields and self._lock_id(lock) not in self.held:
+                    ctx = ("write" if isinstance(node.ctx,
+                                                 (ast.Store, ast.Del))
+                           else "read")
+                    self._emit("lock-discipline", node.lineno,
+                               f"{ctx} of guarded record field "
+                               f".{node.attr} (guarded by self.{lock}) "
+                               f"without the lock held")
+        self.generic_visit(node)
+
+    # -- confined-state rules (cross-thread methods only) ----------------
+    def _confined_target(self, node: ast.AST) -> Optional[str]:
+        name = self_attr(node)
+        if name is not None and name in self.confined:
+            return name
+        # self.X[...] = ... mutates self.X as well
+        if isinstance(node, ast.Subscript):
+            return self._confined_target(node.value)
+        return None
+
+    def visit_Assign(self, node: ast.Assign):
+        if self.cross:
+            for t in node.targets:
+                name = self._confined_target(t)
+                if name is not None:
+                    self._emit("cross-thread-mutation", node.lineno,
+                               f"cross-thread method mutates "
+                               f"thread-confined self.{name}")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        if self.cross:
+            name = self._confined_target(node.target)
+            if name is not None:
+                self._emit("cross-thread-mutation", node.lineno,
+                           f"cross-thread method mutates "
+                           f"thread-confined self.{name}")
+        self.generic_visit(node)
+
+    def _check_iter(self, it: ast.AST, line: int):
+        name = self_attr(it)
+        if name is not None and name in self.confined:
+            self._emit("unsnapshotted-iteration", line,
+                       f"cross-thread method iterates thread-confined "
+                       f"self.{name} directly — snapshot with "
+                       f"list(self.{name}) first")
+
+    def visit_For(self, node: ast.For):
+        if self.cross:
+            self._check_iter(node.iter, node.lineno)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node):
+        if self.cross:
+            for gen in node.generators:
+                self._check_iter(gen.iter, node.lineno)
+        self.generic_visit(node)
+
+    visit_ListComp = visit_SetComp = visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # -- calls -----------------------------------------------------------
+    def _resolve_receiver(self, func: ast.Attribute) -> Optional[str]:
+        v = func.value
+        if isinstance(v, ast.Name):
+            if v.id == "self":
+                return self.cls.name
+            return self.cfg.attr_types.get(v.id)
+        if isinstance(v, ast.Attribute):
+            return self.cfg.attr_types.get(v.attr)
+        return None
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            recv = self._resolve_receiver(func)
+            if recv is not None:
+                if recv == self.cls.name:
+                    # assumes-held contract at the call site
+                    for lock in self.assumed.get(func.attr, ()):
+                        if self._lock_id(lock) not in self.held:
+                            self._emit(
+                                "assumes-held", node.lineno,
+                                f"calls self.{func.attr}() which assumes "
+                                f"self.{lock} is held, without the lock")
+                    if (self.cross and func.attr in self.cls.methods()
+                            and func.attr not in self.cls.cross_thread):
+                        self._emit(
+                            "cross-thread-call", node.lineno,
+                            f"cross-thread method calls self."
+                            f"{func.attr}() which is not declared "
+                            f"cross-thread-safe")
+                self.calls.append(_CallSite(
+                    callee=(recv, func.attr), line=node.lineno,
+                    held=tuple(self.held), scope=self.scope, rel=self.rel))
+            # mutating calls on confined collections
+            if self.cross:
+                name = self_attr(func.value)
+                if (name is not None and name in self.confined
+                        and func.attr in _MUTATORS):
+                    self._emit("cross-thread-mutation", node.lineno,
+                               f"cross-thread method mutates "
+                               f"thread-confined self.{name} "
+                               f"(.{func.attr}())")
+        self.generic_visit(node)
+
+
+def run(modules: Sequence[Module],
+        config: Optional[LocksConfig] = None) -> List[Finding]:
+    cfg = config or LocksConfig()
+    classes = build_class_map(modules)
+    findings: List[Finding] = []
+    direct: Dict[Tuple[str, str], Set[str]] = {}
+    calls: List[_CallSite] = []
+    defined: Set[Tuple[str, str]] = set()
+
+    for cls in classes.values():
+        for name, meth in cls.methods().items():
+            defined.add((cls.name, name))
+            sc = _MethodScanner(cls, meth, cfg, findings)
+            sc.scan()
+            direct[(cls.name, name)] = sc.acquires
+            calls.extend(sc.calls)
+
+    # transitive closure: which locks can a (class, method) acquire?
+    acq: Dict[Tuple[str, str], Set[str]] = {k: set(v)
+                                            for k, v in direct.items()}
+    edges: Dict[Tuple[str, str], Set[Tuple[str, str]]] = {}
+    for c in calls:
+        caller = None
+        for key in defined:
+            if f"{key[0]}.{key[1]}" == c.scope:
+                caller = key
+                break
+        if caller is not None and c.callee in defined:
+            edges.setdefault(caller, set()).add(c.callee)
+    changed = True
+    while changed:
+        changed = False
+        for caller, callees in edges.items():
+            for callee in callees:
+                extra = acq.get(callee, set()) - acq.setdefault(caller, set())
+                if extra:
+                    acq[caller].update(extra)
+                    changed = True
+
+    # deadlock reports at call sites made while holding locks
+    order = cfg.lock_order
+    seen: Set[Tuple[str, int, str]] = set()
+    for c in calls:
+        if not c.held or c.callee not in defined:
+            continue
+        for lock in sorted(acq.get(c.callee, ())):
+            msg = None
+            if lock in c.held:
+                msg = (f"calls {c.callee[0]}.{c.callee[1]}() which may "
+                       f"re-acquire already-held {lock} (deadlock)")
+            elif lock in order:
+                for h in c.held:
+                    if h in order and order.index(h) > order.index(lock):
+                        msg = (f"calls {c.callee[0]}.{c.callee[1]}() "
+                               f"which may acquire {lock} while holding "
+                               f"{h} — violates declared order "
+                               f"{' -> '.join(order)}")
+                        break
+            if msg and (c.rel, c.line, msg) not in seen:
+                seen.add((c.rel, c.line, msg))
+                findings.append(Finding(rule="lock-order", path=c.rel,
+                                        line=c.line, scope=c.scope,
+                                        message=msg))
+    return findings

@@ -1,0 +1,237 @@
+"""Pass 3 — worker JSON-boundary exhaustiveness.
+
+The frontend/backend split speaks ONLY ``{"kind": ...}`` JSON messages
+over the port (``core/worker.py``).  A kind emitted on one side with no
+handler branch on the peer side is a silent message drop (the bug class
+behind hung frontends); a handler branch for a kind nobody emits is
+protocol drift.  Typed crash errors cross the boundary as an ``etype``
+tag that must map back to a real exception class.
+
+Sides: emits via ``self._post(...)`` belong to the WORKER side, emits
+via ``self._send(...)`` to the CLIENT side (the method names are the
+convention; :class:`ProtocolConfig` can re-declare which classes sit on
+which side).  Handler branches are comparisons/membership tests of a
+kind expression (``msg["kind"]``, ``msg.get("kind")``, or a variable
+named ``kind``) against string literals.
+
+Rules
+-----
+``protocol-unhandled``  — kind emitted, no peer handler branch.
+``protocol-stale-handler`` — handler branch for a kind never emitted by
+the peer (skipped when the peer side emits no literals at all).
+``etype-unresolvable`` — an ``_ETYPES`` registry key/value (or a literal
+compared against ``msg.get("etype")``) that does not name a class
+defined/imported at module top level, or a key that mismatches its
+class.
+``etype-never-sent`` — the module compares/maps ``etype`` tags but no
+emitted ``"error"``/``"crash"`` message literal carries an ``"etype"``
+key.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, Module, const_str
+
+#: emit method name -> side of the class that CALLS it
+EMIT_SIDES = {"_post": "worker", "_send": "client"}
+
+
+@dataclass
+class ProtocolConfig:
+    #: class name -> side ("worker" | "client")
+    sides: Dict[str, str] = field(default_factory=lambda: {
+        "BackendWorker": "worker",
+        "ServiceWorkerMLCEngine": "client",
+    })
+
+
+def _is_kind_expr(node: ast.AST) -> bool:
+    """msg["kind"] / msg.get("kind") / a variable named like ``kind``."""
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if isinstance(sl, ast.Index):              # py<3.9 compat
+            sl = sl.value
+        return const_str(sl) == "kind"
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "get" and node.args):
+        return const_str(node.args[0]) == "kind"
+    if isinstance(node, ast.Name):
+        return node.id == "kind" or node.id.endswith("_kind")
+    return False
+
+
+def _is_etype_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if isinstance(sl, ast.Index):
+            sl = sl.value
+        return const_str(sl) == "etype"
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "get" and node.args):
+        return const_str(node.args[0]) == "etype"
+    return isinstance(node, ast.Name) and node.id == "etype"
+
+
+def _literals(node: ast.AST) -> List[str]:
+    """String literals in a comparator: "x" or ("x", "y")."""
+    s = const_str(node)
+    if s is not None:
+        return [s]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for elt in node.elts:
+            s = const_str(elt)
+            if s is not None:
+                out.append(s)
+        return out
+    return []
+
+
+def _dict_entry(d: ast.Dict, key: str) -> Optional[ast.AST]:
+    for k, v in zip(d.keys, d.values):
+        if k is not None and const_str(k) == key:
+            return v
+    return None
+
+
+def run(modules: Sequence[Module],
+        config: Optional[ProtocolConfig] = None) -> List[Finding]:
+    cfg = config or ProtocolConfig()
+    findings: List[Finding] = []
+    for mod in modules:
+        classes = [n for n in mod.tree.body if isinstance(n, ast.ClassDef)]
+        relevant = [c for c in classes if c.name in cfg.sides]
+        if not relevant:
+            continue
+        #: side -> {kind -> first emit (scope, line)}
+        emitted: Dict[str, Dict[str, Tuple[str, int]]] = {"worker": {},
+                                                          "client": {}}
+        handled: Dict[str, Dict[str, Tuple[str, int]]] = {"worker": {},
+                                                          "client": {}}
+        etype_emitted = False
+        etype_refs: List[Tuple[str, str, int]] = []   # (name, scope, line)
+        top_names = _module_names(mod.tree)
+
+        for cls in relevant:
+            side = cfg.sides[cls.name]
+            for meth in [n for n in cls.body
+                         if isinstance(n, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))]:
+                scope = f"{cls.name}.{meth.name}"
+                for node in ast.walk(meth):
+                    # emits: self._post({...}) / self._send({...})
+                    if (isinstance(node, ast.Call)
+                            and isinstance(node.func, ast.Attribute)
+                            and node.func.attr in EMIT_SIDES
+                            and node.args
+                            and isinstance(node.args[0], ast.Dict)):
+                        d = node.args[0]
+                        kv = _dict_entry(d, "kind")
+                        kind = const_str(kv) if kv is not None else None
+                        if kind is not None:
+                            emit_side = EMIT_SIDES[node.func.attr]
+                            emitted[emit_side].setdefault(
+                                kind, (scope, node.lineno))
+                            if _dict_entry(d, "etype") is not None:
+                                etype_emitted = True
+                    # handlers: comparisons / membership on a kind expr
+                    if isinstance(node, ast.Compare):
+                        sides_of_cmp = [node.left] + list(node.comparators)
+                        if any(_is_kind_expr(s) for s in sides_of_cmp):
+                            for s in sides_of_cmp:
+                                for lit in _literals(s):
+                                    handled[side].setdefault(
+                                        lit, (scope, node.lineno))
+                        if any(_is_etype_expr(s) for s in sides_of_cmp):
+                            for s in sides_of_cmp:
+                                for lit in _literals(s):
+                                    etype_refs.append((lit, scope,
+                                                       node.lineno))
+
+        # the _ETYPES registry: module-level dict mapping tag -> class
+        for node in mod.tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and "_ETYPES" in node.targets[0].id
+                    and isinstance(node.value, ast.Dict)):
+                for k, v in zip(node.value.keys, node.value.values):
+                    tag = const_str(k) if k is not None else None
+                    if tag is None:
+                        continue
+                    etype_refs.append((tag, "<module>", node.lineno))
+                    vname = v.id if isinstance(v, ast.Name) else None
+                    if vname != tag:
+                        findings.append(Finding(
+                            rule="etype-unresolvable", path=mod.rel,
+                            line=node.lineno, scope="<module>",
+                            message=f"etype registry key {tag!r} maps to "
+                                    f"{vname or 'a non-name value'} — tag "
+                                    f"and class name must match for "
+                                    f"type(e).__name__ roundtripping"))
+                # registry keys count as handled etype branches: the
+                # dict lookup IS the dispatch
+        # exhaustiveness: every emitted kind has a PEER handler branch
+        peer = {"worker": "client", "client": "worker"}
+        for side, kinds in emitted.items():
+            for kind, (scope, line) in sorted(kinds.items()):
+                if kind not in handled[peer[side]]:
+                    findings.append(Finding(
+                        rule="protocol-unhandled", path=mod.rel, line=line,
+                        scope=scope,
+                        message=f'message kind "{kind}" emitted by the '
+                                f'{side} side has no handler branch on '
+                                f'the {peer[side]} side'))
+        for side, kinds in handled.items():
+            if not emitted[peer[side]]:
+                continue        # peer emits nothing literal: can't judge
+            for kind, (scope, line) in sorted(kinds.items()):
+                if kind not in emitted[peer[side]]:
+                    findings.append(Finding(
+                        rule="protocol-stale-handler", path=mod.rel,
+                        line=line, scope=scope,
+                        message=f'handler branch for kind "{kind}" but '
+                                f'the {peer[side]} side never emits it'))
+        # etype tags must resolve to module-level classes
+        seen_tags: Set[str] = set()
+        for tag, scope, line in etype_refs:
+            if tag in seen_tags:
+                continue
+            seen_tags.add(tag)
+            if tag not in top_names:
+                findings.append(Finding(
+                    rule="etype-unresolvable", path=mod.rel, line=line,
+                    scope=scope,
+                    message=f"etype tag {tag!r} does not name a class "
+                            f"defined or imported at module top level — "
+                            f"it can never roundtrip"))
+        if etype_refs and not etype_emitted:
+            tag, scope, line = etype_refs[0]
+            findings.append(Finding(
+                rule="etype-never-sent", path=mod.rel, line=line,
+                scope=scope,
+                message="etype tags are handled on this boundary but no "
+                        "emitted message literal carries an \"etype\" "
+                        "key — typed errors degrade to RuntimeError"))
+    return findings
+
+
+def _module_names(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                names.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                names.add(a.asname or a.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names

@@ -1,0 +1,213 @@
+"""Pass 4 — thread hygiene.
+
+The serving core runs four thread populations (engine stepper, worker
+serve + per-request completion threads, frontend rx dispatch, router
+monitor/respawn).  Debugging concurrent crashes starts with ``py-spy``
+/ faulthandler output, which is useless when every thread is called
+``Thread-7``; and a serve-loop thread that swallows exceptions (or dies
+without signaling) turns a crash into a silent hang — the exact bug
+class PR 6's typed crash propagation exists to kill.
+
+Rules
+-----
+``thread-unnamed``
+    ``threading.Thread(...)`` without a ``name=`` kwarg.
+``thread-not-daemon-or-joined``
+    Thread created neither ``daemon=True`` nor (statically detectably)
+    ``.join()``-ed in the same module — an interpreter-exit hang.
+``thread-target-unguarded``
+    A ``target=`` function with no top-level broad ``except`` — an
+    uncaught exception kills the thread with no crash signal.
+``silent-except``
+    A broad handler (``except``/``except Exception``/``BaseException``)
+    inside a ``while`` loop or a thread-target function whose body
+    neither raises nor calls anything — the failure is swallowed with
+    no re-signal (crash message, ``_die``, or log).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import (Finding, Module, is_broad_handler,
+                                   self_attr)
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return (f.attr == "Thread" and isinstance(f.value, ast.Name)
+                and f.value.id == "threading")
+    return isinstance(f, ast.Name) and f.id == "Thread"
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _target_name(call: ast.Call) -> Optional[str]:
+    t = _kw(call, "target")
+    if t is None:
+        return None
+    name = self_attr(t)
+    if name is not None:
+        return name
+    if isinstance(t, ast.Name):
+        return t.id
+    return None
+
+
+def _has_join(tree: ast.Module) -> Set[str]:
+    """Names/attrs that have ``.join()`` called on them anywhere in the
+    module (thread-shaped receivers only; ``", ".join`` is a string)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "join"):
+            recv = node.func.value
+            name = self_attr(recv)
+            if name is not None:
+                out.add(name)
+            elif isinstance(recv, ast.Name):
+                out.add(recv.id)
+    return out
+
+
+def _scope_of(tree: ast.Module, node: ast.AST) -> str:
+    for cls in ast.walk(tree):
+        if isinstance(cls, ast.ClassDef):
+            for meth in cls.body:
+                if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if node in ast.walk(meth):
+                        return f"{cls.name}.{meth.name}"
+    for fn in tree.body:
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node in ast.walk(fn):
+                return fn.name
+    return "<module>"
+
+
+def _assigned_token(tree: ast.Module, call: ast.Call) -> Optional[str]:
+    """If the Thread ctor result is assigned, the target's name."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and node.value is call:
+            t = node.targets[0]
+            name = self_attr(t)
+            if name is not None:
+                return name
+            if isinstance(t, ast.Name):
+                return t.id
+        # `threading.Thread(...).start()` chains are unassigned
+    return None
+
+
+def _has_toplevel_broad_try(fn: ast.FunctionDef) -> bool:
+    for stmt in fn.body:
+        if isinstance(stmt, ast.Try):
+            if any(is_broad_handler(h) for h in stmt.handlers):
+                return True
+    return False
+
+
+class _SilentExceptVisitor(ast.NodeVisitor):
+    """Broad handlers that swallow: no Raise and no Call in the body,
+    inside a ``while`` loop or a thread-target function."""
+
+    def __init__(self, mod: Module, scope_fn, targets: Set[str],
+                 findings: List[Finding]):
+        self.mod = mod
+        self.scope_fn = scope_fn
+        self.targets = targets
+        self.findings = findings
+        self.while_depth = 0
+        self.fn_stack: List[str] = []
+
+    def visit_While(self, node: ast.While):
+        self.while_depth += 1
+        self.generic_visit(node)
+        self.while_depth -= 1
+
+    def _visit_fn(self, node):
+        self.fn_stack.append(node.name)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        in_target = any(fn in self.targets for fn in self.fn_stack)
+        if (is_broad_handler(node) and (self.while_depth > 0 or in_target)):
+            has_signal = any(isinstance(sub, (ast.Raise, ast.Call))
+                             for stmt in node.body
+                             for sub in ast.walk(stmt))
+            if not has_signal:
+                where = ("a serve-loop" if self.while_depth > 0
+                         else "a thread-target function")
+                self.findings.append(Finding(
+                    rule="silent-except", path=self.mod.rel,
+                    line=node.lineno, scope=self.scope_fn(node),
+                    message=f"broad except inside {where} swallows the "
+                            f"failure without re-signaling (raise, crash "
+                            f"message, or log)"))
+        self.generic_visit(node)
+
+
+def run(modules: Sequence[Module]) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        tree = mod.tree
+        joined = _has_join(tree)
+        targets: Set[str] = set()
+        thread_calls: List[ast.Call] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_thread_ctor(node):
+                thread_calls.append(node)
+                tname = _target_name(node)
+                if tname:
+                    targets.add(tname)
+        # function defs by name (methods and module functions alike)
+        fndefs: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fndefs.setdefault(node.name, node)
+
+        for call in thread_calls:
+            scope = _scope_of(tree, call)
+            if _kw(call, "name") is None:
+                findings.append(Finding(
+                    rule="thread-unnamed", path=mod.rel, line=call.lineno,
+                    scope=scope,
+                    message="threading.Thread(...) without name= — "
+                            "unnameable in stack dumps and profilers"))
+            daemon = _kw(call, "daemon")
+            is_daemon = (isinstance(daemon, ast.Constant)
+                         and daemon.value is True)
+            if not is_daemon:
+                token = _assigned_token(tree, call)
+                if token is None or token not in joined:
+                    findings.append(Finding(
+                        rule="thread-not-daemon-or-joined", path=mod.rel,
+                        line=call.lineno, scope=scope,
+                        message="thread is neither daemon=True nor "
+                                ".join()-ed in this module — interpreter "
+                                "exit will hang on it"))
+
+        for tname in sorted(targets):
+            fn = fndefs.get(tname)
+            if fn is None:
+                continue        # cross-module target: out of scope
+            if not _has_toplevel_broad_try(fn):
+                findings.append(Finding(
+                    rule="thread-target-unguarded", path=mod.rel,
+                    line=fn.lineno, scope=_scope_of(tree, fn),
+                    message=f"thread target {tname}() has no top-level "
+                            f"broad except — an uncaught exception kills "
+                            f"the thread with no crash signal"))
+
+        _SilentExceptVisitor(mod, lambda n: _scope_of(tree, n), targets,
+                             findings).visit(tree)
+    return findings

@@ -126,6 +126,9 @@ class ChatCompletionRequest:
     top_k: int = 0
     # min-p filter: drop tokens with p < min_p * max(p) (0 = disabled)
     min_p: float = 0.0
+    # locally-typical sampling: keep the lowest |surprisal - entropy|
+    # tokens until their mass reaches typical_p (1 = disabled)
+    typical_p: float = 1.0
     frequency_penalty: float = 0.0
     presence_penalty: float = 0.0
     repetition_penalty: float = 1.0

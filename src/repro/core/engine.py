@@ -176,6 +176,16 @@ class MLCEngine:
     #: seconds of engine-wide inactivity before a waiting caller gives up
     STALL_TIMEOUT_S = 300.0
 
+    # lint (repro.analysis pass 1): request bookkeeping, the loop-thread
+    # slot, and the progress timestamp are lock-guarded; ``models`` is
+    # deliberately NOT listed — it is read-mostly and ``stats`` documents
+    # its racy reads.  ``_retire`` is called with the lock already held.
+    _GUARDED_BY = {
+        "_lock": ("_requests", "_preaborted", "_retired", "_thread",
+                  "_t_activity"),
+    }
+    _ASSUMES_HELD = {"_lock": ("_retire",)}
+
     def __init__(self):
         self.models: Dict[str, _LoadedModel] = {}
         self._requests: Dict[str, _Request] = {}      # live, by request id
@@ -287,10 +297,14 @@ class MLCEngine:
         if token_budget is None:
             token_budget = default_budget
         assert token_budget >= 1, token_budget
-        self.models[name] = _LoadedModel(
+        lm = _LoadedModel(
             runner=runner, tokenizer=tokenizer, scheduler=scheduler,
             backend=backend, token_budget=token_budget,
             prefill_chunk_size=prefill_chunk_size)
+        with self._lock:
+            # publish under the lock, like unload_model pops under it:
+            # the loop thread snapshots ``models`` while holding it
+            self.models[name] = lm
 
     def unload_model(self, name: str):
         with self._lock:
@@ -406,6 +420,7 @@ class MLCEngine:
                 sampler=RequestSampler(
                     temperature=req.temperature, top_p=req.top_p,
                     top_k=req.top_k, min_p=req.min_p,
+                    typical_p=req.typical_p,
                     frequency_penalty=req.frequency_penalty,
                     presence_penalty=req.presence_penalty,
                     repetition_penalty=req.repetition_penalty,
@@ -428,6 +443,7 @@ class MLCEngine:
         with self._lock:
             if self._thread is None or not self._thread.is_alive():
                 self._thread = threading.Thread(target=self._loop,
+                                                name="repro-engine-loop",
                                                 daemon=True)
                 self._thread.start()
 
@@ -487,7 +503,8 @@ class MLCEngine:
         for name, lm in models:
             busy |= self._step_model(name, lm)
         if busy:
-            self._t_activity = time.time()
+            with self._lock:
+                self._t_activity = time.time()
         return busy
 
     def _step_model(self, name: str, lm: _LoadedModel) -> bool:
@@ -1233,7 +1250,9 @@ class MLCEngine:
             try:
                 return r.out.get(timeout=30)
             except queue.Empty:
-                idle = time.time() - self._t_activity
+                with self._lock:
+                    t_activity = self._t_activity
+                idle = time.time() - t_activity
                 if idle > self.STALL_TIMEOUT_S:
                     raise TimeoutError(
                         f"engine stalled: no output for request {r.rid} "

@@ -40,6 +40,13 @@ class SeqAlloc:
 class PageManager:
     """Free-list page allocator + refcounted per-sequence page tables."""
 
+    # lint (repro.analysis pass 1): allocator state is confined to the
+    # engine loop thread; ``stats``/``num_free_pages`` are the len-only
+    # probes other threads may call.
+    _THREAD_CONFINED = ("free_pages", "free_slots", "seqs", "ref",
+                        "_next_id", "n_shared", "n_cow_forks")
+    _CROSS_THREAD = ("stats", "num_free_pages")
+
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
                  pages_per_seq: int):
         self.page_size = page_size

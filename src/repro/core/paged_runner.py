@@ -280,8 +280,9 @@ class PagedModelRunner:
     def _ragged_sample_step(self, params, k_pages, v_pages, tokens, pos,
                             page_tables, contexts, starts, lengths,
                             page_idx, page_off, parent, seeds, counters,
-                            temperature, top_k, top_p, min_p, freq_pen,
-                            pres_pen, rep_pen, bias, counts, mask_bits,
+                            temperature, top_k, top_p, min_p, typical_p,
+                            freq_pen, pres_pen, rep_pen, bias, counts,
+                            mask_bits,
                             *, vocab: int, n_top: int,
                             use_planes: bool, all_greedy: bool,
                             need_logprobs: bool):
@@ -300,7 +301,8 @@ class PagedModelRunner:
             contexts, starts, lengths, page_idx, page_off)
         rows = logits[parent][:, :vocab]
         out = batched_sample(rows, seeds, counters, temperature, top_k,
-                             top_p, min_p, freq_pen, pres_pen, rep_pen,
+                             top_p, min_p, typical_p, freq_pen,
+                             pres_pen, rep_pen,
                              bias, counts, mask_bits, n_top=n_top,
                              use_planes=use_planes, all_greedy=all_greedy,
                              need_logprobs=need_logprobs)
@@ -561,6 +563,7 @@ class PagedModelRunner:
                 jnp.asarray(pad(sampling.top_k)),
                 jnp.asarray(pad(sampling.top_p)),
                 jnp.asarray(pad(sampling.min_p)),
+                jnp.asarray(pad(sampling.typical_p, 1)),
                 jnp.asarray(pad(sampling.freq_pen)),
                 jnp.asarray(pad(sampling.pres_pen)),
                 jnp.asarray(pad(sampling.rep_pen)),

@@ -94,6 +94,15 @@ class _Tail:
 class PrefixCache:
     """Radix tree token-ids -> physical KV pages, with LRU eviction."""
 
+    # lint (repro.analysis pass 1): the tree and its counters are
+    # confined to the engine loop thread; only the declared
+    # ``_CROSS_THREAD`` probes may run from stats/worker threads, and
+    # they must snapshot before iterating (see ``evictable_pages``).
+    _THREAD_CONFINED = ("root", "_clock", "_pages", "hits", "misses",
+                        "hit_tokens", "evictions", "cap_evictions",
+                        "inserted_pages")
+    _CROSS_THREAD = ("stats", "evictable_pages")
+
     def __init__(self, pm: PageManager,
                  max_cached_pages: Optional[int] = None,
                  max_cached_bytes: Optional[int] = None,

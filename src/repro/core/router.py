@@ -52,6 +52,7 @@ crosses the JSON port like any other frontend caller.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 import uuid
@@ -62,6 +63,8 @@ from repro.core import api
 from repro.core.engine import EngineCrashed, MLCEngine
 from repro.core.prefix_cache import page_prefix_keys
 from repro.core.worker import ServiceWorkerMLCEngine, WorkerCrashed
+
+_log = logging.getLogger("repro.router")
 
 
 class NoHealthyReplicas(RuntimeError):
@@ -89,6 +92,7 @@ class _Replica:
         self.affinity_hits = 0            # lifetime
         self.restarts = 0                 # crash respawns
         self.recycles = 0                 # drain respawns
+        self.spawn_failures = 0           # factory raised during respawn
         self.last_stats: Optional[dict] = None   # heartbeat snapshot
 
 
@@ -100,6 +104,20 @@ class RouterEngine:
     construction and again whenever a dead or drained replica is
     respawned.
     """
+
+    # every access outside ``with self._lock`` is a lint finding
+    # (repro.analysis pass 1); ``_GUARDED_FIELDS`` covers the mutable
+    # ``_Replica`` record fields, which share the router's lock
+    _GUARDED_BY = {
+        "_lock": ("_replicas", "_affinity", "_rids", "_completion_tokens",
+                  "_t0", "_monitor_crashed"),
+    }
+    _GUARDED_FIELDS = {
+        "_lock": ("state", "generation", "in_flight", "dispatches",
+                  "served", "affinity_hits", "restarts", "recycles",
+                  "respawning", "spawn_failures", "last_stats", "front",
+                  "backend"),
+    }
 
     def __init__(self, engine_factory: Callable[[], MLCEngine],
                  replicas: int = 2, *,
@@ -134,8 +152,10 @@ class RouterEngine:
         self._rids: Dict[str, Tuple[_Replica, int]] = {}
         self._completion_tokens = 0
         self._t0: Optional[float] = None       # first dispatch
+        self._monitor_crashed: Optional[str] = None
         self._stop = threading.Event()
         self._monitor_thread = threading.Thread(target=self._monitor,
+                                                name="repro-router-monitor",
                                                 daemon=True)
         self._monitor_thread.start()
 
@@ -157,11 +177,14 @@ class RouterEngine:
             return []
         return page_prefix_keys(ids, ps)
 
-    def _dispatch(self, model: str, keys: List[tuple],
-                  rid: str) -> Tuple[_Replica, int, bool]:
+    def _dispatch(
+            self, model: str, keys: List[tuple], rid: str,
+    ) -> Tuple[_Replica, int, ServiceWorkerMLCEngine, bool]:
         """Pick a replica (affinity-sticky with least-loaded fallback),
         record the request and the conversation's chain.  Returns
-        ``(replica, generation, was_affinity_hit)``."""
+        ``(replica, generation, front, was_affinity_hit)`` — generation
+        and front are captured under the lock so the caller never reads
+        mutable replica fields unlocked."""
         chain: List[int] = []
         h = hash(("affinity", model))
         with self._lock:
@@ -207,7 +230,8 @@ class RouterEngine:
             self._rids[rid] = (chosen, chosen.generation)
             if self._t0 is None:
                 self._t0 = time.time()
-        return chosen, chosen.generation, hit
+            gen, front = chosen.generation, chosen.front
+        return chosen, gen, front, hit
 
     def _finish(self, rid: str, served: bool):
         with self._lock:
@@ -240,10 +264,10 @@ class RouterEngine:
         req = (api.ChatCompletionRequest.from_dict(request)
                if isinstance(request, dict) else request)
         rid = request_id or uuid.uuid4().hex
-        rep, gen, _hit = self._dispatch(req.model, self._prompt_keys(req),
-                                        rid)
+        rep, gen, front, _hit = self._dispatch(
+            req.model, self._prompt_keys(req), rid)
         try:
-            out = rep.front.chat_completions_create(req, request_id=rid)
+            out = front.chat_completions_create(req, request_id=rid)
         except BaseException as e:
             self._finish(rid, served=False)
             if isinstance(e, (WorkerCrashed, EngineCrashed)):
@@ -277,8 +301,9 @@ class RouterEngine:
         """Cancel an in-flight request wherever it was routed."""
         with self._lock:
             ent = self._rids.get(request_id)
-        if ent is not None:
-            ent[0].front.abort(request_id)
+            front = ent[0].front if ent is not None else None
+        if front is not None:
+            front.abort(request_id)
 
     def stats(self, model: Optional[str] = None) -> dict:
         """Router-level observability: per-replica
@@ -303,10 +328,12 @@ class RouterEngine:
                     "affinity_hit_rate": (r.affinity_hits / r.dispatches
                                           if r.dispatches else 0.0),
                     "restarts": r.restarts, "recycles": r.recycles,
+                    "spawn_failures": r.spawn_failures,
                     "engine": eng,
                 })
             return {
                 "replicas": len(self._replicas),
+                "monitor_crashed": self._monitor_crashed,
                 "dispatches": dispatches,
                 "affinity_hits": hits,
                 "affinity_hit_rate": (hits / dispatches
@@ -346,8 +373,10 @@ class RouterEngine:
             backend = self._factory()
             front = ServiceWorkerMLCEngine(backend,
                                            replica_id=rep.replica_id)
-        except Exception:
+        except Exception as e:
+            _log.warning("respawn of %s failed: %r", rep.replica_id, e)
             with self._lock:              # stay dead; monitor retries
+                rep.spawn_failures += 1
                 rep.respawning = False
             return
         with self._lock:
@@ -361,51 +390,74 @@ class RouterEngine:
             rep.respawning = False
 
     def _monitor(self):
-        """Heartbeat loop: short-timeout ``stats()`` per replica (the
-        liveness probe AND the aggregated stats snapshot), drain
-        completion, and respawning of dead slots."""
-        while not self._stop.wait(self.heartbeat_s):
-            for rep in self._replicas:
+        """Supervision loop: one :meth:`_beat` per replica per period.
+        A crash of the monitor itself is recorded (``monitor_crashed``
+        in :meth:`stats`) instead of silently ending supervision."""
+        try:
+            while not self._stop.wait(self.heartbeat_s):
                 with self._lock:
-                    state, gen, front = rep.state, rep.generation, rep.front
-                    spawn = state == "dead" and not rep.respawning
-                    if spawn:
-                        rep.respawning = True
-                if spawn:
-                    threading.Thread(target=self._respawn,
-                                     args=(rep, "restarts"),
-                                     daemon=True).start()
-                    continue
-                if state == "dead":
-                    continue
-                if state == "draining":
-                    with self._lock:
-                        done = rep.in_flight == 0 and rep.state == "draining"
-                        if done:
-                            rep.state = "dead"
-                            rep.respawning = True
-                    if done:
-                        try:              # graceful: nothing in flight
-                            front.shutdown()
-                        except Exception:
-                            pass
-                        threading.Thread(target=self._respawn,
-                                         args=(rep, "recycles"),
-                                         daemon=True).start()
-                    continue
-                try:
-                    rep.last_stats = front.stats(
-                        timeout=self.heartbeat_timeout_s)
-                except (TimeoutError, WorkerCrashed) as e:
-                    self._handle_crash(rep, gen, f"heartbeat failed: {e}")
-                except Exception:
-                    pass  # an error REPLY means the worker is alive
+                    reps = list(self._replicas)
+                for rep in reps:
+                    self._beat(rep)
+        except BaseException as e:
+            _log.error("router monitor thread crashed: %r", e)
+            with self._lock:
+                self._monitor_crashed = repr(e)
+
+    def _beat(self, rep: _Replica):
+        """One heartbeat for one replica: respawn it if dead, complete a
+        drain, else probe with a short-timeout ``stats()`` round-trip
+        (the liveness check AND the aggregated stats snapshot).  Split
+        out from :meth:`_monitor` so tests can intercept it."""
+        with self._lock:
+            state, gen, front = rep.state, rep.generation, rep.front
+            spawn = state == "dead" and not rep.respawning
+            if spawn:
+                rep.respawning = True
+        if spawn:
+            threading.Thread(
+                target=self._respawn, args=(rep, "restarts"),
+                name=f"repro-router-respawn[{rep.replica_id}]",
+                daemon=True).start()
+            return
+        if state == "dead":
+            return
+        if state == "draining":
+            with self._lock:
+                done = rep.in_flight == 0 and rep.state == "draining"
+                if done:
+                    rep.state = "dead"
+                    rep.respawning = True
+            if done:
+                try:                      # graceful: nothing in flight
+                    front.shutdown()
+                except Exception as e:
+                    _log.warning("drain shutdown of %s failed: %r",
+                                 rep.replica_id, e)
+                threading.Thread(
+                    target=self._respawn, args=(rep, "recycles"),
+                    name=f"repro-router-respawn[{rep.replica_id}]",
+                    daemon=True).start()
+            return
+        try:
+            snap = front.stats(timeout=self.heartbeat_timeout_s)
+            with self._lock:
+                if rep.generation == gen:  # not restarted underneath us
+                    rep.last_stats = snap
+        except (TimeoutError, WorkerCrashed) as e:
+            self._handle_crash(rep, gen, f"heartbeat failed: {e}")
+        except Exception as e:
+            # an error REPLY means the worker is alive — note it, move on
+            _log.info("heartbeat reply error from %s: %r",
+                      rep.replica_id, e)
 
     def shutdown(self):
         """Stop the monitor and shut every replica down."""
         self._stop.set()
-        for rep in self._replicas:
+        with self._lock:
+            fronts = [(r.replica_id, r.front) for r in self._replicas]
+        for replica_id, front in fronts:
             try:
-                rep.front.shutdown()
-            except Exception:
-                pass
+                front.shutdown()
+            except Exception as e:
+                _log.info("shutdown of %s: %r", replica_id, e)

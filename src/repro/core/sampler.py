@@ -40,6 +40,7 @@ import numpy as np
 class RequestSampler:
     def __init__(self, *, temperature: float = 1.0, top_p: float = 1.0,
                  top_k: int = 0, min_p: float = 0.0,
+                 typical_p: float = 1.0,
                  frequency_penalty: float = 0.0,
                  presence_penalty: float = 0.0,
                  repetition_penalty: float = 1.0,
@@ -52,6 +53,11 @@ class RequestSampler:
         # [0, 1] — the top token always survives, so min_p can never
         # empty the distribution (device op clamps identically)
         self.min_p = min(1.0, max(0.0, min_p))
+        # locally-typical filter: keep the lowest |surprisal - entropy|
+        # tokens until their mass reaches typical_p.  Clamped to [0, 1];
+        # the most-typical token always survives, so the support can
+        # never go empty (device op clamps identically)
+        self.typical_p = min(1.0, max(0.0, typical_p))
         self.frequency_penalty = frequency_penalty
         self.presence_penalty = presence_penalty
         self.repetition_penalty = repetition_penalty
@@ -121,7 +127,27 @@ class RequestSampler:
         if self.min_p > 0.0:
             mp = probs >= self.min_p * probs.max()
             keep = mp if keep is None else keep & mp
+        if self.typical_p < 1.0:
+            # locally-typical filter on the SAME pre-filter probs: rank
+            # tokens by |surprisal - entropy| ascending and keep until
+            # their cumulative mass reaches typical_p (the most-typical
+            # token always survives — cutoff is at least 1)
+            surp = -np.log(np.where(probs > 0, probs, 1.0))
+            ent = np.float32((probs * surp).sum())
+            dev = np.where(probs > 0, np.abs(surp - ent), np.inf)
+            dorder = np.argsort(dev, kind="stable")
+            csum = np.cumsum(probs[dorder])
+            cutoff = max(1, int(np.searchsorted(csum, self.typical_p) + 1))
+            tk = np.zeros_like(probs, dtype=bool)
+            tk[dorder[:cutoff]] = True
+            keep = tk if keep is None else keep & tk
         if keep is not None:
+            # the max-probability token survives every filter
+            # combination: top-p/min-p keep it by construction, but the
+            # typical filter may not — forcing it means an intersection
+            # of filters can never empty the support (the device op
+            # forces the same token)
+            keep[int(np.argmax(probs))] = True
             probs = np.where(keep, probs, 0.0)
             probs = probs / probs.sum()
         return probs
@@ -183,6 +209,7 @@ class SamplingParamsBatch:
     top_k: np.ndarray         # [S] int32
     top_p: np.ndarray         # [S] f32
     min_p: np.ndarray         # [S] f32 (0 = filter disabled)
+    typical_p: np.ndarray     # [S] f32 (1 = filter disabled)
     freq_pen: np.ndarray      # [S] f32
     pres_pen: np.ndarray      # [S] f32
     rep_pen: np.ndarray       # [S] f32
@@ -224,6 +251,7 @@ class SamplingParamsBatch:
             top_k=np.zeros(s_count, np.int32),
             top_p=np.ones(s_count, np.float32),
             min_p=np.zeros(s_count, np.float32),
+            typical_p=np.ones(s_count, np.float32),
             freq_pen=np.zeros(s_count, np.float32),
             pres_pen=np.zeros(s_count, np.float32),
             rep_pen=np.ones(s_count, np.float32),
@@ -241,6 +269,7 @@ class SamplingParamsBatch:
             out.top_k[s] = sampler.top_k
             out.top_p[s] = sampler.top_p
             out.min_p[s] = getattr(sampler, "min_p", 0.0)
+            out.typical_p[s] = getattr(sampler, "typical_p", 1.0)
             out.freq_pen[s] = sampler.frequency_penalty
             out.pres_pen[s] = sampler.presence_penalty
             out.rep_pen[s] = sampler.repetition_penalty

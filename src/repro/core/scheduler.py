@@ -157,6 +157,17 @@ class Scheduler:
     #: stream of cheap cache-hit arrivals
     AGING_PLANS = 64
 
+    # lint (repro.analysis pass 1): the scheduler is lock-free — all
+    # mutable planning state is confined to the engine loop thread, and
+    # only the declared ``_CROSS_THREAD`` entry points may be called
+    # from other threads (len()/counter reads + ``waiting`` appends).
+    # ``waiting`` is excluded from confinement on purpose: it is a
+    # thread-safe deque shared with submitter threads by design.
+    _THREAD_CONFINED = ("running", "free_slots", "_admit_seq",
+                        "_admitted_at", "_group_of", "_outranked",
+                        "n_plans", "n_admitted", "n_preemptions")
+    _CROSS_THREAD = ("enqueue", "stats")
+
     def __init__(self, *, max_slots: int, max_context: int,
                  page_manager: Optional[PageManager] = None):
         self.max_slots = max_slots

@@ -44,6 +44,17 @@ class WorkerCrashed(RuntimeError):
     'this replica is gone, restart it' from 'this request was bad'."""
 
 
+#: typed errors that roundtrip the JSON boundary: ``_run_completion``
+#: stamps ``etype = type(e).__name__`` on error messages and the
+#: frontend re-raises through this registry, so a router catching the
+#: re-raised exception sees the ORIGINAL type.  Keys must equal the
+#: class __name__ (checked by repro.analysis.protocol).
+_ETYPES = {
+    "EngineCrashed": EngineCrashed,
+    "WorkerCrashed": WorkerCrashed,
+}
+
+
 class _MessagePort:
     """A pair of JSON-string queues (the postMessage analogue)."""
 
@@ -61,7 +72,9 @@ class BackendWorker:
         self.engine = engine or MLCEngine()
         self.replica_id = replica_id        # pool slot name (router mode)
         self._rids: Dict[str, str] = {}     # message id -> engine request id
-        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread = threading.Thread(
+            target=self._serve, daemon=True,
+            name=f"repro-worker-serve[{replica_id or 'solo'}]")
         self._thread.start()
 
     def alive(self) -> bool:
@@ -95,7 +108,8 @@ class BackendWorker:
                 self._rids[msg["id"]] = api.new_request_id()
                 threading.Thread(
                     target=self._run_completion, args=(msg,),
-                    daemon=True).start()
+                    daemon=True,
+                    name=f"repro-completion[{msg['id'][:8]}]").start()
             elif kind == "abort":
                 # the frontend closed its stream iterator ("stop
                 # generating") or called abort(request_id) on a blocking
@@ -154,6 +168,11 @@ class BackendWorker:
 class ServiceWorkerMLCEngine:
     """Frontend handle: endpoint-like API, JSON-only transport."""
 
+    #: lock discipline (checked by repro.analysis.locks): the pending
+    #: reply-queue map and the sticky crash reason are shared between
+    #: caller threads, the rx dispatch thread, and supervisors
+    _GUARDED_BY = {"_lock": ("_pending", "_crashed")}
+
     def __init__(self, backend_engine: Optional[MLCEngine] = None,
                  replica_id: Optional[str] = None):
         self.replica_id = replica_id
@@ -163,22 +182,32 @@ class ServiceWorkerMLCEngine:
         self._pending: Dict[str, "queue.Queue[dict]"] = {}
         self._crashed: Optional[str] = None      # reason, once dead
         self._lock = threading.Lock()
-        self._rx = threading.Thread(target=self._dispatch, daemon=True)
+        self._rx = threading.Thread(
+            target=self._dispatch, daemon=True,
+            name=f"repro-frontend-rx[{replica_id or 'solo'}]")
         self._rx.start()
 
     # the backend engine object is NOT reachable through this API --------
     def _dispatch(self):
-        while True:
-            raw = self.port.to_client.get()
-            msg = json.loads(raw)
-            if msg.get("kind") == "crash":       # broadcast, no id
-                self.kill_pending(msg.get("message", "worker crashed"))
-                continue
-            mid = msg.get("id")
-            with self._lock:
-                q = self._pending.get(mid)
-            if q is not None:
-                q.put(msg)
+        try:
+            while True:
+                raw = self.port.to_client.get()
+                msg = json.loads(raw)
+                if msg.get("kind") == "crash":       # broadcast, no id
+                    self.kill_pending(msg.get("message", "worker crashed"))
+                    continue
+                mid = msg.get("id")
+                with self._lock:
+                    q = self._pending.get(mid)
+                if q is not None:
+                    q.put(msg)
+        except BaseException as e:
+            # the rx thread dying (malformed port payload, broken queue)
+            # would otherwise strand every pending call until its 600 s
+            # timeout — the serve thread is still alive, so the liveness
+            # poll in _get never fires.  Convert it to the same typed
+            # prompt failure a worker crash gets.
+            self.kill_pending(f"frontend rx thread crashed: {e!r}")
 
     def _send(self, obj: dict):
         self.port.to_worker.put(json.dumps(obj))
@@ -196,6 +225,12 @@ class ServiceWorkerMLCEngine:
         for q in qs:
             q.put({"kind": "crash", "message": reason})
 
+    def _crash_reason(self) -> Optional[str]:
+        """The sticky crash reason, read under the lock (``_crashed`` is
+        written by the rx thread and supervisors)."""
+        with self._lock:
+            return self._crashed
+
     def _get(self, q: "queue.Queue[dict]", mid: str, what: str,
              timeout: float = 600.0) -> dict:
         """Frontend-side wait.  The default window is longer than the
@@ -208,8 +243,9 @@ class ServiceWorkerMLCEngine:
         never a bare queue.Empty after 600 s."""
         deadline = time.monotonic() + timeout
         while True:
-            if self._crashed is not None:
-                raise WorkerCrashed(self._crashed)
+            reason = self._crash_reason()
+            if reason is not None:
+                raise WorkerCrashed(reason)
             try:
                 msg = q.get(timeout=0.2)
             except queue.Empty:
@@ -230,9 +266,11 @@ class ServiceWorkerMLCEngine:
     @staticmethod
     def _raise_error(msg: dict):
         """Re-raise a boundary error with its original type when it is
-        one of the typed crash errors (``etype`` rides the JSON)."""
-        if msg.get("etype") == "EngineCrashed":
-            raise EngineCrashed(msg["message"])
+        one of the typed crash errors (``etype`` rides the JSON; the
+        ``_ETYPES`` registry is the set of types that roundtrip)."""
+        cls = _ETYPES.get(msg.get("etype"))
+        if cls is not None:
+            raise cls(msg["message"])
         raise RuntimeError(msg["message"])
 
     def chat_completions_create(
@@ -246,8 +284,9 @@ class ServiceWorkerMLCEngine:
         """
         if isinstance(request, api.ChatCompletionRequest):
             request = request.to_dict()
-        if self._crashed is not None:
-            raise WorkerCrashed(self._crashed)
+        reason = self._crash_reason()
+        if reason is not None:
+            raise WorkerCrashed(reason)
         mid = request_id or uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()
         with self._lock:
@@ -264,6 +303,10 @@ class ServiceWorkerMLCEngine:
             if msg["kind"] == "error":
                 # no trailing "done" follows an error — just surface it
                 self._raise_error(msg)
+            if msg["kind"] != "response":
+                raise RuntimeError(
+                    f"protocol violation: expected a \"response\" "
+                    f"message, got kind {msg['kind']!r}")
             done = self._get(q, mid, "done marker")
             assert done["kind"] == "done"
             return api.ChatCompletionResponse.from_dict(msg["data"])
@@ -282,6 +325,10 @@ class ServiceWorkerMLCEngine:
                 if msg["kind"] == "error":
                     done = True
                     self._raise_error(msg)
+                if msg["kind"] != "chunk":
+                    raise RuntimeError(
+                        f"protocol violation: expected a \"chunk\" "
+                        f"message, got kind {msg['kind']!r}")
                 yield api.ChatCompletionChunk.from_dict(msg["data"])
         finally:
             # closing the iterator mid-stream aborts the backend request
@@ -305,8 +352,9 @@ class ServiceWorkerMLCEngine:
         ``timeout`` bounds the wait — supervisors use a short one as the
         liveness heartbeat (a healthy serve thread answers stats in
         microseconds; a dead one raises within the window)."""
-        if self._crashed is not None:
-            raise WorkerCrashed(self._crashed)
+        reason = self._crash_reason()
+        if reason is not None:
+            raise WorkerCrashed(reason)
         mid = uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()
         with self._lock:
@@ -316,6 +364,10 @@ class ServiceWorkerMLCEngine:
             msg = self._get(q, mid, "stats", timeout=timeout)
             if msg["kind"] == "error":
                 raise RuntimeError(msg["message"])
+            if msg["kind"] != "stats":
+                raise RuntimeError(
+                    f"protocol violation: expected a \"stats\" reply, "
+                    f"got kind {msg['kind']!r}")
             return msg["data"]
         finally:
             self._drop(mid)
@@ -323,7 +375,7 @@ class ServiceWorkerMLCEngine:
     def ping(self, timeout: float = 2.0) -> bool:
         """Round-trip liveness probe over the port (heartbeat message).
         True iff the serve thread answered within ``timeout``."""
-        if self._crashed is not None:
+        if self._crash_reason() is not None:
             return False
         mid = uuid.uuid4().hex
         q: "queue.Queue[dict]" = queue.Queue()

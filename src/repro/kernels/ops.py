@@ -64,19 +64,20 @@ def paged_ragged_attention(q, k_pages, v_pages, page_tables, contexts,
                                              "all_greedy",
                                              "need_logprobs"))
 def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
-                   min_p, freq_pen, pres_pen, rep_pen, bias, counts,
-                   mask_bits, *, n_top: int = 0, use_planes: bool = True,
-                   all_greedy: bool = False, need_logprobs: bool = True):
+                   min_p, typical_p, freq_pen, pres_pen, rep_pen, bias,
+                   counts, mask_bits, *, n_top: int = 0,
+                   use_planes: bool = True, all_greedy: bool = False,
+                   need_logprobs: bool = True):
     """One fused logits→token sampling op over ``[S, V]`` rows (bias,
-    penalties, grammar bitmask, temperature/top-k/top-p/min-p,
+    penalties, grammar bitmask, temperature/top-k/top-p/min-p/typical-p,
     counter-based Gumbel-max draw, optional top-``n_top`` logprobs
     gather).  The engine path chains the same function INSIDE the fused
     ragged step jit (``PagedModelRunner.run_step``) so sampling adds no
     dispatch; this standalone wrapper serves tests and benchmarks.  Jit
     variants are keyed by ``(S, V, n_top)`` — callers bucket S."""
     return _batched_sample(logits, seeds, counters, temperature, top_k,
-                           top_p, min_p, freq_pen, pres_pen, rep_pen,
-                           bias, counts, mask_bits, n_top=n_top,
+                           top_p, min_p, typical_p, freq_pen, pres_pen,
+                           rep_pen, bias, counts, mask_bits, n_top=n_top,
                            use_planes=use_planes, all_greedy=all_greedy,
                            need_logprobs=need_logprobs)
 

@@ -134,13 +134,14 @@ def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
 
 
 def batched_sample_ref(logits, seeds, counters, temperature, top_k,
-                       top_p, min_p, freq_pen, pres_pen, rep_pen, bias,
-                       counts, mask_bits, *, n_top: int = 0):
+                       top_p, min_p, typical_p, freq_pen, pres_pen,
+                       rep_pen, bias, counts, mask_bits, *,
+                       n_top: int = 0):
     """Row-at-a-time oracle for ``kernels.sampling.batched_sample``.
 
     Mirrors the host ``RequestSampler`` pipeline order (bias →
     frequency/presence/repetition penalties → grammar mask →
-    temperature → top-k → top-p/min-p) one row at a time with no
+    temperature → top-k → top-p/min-p/typical-p) one row at a time with no
     batched tricks, then draws the same counter-based Gumbel noise —
     the batched op must match token-for-token.
     """
@@ -173,7 +174,9 @@ def batched_sample_ref(logits, seeds, counters, temperature, top_k,
             kth = np.sort(z)[::-1][min(k, V) - 1]
             z = np.where(z < kth, FILTERED, z)
         tp, mp = float(top_p[s]), float(min_p[s])
-        if tp < 1.0 or mp > 0.0:      # top_p >= 1 / min_p <= 0: disabled
+        ty = float(typical_p[s])
+        # top_p >= 1 / min_p <= 0 / typical_p >= 1: filters disabled
+        if tp < 1.0 or mp > 0.0 or ty < 1.0:
             e = np.exp(z - z.max())
             p = e / e.sum()
             keep = np.ones(V, bool)
@@ -185,6 +188,16 @@ def batched_sample_ref(logits, seeds, counters, temperature, top_k,
                 keep[order] = keep_sorted
             if mp > 0.0:              # min-p on the same pre-filter probs
                 keep &= p >= mp * p.max()
+            if ty < 1.0:              # typical-p, deviation-ascending
+                surp = -np.log(np.where(p > 0, p, 1.0))
+                ent = np.float32((p * surp).sum())
+                dev = np.where(p > 0, np.abs(surp - ent), np.inf)
+                dorder = np.argsort(dev, kind="stable")
+                tkeep_sorted = (np.cumsum(p[dorder]) - p[dorder]) < ty
+                tkeep_sorted[0] = True    # most-typical token survives
+                tk = np.zeros(V, bool)
+                tk[dorder] = tkeep_sorted
+                keep &= tk
             keep[int(np.argmax(p))] = True  # host keeps >= 1 token (top-1)
             z = np.where(keep, z, FILTERED)
         key = jax.random.fold_in(jax.random.PRNGKey(int(seeds[s])),

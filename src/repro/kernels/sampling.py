@@ -79,17 +79,20 @@ def _penalized(logits, bias, counts, freq_pen, pres_pen, rep_pen,
 
 
 def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
-                   min_p, freq_pen, pres_pen, rep_pen, bias, counts,
-                   mask_bits, *, n_top: int = 0, use_planes: bool = True,
-                   all_greedy: bool = False, need_logprobs: bool = True):
+                   min_p, typical_p, freq_pen, pres_pen, rep_pen, bias,
+                   counts, mask_bits, *, n_top: int = 0,
+                   use_planes: bool = True, all_greedy: bool = False,
+                   need_logprobs: bool = True):
     """Sample one token per row of ``logits [S, V]`` in a single device
     op.
 
     Per-row params (all ``[S]``): ``seeds``/``counters`` drive the
     counter-based PRNG; ``temperature == 0`` is exact argmax; ``top_k ==
-    0`` / ``top_p >= 1`` / ``min_p <= 0`` disable those filters (min-p
-    drops tokens whose probability under the post-top-k softmax is below
-    ``min_p * max(p)`` — the top token always survives).
+    0`` / ``top_p >= 1`` / ``min_p <= 0`` / ``typical_p >= 1`` disable
+    those filters (min-p drops tokens whose probability under the
+    post-top-k softmax is below ``min_p * max(p)``; typical-p keeps the
+    lowest ``|surprisal - entropy|`` tokens until their cumulative mass
+    reaches ``typical_p`` — the top token always survives).
     ``bias``/``counts`` are
     dense ``[S, V]`` (logit bias and generated-token counts for the
     frequency/presence/repetition penalties); ``mask_bits`` is the
@@ -147,12 +150,32 @@ def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
         # disables the filter
         keep_sorted = keep_sorted & (
             (sp >= min_p[:, None] * sp[:, :1]) | (min_p <= 0.0)[:, None])
-        # the host keeps AT LEAST the top token (max(1, cutoff)): a
-        # degenerate row (top_p <= 0, min_p > 1) must degrade to top-1,
-        # not filter everything
-        keep_sorted = keep_sorted.at[:, 0].set(True)
         inv = jnp.argsort(order, axis=-1, stable=True)
         keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+
+        # typical-p (locally typical sampling) on the SAME pre-filter
+        # probs: rank tokens by |surprisal − entropy| ascending and keep
+        # until their cumulative mass reaches typical_p (same
+        # searchsorted-left + 1 rule as top-p, in deviation order);
+        # typical_p >= 1 disables, and the most-typical token always
+        # survives its own filter (the host cutoff is max(1, ...))
+        surp = -jnp.log(jnp.where(p > 0, p, 1.0))
+        ent = jnp.sum(p * surp, axis=-1, keepdims=True)
+        dev = jnp.where(p > 0, jnp.abs(surp - ent), jnp.inf)
+        dorder = jnp.argsort(dev, axis=-1, stable=True)
+        dp = jnp.take_along_axis(p, dorder, axis=-1)
+        tkeep_sorted = ((jnp.cumsum(dp, axis=-1) - dp)
+                        < typical_p[:, None]) | (typical_p >= 1.0)[:, None]
+        tkeep_sorted = tkeep_sorted.at[:, 0].set(True)
+        dinv = jnp.argsort(dorder, axis=-1, stable=True)
+        keep = keep & jnp.take_along_axis(tkeep_sorted, dinv, axis=-1)
+
+        # the host keeps AT LEAST the max-probability token: top-p/min-p
+        # keep it by construction (max(1, cutoff)), the typical filter
+        # may not — a degenerate combination must degrade to top-1, not
+        # filter everything
+        top1 = jnp.argmax(p, axis=-1)
+        keep = keep.at[jnp.arange(S), top1].set(True)
         z = jnp.where(keep, z, FILTERED)
 
         # counter-based per-row keys: deterministic for a (seed,

@@ -1,0 +1,40 @@
+"""Lint corpus: use-after-donate of ``jax.jit(..., donate_argnums=...)``
+buffers.  Never imported — jax never actually runs here.
+"""
+from functools import partial
+
+import jax
+
+
+class Runner:
+    def __init__(self, fn):
+        self._step = jax.jit(fn, donate_argnums=(1, 2))
+
+    def good(self, tokens):
+        logits, self.k, self.v = self._step(tokens, self.k, self.v)
+        return logits                  # ok: rebound in the same statement
+
+    def bad_no_rebind(self, tokens):
+        # FINDING x2: self.k and self.v donated, result not rebound
+        logits = self._step(tokens, self.k, self.v)
+        return logits
+
+    def bad_alias(self, tokens):
+        kp = self.k
+        logits, self.k, self.v = self._step(tokens, self.k, self.v)
+        return kp.sum()                # FINDING: alias of the OLD buffer
+
+    def bad_params(self, tokens):
+        # FINDING: model weights in a donated position
+        out, _, self.v = self._step(tokens, self.params, self.v)
+        return out
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def fused_update(acc, delta):
+    return acc + delta
+
+
+def caller(state):
+    out = fused_update(state, 1)       # FINDING: state donated, no rebind
+    return out

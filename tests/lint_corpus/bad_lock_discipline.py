@@ -1,0 +1,38 @@
+"""Lint corpus: lock-discipline + assumes-held violations.
+
+Never imported — parsed by ``repro.analysis`` in the self-test
+(``tests/test_lint.py``), which asserts the exact finding set.
+"""
+import threading
+
+
+class Account:
+    _GUARDED_BY = {"_lock": ("balance", "history")}
+    _ASSUMES_HELD = {"_lock": ("_apply",)}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.balance = 0
+        self.history = []
+
+    def deposit(self, n):
+        with self._lock:
+            self.balance += n          # ok: guarded
+            self._apply(n)             # ok: lock held at the call
+
+    def peek(self):
+        return self.balance            # FINDING: read without the lock
+
+    def reset(self):
+        self.balance = 0               # FINDING: write without the lock
+        with self._lock:
+            self.history.append("reset")
+
+    def replay(self):
+        self._apply(1)                 # FINDING: assumes-held, no lock
+
+    def audited(self):
+        return self.balance            # lint: ignore[lock-discipline]
+
+    def _apply(self, n):
+        self.history.append(n)         # ok: declared assumes-held

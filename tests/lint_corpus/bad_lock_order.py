@@ -1,0 +1,42 @@
+"""Lint corpus: lock-hierarchy violations against the declared order
+``RouterEngine._lock -> ServiceWorkerMLCEngine._lock -> MLCEngine._lock``.
+
+The class names intentionally reuse the serving-core names so the
+default :data:`repro.analysis.hierarchy` configuration applies.
+"""
+import threading
+
+
+class RouterEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.engine = None
+
+    def poke(self):
+        with self._lock:
+            pass
+
+    def relock(self):
+        with self._lock:
+            with self._lock:           # FINDING: re-acquire, self-deadlock
+                pass
+
+
+class MLCEngine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.router = None
+
+    def inverted(self):
+        with self._lock:
+            # FINDING: transitively acquires RouterEngine._lock (an
+            # OUTER lock) while holding MLCEngine._lock (an inner one)
+            self.router.poke()
+
+    def reenter(self):
+        with self._lock:
+            self.helper()              # FINDING: may re-acquire our lock
+
+    def helper(self):
+        with self._lock:
+            pass

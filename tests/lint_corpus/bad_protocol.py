@@ -1,0 +1,52 @@
+"""Lint corpus: JSON-boundary kind/etype drift.
+
+Class names reuse the serving-core names so the default
+:class:`repro.analysis.protocol.ProtocolConfig` side mapping applies.
+"""
+
+
+class OopsError(RuntimeError):
+    pass
+
+
+class StaleError(RuntimeError):
+    pass
+
+
+# FINDING: "StaleError" maps to OopsError — type(e).__name__ roundtrip
+# through the registry would resolve the wrong class
+_ETYPES = {"OopsError": OopsError, "StaleError": OopsError}
+
+
+class BackendWorker:
+    def _post(self, msg):
+        self.port.to_client(msg)
+
+    def serve(self, msg):
+        kind = msg["kind"]
+        if kind == "ping":
+            self._post({"kind": "pong", "id": msg["id"]})
+        elif kind == "work":           # FINDING: client never sends "work"
+            self._post({"kind": "result", "id": msg["id"]})
+            # FINDING: "surprise" has no client handler branch
+            self._post({"kind": "surprise", "id": msg["id"]})
+
+
+class ServiceWorkerMLCEngine:
+    def _send(self, msg):
+        self.port.to_worker(msg)
+
+    def ping(self):
+        self._send({"kind": "ping", "id": "x"})
+
+    def _dispatch(self, msg):
+        if msg["kind"] == "pong":
+            return True
+        if msg["kind"] == "result":
+            return msg
+        if msg["kind"] == "legacy":    # FINDING: worker never emits it
+            return None
+        # FINDING x2: "MissingError" names no top-level class, and no
+        # emitted message literal ever carries an "etype" key at all
+        if msg.get("etype") == "MissingError":
+            raise RuntimeError(msg)

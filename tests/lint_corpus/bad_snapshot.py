@@ -1,0 +1,32 @@
+"""Lint corpus: thread-confinement violations — a lock-free class whose
+cross-thread probes mutate or iterate engine-loop-confined state."""
+
+
+class Tracker:
+    _THREAD_CONFINED = ("items", "index")
+    _CROSS_THREAD = ("stats", "snapshot_ok")
+
+    def __init__(self):
+        self.items = []
+        self.index = {}
+        self.count = 0
+
+    def record(self, x):
+        # ok: not a cross-thread method — runs on the owning thread
+        self.items.append(x)
+        self.index[x] = len(self.items)
+
+    def stats(self):
+        total = 0
+        for it in self.items:          # FINDING: unsnapshotted iteration
+            total += 1
+        self.index["last"] = total     # FINDING: cross-thread mutation
+        self.items.append(total)       # FINDING: cross-thread mutation
+        self._rebuild()                # FINDING: callee not declared safe
+        return total
+
+    def snapshot_ok(self):
+        return [x for x in list(self.items)]   # ok: snapshot first
+
+    def _rebuild(self):
+        self.index.clear()

@@ -1,0 +1,33 @@
+"""Lint corpus: thread naming / lifetime / crash-signal hygiene."""
+import threading
+
+
+def _serve_forever():
+    try:
+        while True:
+            try:
+                step()
+            except Exception:
+                pass                   # FINDING: swallowed, no re-signal
+    except BaseException:
+        crash("serve loop died")       # ok: top-level guard re-signals
+
+
+def _fragile_target():
+    step()                             # FINDING: no top-level broad except
+
+
+def spawn_all():
+    # FINDING: unnamed (daemon=True keeps its lifetime legal)
+    threading.Thread(target=_serve_forever, daemon=True).start()
+    # FINDING: named, but neither daemon nor joined anywhere
+    t = threading.Thread(target=_fragile_target, name="corpus-fragile")
+    t.start()
+
+
+def step():
+    pass
+
+
+def crash(msg):
+    raise SystemExit(msg)

@@ -40,9 +40,9 @@ def _device(batch: SamplingParamsBatch, logits: np.ndarray, n_top=0):
     out = batched_sample(
         logits[batch.parent].astype(np.float32), batch.seeds,
         batch.counters, batch.temperature, batch.top_k, batch.top_p,
-        batch.min_p, batch.freq_pen, batch.pres_pen, batch.rep_pen,
-        batch.bias, batch.counts, batch.mask_bits, n_top=n_top,
-        use_planes=batch.use_planes)
+        batch.min_p, batch.typical_p, batch.freq_pen, batch.pres_pen,
+        batch.rep_pen, batch.bias, batch.counts, batch.mask_bits,
+        n_top=n_top, use_planes=batch.use_planes)
     return tuple(np.asarray(x) for x in out)
 
 
@@ -52,6 +52,8 @@ def _sampler(rng, *, temperature) -> RequestSampler:
         top_k=int(rng.integers(0, V + 1)),
         top_p=float(rng.uniform(0.05, 1.0)) if rng.random() < 0.7 else 1.0,
         min_p=float(rng.uniform(0.0, 0.5)) if rng.random() < 0.5 else 0.0,
+        typical_p=(float(rng.uniform(0.2, 1.0))
+                   if rng.random() < 0.5 else 1.0),
         frequency_penalty=float(rng.uniform(0, 1.5)),
         presence_penalty=float(rng.uniform(0, 1.5)),
         repetition_penalty=float(rng.choice([1.0, 0.7, 1.8])),
@@ -103,8 +105,8 @@ def test_stochastic_support_and_ref_equivalence(data_seed):
     rtok, rlp, rtids, rtlps = ref.batched_sample_ref(
         logits[batch.parent], batch.seeds, batch.counters,
         batch.temperature, batch.top_k, batch.top_p, batch.min_p,
-        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
-        batch.counts, batch.mask_bits, n_top=4)
+        batch.typical_p, batch.freq_pen, batch.pres_pen, batch.rep_pen,
+        batch.bias, batch.counts, batch.mask_bits, n_top=4)
     assert np.array_equal(tokens, rtok)
     np.testing.assert_allclose(lp, rlp, atol=1e-5)
     np.testing.assert_allclose(top_lps, rtlps, atol=1e-5)
@@ -175,7 +177,8 @@ def test_planeless_batch_matches_dense_planes():
     lean, _, _, _ = _device(batch, logits)
     dense = np.asarray(batched_sample(
         logits, batch.seeds, batch.counters, batch.temperature,
-        batch.top_k, batch.top_p, batch.min_p, batch.freq_pen,
+        batch.top_k, batch.top_p, batch.min_p, batch.typical_p,
+        batch.freq_pen,
         batch.pres_pen, batch.rep_pen, np.zeros((S, V), np.float32),
         np.zeros((S, V), np.float32), batch.mask_bits,
         use_planes=True)[0])
@@ -304,12 +307,109 @@ def test_min_p_composes_with_top_p_and_grammar_mask():
     rtok, rlp, _, _ = ref.batched_sample_ref(
         logits[batch.parent], batch.seeds, batch.counters,
         batch.temperature, batch.top_k, batch.top_p, batch.min_p,
-        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
-        batch.counts, batch.mask_bits)
+        batch.typical_p, batch.freq_pen, batch.pres_pen, batch.rep_pen,
+        batch.bias, batch.counts, batch.mask_bits)
     assert np.array_equal(tokens, rtok)
     for i in range(S):
         assert mask[int(tokens[i])], i
         assert samplers[i].dist(logits[i], mask)[int(tokens[i])] > 0, i
+
+
+def test_typical_p_one_is_noop():
+    """typical_p=1.0 (the default) disables the filter exactly: same
+    host dist, same device draws as a sampler that never heard of it."""
+    rng = np.random.default_rng(17)
+    logits = (rng.standard_normal((S, V)) * 3).astype(np.float32)
+    mk = lambda tp: [RequestSampler(temperature=0.9, top_p=0.9,  # noqa: E731
+                                    typical_p=tp, seed=i) for i in range(S)]
+    on, off = mk(1.0), mk(1.0)
+    np.testing.assert_array_equal(on[0].dist(logits[0]),
+                                  RequestSampler(temperature=0.9,
+                                                 top_p=0.9,
+                                                 seed=0).dist(logits[0]))
+    b1 = SamplingParamsBatch.build([(i, on[i], None)
+                                    for i in range(S)], V)
+    b2 = SamplingParamsBatch.build([(i, off[i], None)
+                                    for i in range(S)], V)
+    t1, _, _, _ = _device(b1, logits)
+    t2, _, _, _ = _device(b2, logits)
+    assert np.array_equal(t1, t2)
+    # out-of-range request values clamp instead of misbehaving
+    assert RequestSampler(temperature=1.0, typical_p=7.5).typical_p == 1.0
+    assert RequestSampler(temperature=1.0, typical_p=-3.0).typical_p == 0.0
+
+
+def test_typical_p_filters_atypical_tail():
+    """probs ~ (0.735, 0.245, 0.020): deviation order is 0, 1, 2, so
+    typical_p=0.9 keeps {0, 1} and drops the surprising tail — host
+    dist and device support agree."""
+    logits = np.full((1, V), -40.0, np.float32)
+    logits[0, :3] = np.array([2.0, 0.9, -1.6], np.float32)
+    s = RequestSampler(temperature=1.0, typical_p=0.9, seed=19)
+    dist = s.dist(logits[0])
+    assert set(np.flatnonzero(dist)) == {0, 1}
+    n = 256
+    batch = SamplingParamsBatch.build([(0, s, None)] * n, V)
+    batch.counters[:] = np.arange(n)
+    tokens, _, _, _ = _device(batch, logits)
+    assert set(int(t) for t in tokens) == {0, 1}   # both actually drawn
+
+
+def test_typical_p_excluding_mode_still_keeps_top1():
+    """probs ~ (0.4, 0.1 x 6): the six tail tokens are MORE typical
+    than the mode (devs 0.55 vs 0.83), so typical_p=0.5 keeps five of
+    them and would drop the mode — the forced top-1 keeps it, and
+    device ≡ ref token-for-token on the composed support."""
+    logits = np.full((1, V), -40.0, np.float32)
+    logits[0, 0] = float(np.log(4.0))
+    logits[0, 1:7] = 0.0
+    s = RequestSampler(temperature=1.0, typical_p=0.5, seed=23)
+    dist = s.dist(logits[0])
+    # deviation-ascending cumulative mass crosses 0.5 at the fifth tail
+    # token; the mode (token 0) rides in on the top-1 guarantee
+    assert set(np.flatnonzero(dist)) == {0, 1, 2, 3, 4, 5}
+    n = 256
+    batch = SamplingParamsBatch.build([(0, s, None)] * n, V)
+    batch.counters[:] = np.arange(n)
+    tokens, _, _, _ = _device(batch, logits)
+    rtok, _, _, _ = ref.batched_sample_ref(
+        np.tile(logits, (n, 1)), batch.seeds, batch.counters,
+        batch.temperature, batch.top_k, batch.top_p, batch.min_p,
+        batch.typical_p, batch.freq_pen, batch.pres_pen, batch.rep_pen,
+        batch.bias, batch.counts, batch.mask_bits)
+    assert np.array_equal(tokens, rtok)
+    assert set(int(t) for t in tokens) <= {0, 1, 2, 3, 4, 5}
+
+
+def test_typical_p_plumbs_request_to_batch():
+    """The API field flows through RequestSampler into the packed
+    device batch; the default stays 'disabled'."""
+    from repro.core import api
+    req = api.ChatCompletionRequest(messages=[], typical_p=0.7)
+    assert req.typical_p == 0.7
+    s = RequestSampler(temperature=1.0, typical_p=0.7, seed=0)
+    batch = SamplingParamsBatch.build([(0, s, None)], V)
+    assert batch.typical_p[0] == np.float32(0.7)
+    assert SamplingParamsBatch.build(
+        [(0, RequestSampler(seed=0), None)], V).typical_p[0] == 1.0
+
+
+def test_typical_p_end_to_end_engine():
+    """A typical_p request runs the whole fused paged path (engine →
+    SamplingParamsBatch → on-device filter) and generates."""
+    from repro.configs import get_config
+    from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+    eng = MLCEngine()
+    eng.load_model("m", get_config("llama-3.1-8b", reduced=True),
+                   max_slots=2, max_context=96, seed=0,
+                   backend="paged", page_size=8)
+    try:
+        resp = eng.chat_completions_create(ChatCompletionRequest(
+            messages=[ChatMessage("user", "hi")], model="m",
+            max_tokens=4, temperature=0.9, typical_p=0.85, seed=1))
+        assert resp.choices[0].message.content
+    finally:
+        eng.shutdown()
 
 
 def test_grammar_mask_respected_even_when_allowed_underflow():

@@ -1,4 +1,5 @@
 """The roofline HLO analyzer: loop scaling validated against analytics."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -36,10 +37,14 @@ _SCRIPT = textwrap.dedent("""
 
 
 def test_loop_scaled_flops_match_analytic():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # keep the platform pin: without it jax's plugin discovery can hang
+    # probing for accelerators that aren't there
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=env)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout, r.stdout
 

@@ -1,0 +1,171 @@
+"""Tier-1 tests for the static analyzer (``repro.analysis``).
+
+Three contracts:
+
+1. the self-test corpus (``tests/lint_corpus/``) yields EXACTLY its
+   expected finding set — rules fire where seeded, nowhere else, and
+   the ``lint: ignore[...]`` waiver suppresses its line;
+2. the real serving core is clean: zero un-baselined findings, within
+   the <10 s budget;
+3. the gate bites: seeding a corpus bug back into a copy of
+   ``core/router.py`` / ``core/worker.py`` makes the baseline run (the
+   ``scripts/check_tree.sh`` invocation) fail.
+"""
+import json
+import pathlib
+import shutil
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+CORPUS = REPO / "tests" / "lint_corpus"
+
+
+def _run_lint(args, cwd=REPO):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def _report(args, tmp_path):
+    out = tmp_path / "report.json"
+    proc = _run_lint([*args, "--json", str(out)])
+    return proc, json.loads(out.read_text())
+
+
+def test_corpus_exact_findings(tmp_path):
+    """Every corpus file produces exactly its seeded findings."""
+    proc, rep = _report([str(CORPUS)], tmp_path)
+    assert proc.returncode == 1, proc.stderr
+    got = sorted(
+        ({"path": f["path"].split("/")[-1], "line": f["line"],
+          "rule": f["rule"], "scope": f["scope"]}
+         for f in rep["findings"]),
+        key=lambda f: (f["path"], f["line"], f["rule"]))
+    expected = json.loads((CORPUS / "expected.json").read_text())
+    assert got == expected["findings"]
+    assert rep["waived"] == expected["waived"]
+
+
+def test_corpus_covers_every_pass(tmp_path):
+    """The corpus exercises all four passes (lock/donate/proto/thread)."""
+    _, rep = _report([str(CORPUS)], tmp_path)
+    rules = set(rep["counts"])
+    assert {"lock-discipline", "assumes-held", "lock-order"} <= rules
+    assert {"donate-no-rebind", "donate-alias-read",
+            "donate-params"} <= rules
+    assert {"protocol-unhandled", "protocol-stale-handler",
+            "etype-unresolvable", "etype-never-sent"} <= rules
+    assert {"thread-unnamed", "thread-not-daemon-or-joined",
+            "thread-target-unguarded", "silent-except"} <= rules
+    assert {"cross-thread-mutation", "unsnapshotted-iteration",
+            "cross-thread-call"} <= rules
+
+
+def test_serving_core_is_clean(tmp_path):
+    """The shipped tree has zero un-baselined findings, quickly."""
+    proc, rep = _report(["--baseline"], tmp_path)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert rep["findings"] == []
+    assert rep["elapsed_s"] < 10.0
+    # the committed baseline carries no debt: nothing suppressed either
+    assert rep["baseline_suppressed"] == 0
+
+
+def test_check_tree_invokes_lint_gate():
+    """CI wiring: scripts/check_tree.sh runs the baseline lint gate."""
+    text = (REPO / "scripts" / "check_tree.sh").read_text()
+    assert "repro.analysis.lint" in text
+    assert "--baseline" in text
+
+
+def _seeded_tree(tmp_path):
+    """A copy of the analyzed tree (src/repro + docs) to corrupt."""
+    root = tmp_path / "tree"
+    shutil.copytree(REPO / "src" / "repro", root / "src" / "repro")
+    shutil.copytree(REPO / "docs", root / "docs")
+    return root
+
+
+def test_seeded_router_bug_fails_gate(tmp_path):
+    """Re-introducing the monitor's silent-except makes the gate fail."""
+    root = _seeded_tree(tmp_path)
+    target = root / "src" / "repro" / "core" / "router.py"
+    src = target.read_text()
+    needle = ("                for rep in reps:\n"
+              "                    self._beat(rep)")
+    assert needle in src
+    # the corpus bug exactly: a BROAD except swallowing inside the loop
+    target.write_text(src.replace(
+        needle,
+        "                for rep in reps:\n"
+        "                    try:\n"
+        "                        self._beat(rep)\n"
+        "                    except Exception:\n"
+        "                        pass"))
+    proc = _run_lint(["--baseline", "--root", str(root)])
+    assert proc.returncode == 1
+    assert "silent-except" in proc.stdout
+
+
+def test_seeded_worker_bug_fails_gate(tmp_path):
+    """Dropping a protocol handler branch makes the gate fail."""
+    root = _seeded_tree(tmp_path)
+    target = root / "src" / "repro" / "core" / "worker.py"
+    src = target.read_text()
+    # emit a worker->client kind the client has no branch for
+    needle = '"kind": "pong"'
+    assert needle in src
+    target.write_text(src.replace(needle, '"kind": "pongg"'))
+    proc = _run_lint(["--baseline", "--root", str(root)])
+    assert proc.returncode == 1
+    assert "protocol-unhandled" in proc.stdout
+
+
+def test_seeded_unlocked_write_fails_gate(tmp_path):
+    """Moving a guarded write out from under the lock fails the gate."""
+    root = _seeded_tree(tmp_path)
+    target = root / "src" / "repro" / "core" / "router.py"
+    src = target.read_text()
+    needle = ("        with self._lock:\n"
+              "            ent = self._rids.pop(rid, None)")
+    assert needle in src
+    target.write_text(src.replace(
+        needle,
+        "        ent = self._rids.pop(rid, None)\n"
+        "        with self._lock:\n"
+        "            pass"))
+    proc = _run_lint(["--baseline", "--root", str(root)])
+    assert proc.returncode == 1
+    assert "lock-discipline" in proc.stdout
+
+
+def test_docs_drift_fails_gate(tmp_path):
+    """Renaming the threading section heading fails the docs check."""
+    root = _seeded_tree(tmp_path)
+    doc = root / "docs" / "ARCHITECTURE.md"
+    doc.write_text(doc.read_text().replace(
+        "Threading model and lock hierarchy", "Concurrency notes"))
+    proc = _run_lint(["--baseline", "--root", str(root)])
+    assert proc.returncode == 1
+    assert "doc-section-missing" in proc.stdout
+
+
+def test_baseline_suppresses_known_findings(tmp_path):
+    """--baseline hides exactly the recorded keys; new findings fail."""
+    out = tmp_path / "report.json"
+    proc = _run_lint([str(CORPUS), "--json", str(out)])
+    rep = json.loads(out.read_text())
+    keys = [f["key"] for f in rep["findings"]]
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"keys": keys}))
+    proc = _run_lint([str(CORPUS), "--baseline",
+                      "--baseline-file", str(base)])
+    assert proc.returncode == 0, proc.stdout
+    # drop one key: that finding resurfaces and the run fails
+    base.write_text(json.dumps({"keys": keys[1:]}))
+    proc = _run_lint([str(CORPUS), "--baseline",
+                      "--baseline-file", str(base)])
+    assert proc.returncode == 1

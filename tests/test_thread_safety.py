@@ -1,0 +1,262 @@
+"""Concurrency stress for the serving tier, with a runtime lock-order
+recorder cross-checked against the STATIC hierarchy.
+
+``repro.analysis`` enforces the declared acquisition order
+(:data:`repro.analysis.hierarchy.LOCK_ORDER`) by AST analysis; this
+suite asserts the same contract dynamically.  Every ``with self._lock``
+in `RouterEngine` / `ServiceWorkerMLCEngine` / `MLCEngine` is routed
+through a recording lock that tracks a per-thread held stack; the
+scenario drives many concurrent frontends through a 2-replica router
+while one replica is crashed mid-flight and the other is drained; then
+every observed ``(held, acquired)`` pair must be consistent with the
+static order — and no thread may ever re-acquire a held lock (the
+locks are non-reentrant).
+
+Also hosts regressions for the supervision defects the analyzer
+flagged: a crashing monitor thread is recorded in ``stats()`` instead
+of silently ending supervision, and a failing engine factory during
+respawn is counted, not swallowed.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.analysis import hierarchy
+from repro.configs import get_config
+from repro.core import (ChatCompletionRequest, ChatMessage, EngineCrashed,
+                        MLCEngine, RouterEngine, WorkerCrashed)
+from repro.core.router import NoHealthyReplicas
+
+
+class LockOrderRecorder:
+    """Per-thread held-lock stacks; records every (held, acquired)
+    nesting pair actually observed, plus per-lock acquisition counts."""
+
+    def __init__(self):
+        self._tls = threading.local()
+        self._mu = threading.Lock()
+        self.pairs = set()                  # (held_name, acquired_name)
+        self.counts = {}                    # name -> acquisitions
+
+    def _stack(self):
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
+
+    def on_acquire(self, name):
+        stack = self._stack()
+        with self._mu:
+            self.counts[name] = self.counts.get(name, 0) + 1
+            for held in stack:
+                self.pairs.add((held, name))
+        stack.append(name)
+
+    def on_release(self, name):
+        stack = self._stack()
+        assert stack and stack[-1] == name, (stack, name)
+        stack.pop()
+
+    def violations(self):
+        """Pairs inconsistent with the static hierarchy: re-acquisition
+        of a held lock, or nesting against the declared order."""
+        order = hierarchy.LOCK_ORDER
+        bad = []
+        for held, acquired in sorted(self.pairs):
+            if held == acquired:
+                bad.append((held, acquired, "re-acquired while held"))
+            elif (held in order and acquired in order
+                    and order.index(held) > order.index(acquired)):
+                bad.append((held, acquired, "violates declared order"))
+        return bad
+
+
+class _RecordingLock:
+    """Context-manager drop-in for ``threading.Lock`` (the serving core
+    only ever uses ``with self._lock``)."""
+
+    def __init__(self, name, rec):
+        self._name = name
+        self._rec = rec
+        self._inner = threading.Lock()
+
+    def __enter__(self):
+        self._rec.on_acquire(self._name)
+        self._inner.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._inner.release()
+        self._rec.on_release(self._name)
+        return False
+
+
+def _factory():
+    eng = MLCEngine()
+    eng.load_model("m", get_config("llama-3.1-8b", reduced=True),
+                   max_slots=2, max_context=96, seed=0,
+                   backend="paged", page_size=8)
+    return eng
+
+
+def _req(text, **kw):
+    kw.setdefault("messages", [ChatMessage("user", text)])
+    kw.setdefault("model", "m")
+    kw.setdefault("max_tokens", 3)
+    kw.setdefault("seed", 3)
+    kw.setdefault("temperature", 0.9)
+    return ChatCompletionRequest(**kw)
+
+
+def _instrumented_router(rec, **kw):
+    """A RouterEngine whose three lock classes all record into ``rec``.
+    The monitor thread is gated until AFTER the locks are swapped, so
+    no thread can be mid-acquisition on a plain lock during the swap."""
+    gate = threading.Event()
+    orig = RouterEngine._monitor
+
+    def gated(self):
+        gate.wait()
+        orig(self)
+
+    RouterEngine._monitor = gated
+    try:
+        kw.setdefault("replicas", 2)
+        kw.setdefault("heartbeat_s", 0.05)
+        router = RouterEngine(_factory, **kw)
+    finally:
+        RouterEngine._monitor = orig
+    router._lock = _RecordingLock("RouterEngine._lock", rec)
+    for rep in router._replicas:
+        rep.front._lock = _RecordingLock(
+            "ServiceWorkerMLCEngine._lock", rec)
+        rep.backend._lock = _RecordingLock("MLCEngine._lock", rec)
+    gate.set()
+    return router
+
+
+def test_lock_order_under_load_crash_and_drain():
+    rec = LockOrderRecorder()
+    router = _instrumented_router(rec)
+    errors = []
+    ok = []
+
+    def frontend(i):
+        for turn in range(2):
+            try:
+                resp = router.chat_completions_create(
+                    _req(f"conversation {i} turn {turn}", seed=i + 1))
+                ok.append(resp.id)
+            except (WorkerCrashed, EngineCrashed, NoHealthyReplicas):
+                pass                         # expected during the chaos
+            except BaseException as e:       # anything else is a bug
+                errors.append(e)
+
+    threads = [threading.Thread(target=frontend, args=(i,),
+                                name=f"test-frontend-{i}", daemon=True)
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    time.sleep(0.4)                          # load is in flight
+    router._replicas[0].backend.shutdown()   # injected replica crash
+    router.drain(1)                          # concurrent graceful drain
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive()
+    assert not errors, errors
+    assert ok, "no request survived a 2-replica pool losing 1 replica"
+
+    # the pool heals: crash respawn + drain recycle both complete
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        per = router.stats()["per_replica"]
+        if (per[0]["restarts"] == 1 and per[1]["recycles"] == 1
+                and all(p["state"] == "healthy" for p in per)):
+            break
+        time.sleep(0.05)
+    per = router.stats()["per_replica"]
+    assert per[0]["restarts"] == 1 and per[0]["state"] == "healthy"
+    assert per[1]["recycles"] == 1 and per[1]["state"] == "healthy"
+    resp = router.chat_completions_create(_req("after healing", seed=9))
+    assert resp.choices[0].message.content
+
+    # runtime lock behaviour is consistent with the static hierarchy
+    assert rec.violations() == []
+    for name in hierarchy.LOCK_ORDER:
+        assert rec.counts.get(name, 0) > 0, \
+            f"{name} never exercised — instrumentation broken"
+    router.shutdown()
+
+
+def test_monitor_crash_is_recorded_not_silent():
+    """Regression (repro.analysis thread-target-unguarded finding): the
+    monitor loop dying must surface in stats(), not silently end
+    heartbeats/respawns."""
+    orig = RouterEngine._beat
+
+    def exploding(self, rep):
+        raise RuntimeError("injected beat failure")
+
+    RouterEngine._beat = exploding
+    try:
+        router = RouterEngine(_factory, replicas=1, heartbeat_s=0.05)
+        try:
+            deadline = time.time() + 30
+            while time.time() < deadline:
+                if router.stats()["monitor_crashed"] is not None:
+                    break
+                time.sleep(0.05)
+            crashed = router.stats()["monitor_crashed"]
+            assert crashed is not None
+            assert "injected beat failure" in crashed
+        finally:
+            router.shutdown()
+    finally:
+        RouterEngine._beat = orig
+
+
+def test_respawn_factory_failure_is_counted():
+    """Regression (repro.analysis silent-except finding): a failing
+    engine factory during respawn is logged + counted, the slot stays
+    dead, and a later healthy factory still revives it."""
+    fail = threading.Event()
+    made = []
+
+    def factory():
+        if fail.is_set():
+            raise RuntimeError("factory down")
+        made.append(1)
+        return _factory()
+
+    router = RouterEngine(factory, replicas=1, heartbeat_s=0.05)
+    try:
+        fail.set()
+        router._replicas[0].backend.shutdown()   # kill the only replica
+        # crash detection is on-use: the next dispatched request raises
+        # the typed error and declares the slot dead
+        with pytest.raises((EngineCrashed, WorkerCrashed)):
+            router.chat_completions_create(_req("trigger detection"))
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            p = router.stats()["per_replica"][0]
+            if p["spawn_failures"] >= 2:
+                break
+            time.sleep(0.05)
+        p = router.stats()["per_replica"][0]
+        assert p["spawn_failures"] >= 2          # retried, each counted
+        assert p["state"] == "dead"
+        with pytest.raises(NoHealthyReplicas):
+            router.chat_completions_create(_req("while down"))
+        fail.clear()                             # factory heals
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            p = router.stats()["per_replica"][0]
+            if p["state"] == "healthy":
+                break
+            time.sleep(0.05)
+        assert router.stats()["per_replica"][0]["state"] == "healthy"
+        resp = router.chat_completions_create(_req("revived", seed=2))
+        assert resp.choices[0].message.content
+    finally:
+        router.shutdown()

@@ -24,6 +24,25 @@ def test_check_tree():
                    check=True, cwd=ROOT, timeout=300)
 
 
+def test_lint_gate_clean_and_corpus_bites():
+    """The static-analysis gate (part of check_tree) holds both ways:
+    the shipped serving core is clean under the committed baseline, and
+    the analyzer is not trivially silent — pointed at its self-test
+    corpus it reports findings and exits non-zero.  Exact per-line
+    corpus expectations live in tests/test_lint.py."""
+    gate = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--baseline"],
+        cwd=ROOT, env=_env(), timeout=60, capture_output=True, text=True)
+    assert gate.returncode == 0, gate.stdout + gate.stderr
+    corpus = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         str(ROOT / "tests" / "lint_corpus")],
+        cwd=ROOT, env=_env(), timeout=60, capture_output=True, text=True)
+    assert corpus.returncode == 1, corpus.stdout + corpus.stderr
+    assert "findings" in corpus.stderr     # the summary line
+    assert "donate-no-rebind" in corpus.stdout
+
+
 def test_readme_quickstart_executes():
     """The README's first python code block IS the quickstart — run it
     verbatim so the documented example can never rot.  It must print

@@ -110,3 +110,81 @@ def test_supervisor_kill_pending_is_typed_and_sticky():
     with pytest.raises(WorkerCrashed):
         front.stats()
     backend.shutdown()
+
+
+# -- regressions for defects found by repro.analysis ---------------------
+def test_rx_thread_crash_fails_pending_promptly():
+    """Garbage on the worker->client port kills the rx thread; pending
+    calls must fail with a typed WorkerCrashed within a poll tick, not
+    strand until the 600 s frontend timeout (the serve thread is still
+    alive, so the liveness poll alone would never fire)."""
+    import threading
+
+    front, backend = _stack()
+    got = {}
+
+    def call():
+        try:
+            front.chat_completions_create(_req(max_tokens=300),
+                                          request_id="rx-crash-test")
+        except BaseException as e:
+            got["exc"] = e
+
+    t = threading.Thread(target=call, daemon=True)
+    t.start()
+    time.sleep(0.3)                          # request is in flight
+    t0 = time.monotonic()
+    front.port.to_client.put("this is not json {")
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert time.monotonic() - t0 < 10
+    assert isinstance(got["exc"], WorkerCrashed)
+    assert "rx thread crashed" in str(got["exc"])
+    # and the failure is sticky for later calls too
+    with pytest.raises(WorkerCrashed):
+        front.chat_completions_create(_req(max_tokens=2))
+    backend.shutdown()
+
+
+def test_etype_registry_roundtrips_worker_crashed():
+    """Both typed crash errors cross the JSON boundary by name; anything
+    else degrades to RuntimeError."""
+    with pytest.raises(WorkerCrashed):
+        ServiceWorkerMLCEngine._raise_error(
+            {"etype": "WorkerCrashed", "message": "x"})
+    with pytest.raises(EngineCrashed):
+        ServiceWorkerMLCEngine._raise_error(
+            {"etype": "EngineCrashed", "message": "x"})
+    with pytest.raises(RuntimeError) as ei:
+        ServiceWorkerMLCEngine._raise_error(
+            {"etype": "ValueError", "message": "x"})
+    assert type(ei.value) is RuntimeError
+
+
+def test_unexpected_kind_is_a_protocol_error():
+    """A reply whose kind the client does not expect must surface as an
+    explicit protocol-violation error, not be mis-parsed as data."""
+    import json as _json
+    import threading
+
+    front, backend = _stack()
+    got = {}
+
+    def call():
+        try:
+            front.chat_completions_create(_req(max_tokens=300),
+                                          request_id="bogus-kind-test")
+        except BaseException as e:
+            got["exc"] = e
+
+    t = threading.Thread(target=call, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    front.port.to_client.put(_json.dumps(
+        {"kind": "bogus", "id": "bogus-kind-test"}))
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert isinstance(got["exc"], RuntimeError)
+    assert "protocol violation" in str(got["exc"])
+    front.abort("bogus-kind-test")           # free backend slots
+    backend.shutdown()
