@@ -68,7 +68,8 @@ def _latency_rows(smoke: bool) -> list:
     chunk = 4 if smoke else 8
     eng.load_model("m", cfg, max_slots=3, max_context=192,
                    backend="paged", page_size=8,
-                   prefill_chunk_size=chunk, token_budget=3 + chunk)
+                   prefill_chunk_size=chunk, token_budget=3 + chunk,
+                   warmup=True)
     # warmup: compile the fused ragged step buckets
     eng.chat_completions_create(ChatCompletionRequest(
         messages=[ChatMessage("user", "warm up the step functions")],
@@ -130,6 +131,7 @@ def _latency_rows(smoke: bool) -> list:
     calls, steps, sync, logit_rows = dispatch_counters()
     calls, steps = calls - calls0, max(1, steps - steps0)
     sync, logit_rows = sync - sync0, logit_rows - logit_rows0
+    est = eng.stats("m")["engine"]     # pipeline overlap observability
     # standalone timing of the device sampling stage at this workload's
     # shape (it rides INSIDE the fused step jit, so its cost cannot be
     # separated there without adding a sync)
@@ -162,7 +164,71 @@ def _latency_rows(smoke: bool) -> list:
          round(sample_us / 1e3, 3), f"{sample_us/1e3:.3f}ms_device_sample"),
         ("engine/mixed_host_sync_bytes_per_step",
          round(sync / steps, 1), f"{logit_rows}logit_rows"),
+        # pipelined-loop overlap: host time hidden behind the in-flight
+        # step, and how long dispatch sat waiting on host work (~0 when
+        # the device is the bottleneck)
+        ("engine/mixed_dispatch_gap_ms", est["dispatch_gap_ms"],
+         f"depth{est['pipeline_depth']}"),
+        ("engine/mixed_host_ms_per_step", est["host_ms_per_step"],
+         f"{est['inflight_steps']}inflight_max"),
+        ("engine/mixed_inflight_steps", est["inflight_steps"],
+         f"depth{est['pipeline_depth']}"),
     ]
+
+
+def _pipeline_rows(smoke: bool) -> list:
+    """Depth-1 vs depth-2 on an identical decode-heavy workload: the
+    direct measurement of what the pipelined loop buys (host planning +
+    detok + streaming hidden behind device steps)."""
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    n_tok = 16 if smoke else 32
+    engines = {}
+    for depth in (1, 2):
+        eng = MLCEngine()
+        eng.load_model("m", cfg, max_slots=2, max_context=160, seed=0,
+                       backend="paged", page_size=8,
+                       pipeline_depth=depth, warmup=True)
+        engines[depth] = eng
+
+    def trial(eng, tag):
+        steps0 = eng.stats("m")["engine"]["exec_steps"]
+
+        def go(i):
+            eng.chat_completions_create(ChatCompletionRequest(
+                messages=[ChatMessage("user",
+                                      f"pipeline bench {tag} {i}")],
+                model="m", max_tokens=n_tok, seed=i, temperature=0.8))
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+        return (eng.stats("m")["engine"]["exec_steps"] - steps0) / wall
+
+    # the fixed warmup buckets don't cover every mixed (B, C) shape the
+    # workload hits, so run discarded trials first (stray first-hit
+    # compiles must not land in a measurement), then ALTERNATE measured
+    # trials between the two depths and compare per-depth MEDIANS — on
+    # a shared host, ambient load then biases both sides equally and a
+    # single outlier trial can't swing the ratio.  Note on a single-
+    # core host the ratio is ~1.0 by construction: "device" compute and
+    # host work contend for the same core, so the overlap buys little
+    # wall-clock (the headline there is host_ms hidden per step, not
+    # throughput).
+    samples = {1: [], 2: []}
+    for depth in (1, 2):
+        trial(engines[depth], "w")
+    for tag in ("a", "b", "c", "d", "e"):
+        for depth in (1, 2):
+            samples[depth].append(trial(engines[depth], tag))
+    sps = {d: float(np.median(s)) for d, s in samples.items()}
+    for eng in engines.values():
+        eng.shutdown()
+    return [("engine/pipeline_speedup", round(sps[2] / sps[1], 3),
+             f"{sps[1]:.2f}->{sps[2]:.2f}steps_per_s_depth1_vs_2")]
 
 
 def _sample_us(vocab: int, rows: int, iters: int) -> float:
@@ -194,7 +260,8 @@ def _sample_us(vocab: int, rows: int, iters: int) -> float:
 
 
 def run(smoke: bool = False) -> list:
-    return _throughput_rows(smoke) + _latency_rows(smoke)
+    return (_throughput_rows(smoke) + _latency_rows(smoke)
+            + _pipeline_rows(smoke))
 
 
 if __name__ == "__main__":

@@ -4,14 +4,24 @@ Token-budget continuous batching: every engine step executes ONE
 ``Scheduler.plan_step`` — a mixed plan of decode tokens (one per running
 sequence) plus chunked prefill work filling the rest of the per-step
 token budget — and on the paged backend the whole plan dispatches as ONE
-fused logits→token step (``_execute_plan_fused`` ->
+fused logits→token step (``_step_fused`` ->
 ``PagedEngineBackend.run_step``): decode tokens are length-1 rows and
 prefill chunks multi-token rows of the same packed ragged layout the
 scheduler emits, attention is a single ragged kernel call, and batched
 sampling (bias/penalties/grammar bitmasks/temperature/top-k/top-p +
 counter-based Gumbel draw) chains on device inside the same jit — only
 sampled token ids cross back to the host, never ``[B, V]`` logits
-(``stats()["runner"]["host_logit_rows"] == 0``).  A prompt never prefills monolithically there: a
+(``stats()["runner"]["host_logit_rows"] == 0``).  At ``pipeline_depth=2``
+(the paged default) consecutive fused steps PIPELINE on JAX async
+dispatch: step N dispatches without blocking, and while the device
+computes, the host drains step N-1's handle (token materialization,
+detok/streaming/finish detection one step behind) and plans step N+1 —
+decode inputs chain device-to-device from N's on-device token array, so
+the host never needs a token value to dispatch.  A sequence that
+finishes at step N already has a speculative token in flight at N+1;
+the drain rewinds that one position (page cursor + PRNG counter
+bookkeeping keep seeded runs bit-identical to ``pipeline_depth=1``).
+A prompt never prefills monolithically there: a
 sequence in the PREFILLING state carries a chunk cursor
 (``_Seq.prefill_ids``/``prefill_pos``) and streams ragged rows across as
 many steps as the budget allows, so a long cold prompt admits once and
@@ -116,6 +126,18 @@ class _Seq:
     prefill_pos: int = 0                      # chunk cursor (tokens in KV)
     fork_of: Optional["_Seq"] = None          # CoW-fork source sibling
     tool_stream: Optional[ToolCallStreamer] = None  # delta.tool_calls
+    # -- pipelined-loop state (engine-loop-thread confined) ----------
+    #: rows this sequence has in the dispatched-but-undrained step
+    n_inflight: int = 0
+    #: sampling-row index of this sequence's pending on-device token in
+    #: ``inflight_of`` (the next decode gathers it device-to-device)
+    inflight_src: Optional[int] = None
+    inflight_of: Optional["_Inflight"] = None
+    #: finish happened while a row was still in flight: slot/page
+    #: release is deferred to that step's drain (which rewinds the
+    #: speculative token first)
+    pending_release: bool = False
+    release_publish: bool = True
 
     @property
     def prefill_remaining(self) -> int:
@@ -152,6 +174,19 @@ class _Request:
 
 
 @dataclass
+class _Inflight:
+    """One dispatched-but-undrained fused step: the runner's on-device
+    :class:`~repro.core.paged_runner.StepHandle` plus the host-side
+    row/consumer bookkeeping needed to consume it one step later."""
+    handle: object                    # paged_runner.StepHandle
+    #: (seq, tokens, kind, completes) as dispatched — ``completes`` is
+    #: captured BEFORE the chunk cursor advanced: by drain time the
+    #: next chunk may already be in flight, so it cannot be recomputed
+    rows: List[tuple]
+    consumers: List[_Seq]             # sampling-row order
+
+
+@dataclass
 class _LoadedModel:
     runner: ModelRunner               # or PagedEngineBackend (same interface)
     tokenizer: ByteBPETokenizer
@@ -161,6 +196,16 @@ class _LoadedModel:
     prefill_chunk_size: int = 16      # chunked-prefill granularity (paged)
     exec_steps: int = 0               # engine steps that dispatched work
     image_embeds: Dict[str, np.ndarray] = field(default_factory=dict)
+    # -- pipelined loop (all loop-thread confined) -------------------
+    #: fused steps kept in flight: 2 overlaps host planning/consumption
+    #: with device execution, 1 preserves the strictly sequential loop
+    pipeline_depth: int = 1
+    inflight: Optional[_Inflight] = None      # the undrained step
+    next_plan: object = None          # depth-2: plan built behind device
+    inflight_max: int = 0             # max concurrent steps observed
+    gap_s: float = 0.0                # device idle between dispatches
+    t_last_ready: float = 0.0         # monotonic stamp of last drain
+    host_s: float = 0.0               # host time not hidden by device
 
 
 class EngineCrashed(RuntimeError):
@@ -211,7 +256,9 @@ class MLCEngine:
                    prefill_chunk_size: int = 16,
                    token_budget: Optional[int] = None,
                    max_cached_pages: Optional[int] = None,
-                   max_cached_bytes: Optional[int] = None):
+                   max_cached_bytes: Optional[int] = None,
+                   pipeline_depth: Optional[int] = None,
+                   warmup: bool = False):
         """Load a model under ``name`` for ``chat_completions_create``.
 
         Backends: ``"paged"`` serves every request through the paged KV
@@ -253,6 +300,20 @@ class MLCEngine:
             Tokens per physical KV page, and the pool size (default:
             ``(max_slots + 2) * ceil(max_context / page_size)`` — every
             slot at full context plus cache headroom).
+        ``pipeline_depth``
+            Fused steps kept in flight on the paged backend.  The
+            default (2) dispatches step N and then, while the device
+            computes, drains step N-1 (token materialization, detok,
+            streaming, finish detection) and plans step N+1 — decode
+            inputs chain device-to-device, so the host never blocks on
+            a token value to dispatch.  ``1`` restores the strictly
+            sequential loop (and is forced on the dense backend).
+            Seeded runs are token-for-token identical across depths.
+        ``warmup``
+            Precompile the common ragged jit buckets at load (paged
+            only), so first-hit compiles stop dominating TTFT; the
+            variant count lands in ``stats()["runner"]
+            ["warmup_compiles"]``.
 
         Failure modes: a prompt that cannot fit the page pool even
         alone fails its request with ``RuntimeError`` instead of
@@ -297,10 +358,18 @@ class MLCEngine:
         if token_budget is None:
             token_budget = default_budget
         assert token_budget >= 1, token_budget
+        if pipeline_depth is None:
+            pipeline_depth = 2 if backend == "paged" else 1
+        if backend != "paged":
+            pipeline_depth = 1        # dense has no non-blocking step
+        assert pipeline_depth in (1, 2), pipeline_depth
         lm = _LoadedModel(
             runner=runner, tokenizer=tokenizer, scheduler=scheduler,
             backend=backend, token_budget=token_budget,
-            prefill_chunk_size=prefill_chunk_size)
+            prefill_chunk_size=prefill_chunk_size,
+            pipeline_depth=pipeline_depth)
+        if warmup and backend == "paged":
+            runner.warmup(tokenizer.vocab_size)
         with self._lock:
             # publish under the lock, like unload_model pops under it:
             # the loop thread snapshots ``models`` while holding it
@@ -486,6 +555,12 @@ class MLCEngine:
         """Fail every live request with ``exc`` (loop-death path)."""
         with self._lock:
             live = list(self._requests.values())
+            models = list(self.models.values())
+        for lm in models:
+            try:
+                self._drain(lm)    # flush the in-flight step first
+            except Exception:
+                lm.inflight = None  # engine state may already be broken
         for r in live:
             try:
                 lm = self.models.get(r.model)
@@ -515,9 +590,10 @@ class MLCEngine:
         On a backend with ``supports_ragged_step`` (paged) the WHOLE
         plan — every decode token, every in-flight prefill chunk, and
         every admission's first chunk — executes as ONE fused ragged
-        kernel call (``_execute_plan_fused``); otherwise (dense) the
-        legacy path prefills admissions monolithically and batch-decodes
-        in a separate dispatch."""
+        kernel call (``_step_fused``), pipelined against the previous
+        step at ``pipeline_depth=2``; otherwise (dense) the legacy path
+        prefills admissions monolithically and batch-decodes in a
+        separate dispatch."""
         sched = lm.scheduler
         busy = self._reap_aborted(lm)
         busy |= self._prune_waiting(lm)
@@ -528,12 +604,18 @@ class MLCEngine:
         fused = getattr(lm.runner, "supports_ragged_step", False)
         assert fused == getattr(lm.runner, "supports_chunked_prefill",
                                 False), "capability flags must agree"
-        chunk = lm.prefill_chunk_size if fused else None
-        plan = sched.plan_step(
-            lm.token_budget, chunk_size=chunk,
-            admission_info=lambda r: self._probe(lm, r))
         if fused:
-            return busy | self._execute_plan_fused(lm, plan)
+            # depth 2 planned this step already — behind the device,
+            # at the end of the previous iteration
+            plan, lm.next_plan = lm.next_plan, None
+            if plan is None:
+                plan = sched.plan_step(
+                    lm.token_budget, chunk_size=lm.prefill_chunk_size,
+                    admission_info=lambda r: self._probe(lm, r))
+            return busy | self._step_fused(lm, plan)
+        plan = sched.plan_step(
+            lm.token_budget, chunk_size=None,
+            admission_info=lambda r: self._probe(lm, r))
         # ---- legacy split path (dense backend) ----
         work = False
         for r, first in plan.admit:
@@ -576,26 +658,59 @@ class MLCEngine:
             lm.runner.release(slot, publish=midprefill)
             self._unbind(seq)
 
-    def _execute_plan_fused(self, lm: _LoadedModel, plan) -> bool:
-        """The single plan-execution path: revalidate the planner's
-        ragged layout, bind this step's admissions so their first chunks
-        join the same batch, and dispatch EVERYTHING (decode rows +
-        prefill chunks) as one fused logits→token ``run_step`` — one
-        attention kernel invocation per engine step, with batched
-        sampling chained on device so only token ids (plus requested
-        top-logprobs rows) cross back to the host: ``[B, V]`` logits
-        never do (``stats()["runner"]["host_logit_rows"]`` stays 0).
+    @staticmethod
+    def _block_s(lm: _LoadedModel) -> float:
+        """Cumulative seconds the runner spent BLOCKED materializing
+        device results (the pipelined drain's token sync)."""
+        inner = getattr(lm.runner, "runner", lm.runner)
+        return float(getattr(inner, "t_block_s", 0.0))
 
-        In-flight prefill rows precede admissions in the layout, so an
-        older half-prefilled prompt claims its pages first — a newcomer
-        must not starve it into an OutOfPages preempt/restart loop."""
+    def _step_fused(self, lm: _LoadedModel, plan) -> bool:
+        """Fused-step wrapper: runs one pipeline iteration and accounts
+        the host milliseconds that were NOT hidden behind the device
+        (step wall time minus time blocked on materialization)."""
+        t0 = time.monotonic()
+        blk0 = self._block_s(lm)
+        steps0 = lm.exec_steps
+        work = self._pipeline_step(lm, plan)
+        if lm.exec_steps > steps0:
+            lm.host_s += max(0.0, (time.monotonic() - t0)
+                             - (self._block_s(lm) - blk0))
+        return work
+
+    def _plan_rows(self, lm: _LoadedModel, plan):
+        """Revalidate the planner's ragged layout against current state
+        (sequences finish/abort between planning and dispatch) and
+        resolve each decode row's input token: a sequence whose pending
+        token is still on device in the in-flight step is fed
+        device-to-device (``srcs`` maps its row index to the sampling
+        row to gather from); everything else ships the host token.
+
+        A device-fed row whose in-flight input token is CERTAIN to
+        finish the sequence by length is skipped — the row would only
+        be rewound, and its KV write could run past ``max_context``."""
         rows: List[tuple] = []                 # (seq, tokens, kind)
+        srcs: Dict[int, int] = {}              # row index -> prev sample row
+        h = lm.inflight
         for row in plan.layout.rows:
             seq = row.seq
             if row.kind == "decode":
-                if (seq.slot >= 0 and seq.finish_reason is None
-                        and seq.next_token is not None
-                        and seq.prefill_remaining == 0):
+                if (seq.slot < 0 or seq.finish_reason is not None
+                        or seq.prefill_remaining != 0
+                        or seq.prefill_ids is not None):
+                    continue
+                devfed = (h is not None and seq.inflight_of is h
+                          and seq.inflight_src is not None)
+                if not devfed and seq.next_token is None:
+                    continue
+                if devfed and (len(seq.generated) + 2
+                               >= seq.request.req.max_tokens
+                               or seq.pos + 2 >= lm.runner.max_context):
+                    continue                   # finish certain: no row
+                if devfed:
+                    srcs[len(rows)] = seq.inflight_src
+                    rows.append((seq, [0], "decode"))  # placeholder id
+                else:
                     rows.append((seq, [seq.next_token], "decode"))
                 continue
             if (seq.slot < 0 or seq.finish_reason is not None
@@ -604,17 +719,61 @@ class MLCEngine:
             n = min(row.n, seq.prefill_remaining)
             toks = seq.prefill_ids[seq.prefill_pos:seq.prefill_pos + n]
             rows.append((seq, toks, "prefill"))
+        return rows, srcs
+
+    @staticmethod
+    def _needs_flush(rows) -> bool:
+        """Grammar-masked sampling exports token bitmasks at PACK time,
+        which requires matcher state current through the last sampled
+        token — any in-flight step must drain first (grammar traffic
+        effectively runs at depth 1)."""
+        for seq, toks, kind in rows:
+            if kind == "decode":
+                if seq.matcher is not None:
+                    return True
+            elif len(toks) == seq.prefill_remaining:
+                for s in [seq] + [x for x in seq.request.seqs
+                                  if x.fork_of is seq]:
+                    if s.matcher is not None and s.finish_reason is None:
+                        return True
+        return False
+
+    def _pipeline_step(self, lm: _LoadedModel, plan) -> bool:
+        """One pipeline iteration: dispatch this step's plan (decode
+        inputs chained device-to-device from the in-flight step), then
+        drain the PREVIOUS step's handle while the device computes, and
+        finally (depth 2) plan the NEXT step behind the device.
+
+        In-flight prefill rows precede admissions in the layout, so an
+        older half-prefilled prompt claims its pages first — a newcomer
+        must not starve it into an OutOfPages preempt/restart loop.
+        Flush discipline: grammar packing, OutOfPages preemption, and
+        poisoned-dispatch eviction all drain the in-flight handle
+        before touching sequence/page state it still references."""
+        rows, srcs = self._plan_rows(lm, plan)
+        if lm.inflight is not None and self._needs_flush(rows):
+            self._drain(lm)
+            # the drain may have finished sequences or completed
+            # prefills: rebuild (now with host tokens throughout)
+            rows, srcs = self._plan_rows(lm, plan)
         for r, first in plan.admit:
             rows.extend(self._bind_admission(lm, r, first))
         if not rows:
+            if lm.inflight is not None:
+                self._drain(lm)    # nothing to overlap: retire the lag
+                return True
             return False
         while True:
             try:
-                batch, consumers, n_top = self._pack_sampling(lm, rows)
+                batch, consumers, n_top = self._pack_sampling(
+                    lm, rows, srcs)
                 break
             except _GrammarDeadEnd as e:
                 # fail ONLY the dead-ended requests (loudly, like the
-                # host sampler always did) and dispatch the rest
+                # host sampler always did) and dispatch the rest.  A
+                # dead end implies grammar rows, which forced the flush
+                # above — so no srcs refer to dropped row indices
+                assert not srcs
                 dead = {id(r) for r in e.requests}
                 for r in e.requests:
                     self._evict_request(lm, r, publish=False)
@@ -623,12 +782,18 @@ class MLCEngine:
                 rows = [t for t in rows if id(t[0].request) not in dead]
                 if not rows:
                     return True
+        prev = lm.inflight
         try:
-            res = lm.runner.run_step(
+            out = lm.runner.run_step(
                 [(s.slot, toks, kind) for s, toks, kind in rows],
                 sampling=batch, n_top=n_top,
-                return_logits=False)   # no token due -> transfer nothing
+                return_logits=False,   # no token due -> transfer nothing
+                materialize=(batch is None),
+                prev=(prev.handle if prev is not None and batch is not None
+                      else None),
+                decode_srcs=(srcs or None))
         except OutOfPages:
+            self._drain(lm)            # in-flight rows reference pages
             self._preempt_newest(lm)
             return True
         except Exception as e:
@@ -636,33 +801,135 @@ class MLCEngine:
             # would hang until the stall timeout): the fused batch can't
             # attribute the fault to one row, so fail every request it
             # carried and keep the engine alive for the rest
+            self._drain(lm)
             for r in {id(s.request): s.request for s, _, _ in rows}.values():
                 self._evict_request(lm, r, publish=False)
                 self._fail(r, e)
             return True
+        now = time.monotonic()
+        if prev is None and lm.t_last_ready > 0.0:
+            # nothing was in flight while the host planned this step:
+            # that whole span was device idle (the depth-1 cost)
+            lm.gap_s += max(0.0, now - lm.t_last_ready)
         lm.exec_steps += 1       # before token consumption wakes callers:
         #                          stats() must never see calls > steps
+        depth = (1 if prev is not None else 0) + 1
+        if depth > lm.inflight_max:
+            lm.inflight_max = depth
+        if batch is None:
+            # pure mid-prompt chunks, nothing sampled: no handle.  A
+            # RESUMED sequence's completing chunk finishes its prefill
+            # here with nothing to consume (its pending token survives)
+            for seq, toks, kind in rows:
+                if kind != "prefill":
+                    continue
+                seq.prefill_pos += len(toks)
+                if seq.prefill_remaining == 0:
+                    try:
+                        self._complete_prefill(lm, seq, sampled={})
+                    except Exception as e:
+                        self._recover_prefill_failure(lm, seq.request, e)
+            if prev is not None:
+                self._drain(lm)
+            return True
+        h = _Inflight(handle=out, rows=[], consumers=consumers)
+        srcmap = {id(s): i for i, s in enumerate(consumers)}
+        for seq, toks, kind in rows:
+            seq.n_inflight += 1
+            completes = False
+            if kind == "decode":
+                seq.inflight_of = h
+                seq.inflight_src = srcmap[id(seq)]
+            else:
+                # the chunk cursor advances at DISPATCH (the planner
+                # must not re-plan in-flight chunks); completion runs
+                # at drain, one step behind
+                completes = len(toks) == seq.prefill_remaining
+                seq.prefill_pos += len(toks)
+            h.rows.append((seq, toks, kind, completes))
+        lm.inflight = h
+        if prev is not None:
+            self._drain_one(lm, prev)  # consume N-1 while N computes
+        if lm.pipeline_depth < 2:
+            self._drain(lm)            # sequential semantics
+        else:
+            # plan step N+1 behind the device, from post-drain state
+            lm.next_plan = lm.scheduler.plan_step(
+                lm.token_budget, chunk_size=lm.prefill_chunk_size,
+                admission_info=lambda r: self._probe(lm, r))
+        return True
+
+    def _drain(self, lm: _LoadedModel):
+        """Drain the in-flight step, if any (the pipeline flush)."""
+        h, lm.inflight = lm.inflight, None
+        if h is not None:
+            self._drain_one(lm, h)
+
+    def _drain_one(self, lm: _LoadedModel, h: _Inflight):
+        """Materialize a dispatched step and run its host-side
+        consumption — detok, streaming, finish detection, grammar
+        advance — one step behind the device at depth 2.
+
+        Lag-1 finish: a row dispatched speculatively for a sequence
+        that finished at the PREVIOUS drain is skipped, its input token
+        un-appended (page cursor + recorded token), and the deferred
+        slot/page release performed — before any publish can see the
+        speculative token."""
+        try:
+            res = h.handle.materialize()
+        except Exception as e:
+            # a deferred device error surfaces here: fail every request
+            # the handle carried and restore the bookkeeping
+            for r in {id(s.request): s.request
+                      for s, _, _, _ in h.rows}.values():
+                try:
+                    self._evict_request(lm, r, publish=False)
+                except Exception:
+                    pass
+                self._fail(r, e)
+            for seq, _, _, _ in h.rows:
+                seq.n_inflight = max(0, seq.n_inflight - 1)
+                if seq.inflight_of is h:
+                    seq.inflight_of = None
+                    seq.inflight_src = None
+                self._maybe_release(lm, seq)
+            return
+        lm.t_last_ready = time.monotonic()
         sampled = {}             # id(consumer seq) -> its sample row
-        for i, s in enumerate(consumers):
+        for i, s in enumerate(h.consumers):
             sampled[id(s)] = (int(res.tokens[i]), float(res.logprob[i]),
                               res.top_ids[i], res.top_lps[i])
-        for seq, toks, kind in rows:
+        for seq, toks, kind, completes in h.rows:
+            seq.n_inflight -= 1
+            if seq.inflight_of is h:
+                seq.inflight_of = None
+                seq.inflight_src = None
             if seq.finish_reason is not None or seq.slot < 0:
-                continue                       # finished/aborted mid-loop
+                if kind == "decode" and seq.slot >= 0:
+                    lm.runner.rewind_token(seq.slot)   # lag-1 rewind
+                self._maybe_release(lm, seq)
+                continue
             if kind == "decode":
                 seq.generated.append(seq.next_token)
                 seq.pos += 1
                 self._consume_sampled(lm, seq, sampled[id(seq)])
-            else:
-                seq.prefill_pos += len(toks)
-                if seq.prefill_remaining == 0:
-                    try:
-                        self._complete_prefill(lm, seq, sampled=sampled)
-                    except Exception as e:     # CoW fork ran out of pages
-                        self._recover_prefill_failure(lm, seq.request, e)
-        return True
+            elif completes and seq.prefill_ids is not None:
+                try:
+                    self._complete_prefill(lm, seq, sampled=sampled)
+                except Exception as e:     # CoW fork ran out of pages
+                    self._recover_prefill_failure(lm, seq.request, e)
 
-    def _pack_sampling(self, lm: _LoadedModel, rows: List[tuple]):
+    def _maybe_release(self, lm: _LoadedModel, seq: _Seq):
+        """Perform a finish/abort release that was deferred while the
+        sequence still had rows in the in-flight step."""
+        if seq.pending_release and seq.n_inflight <= 0 and seq.slot >= 0:
+            lm.runner.release(seq.slot, publish=seq.release_publish)
+            lm.scheduler.release(seq.slot)
+            seq.slot = -1
+            seq.pending_release = False
+
+    def _pack_sampling(self, lm: _LoadedModel, rows: List[tuple],
+                       srcs: Optional[Dict[int, int]] = None):
         """Build the step's :class:`SamplingParamsBatch`: one sampling
         row per decode row, plus — for each prefill row whose tokens
         complete the prompt — one row for the sequence and each of its
@@ -678,6 +945,8 @@ class MLCEngine:
         top-logprobs K)``."""
         specs: List[tuple] = []
         consumers: List[_Seq] = []
+        slot_ids: List[int] = []
+        counters: List[int] = []
         dead: Dict[int, _Request] = {}
         n_top = 0
         for b, (seq, toks, kind) in enumerate(rows):
@@ -697,6 +966,13 @@ class MLCEngine:
                     continue
                 specs.append((b, s.sampler, mask))
                 consumers.append(s)
+                slot_ids.append(s.slot)
+                # a device-fed row's input token is still unobserved by
+                # its sampler (it drains one step behind): advance the
+                # PRNG counter past it so the Gumbel draw lands exactly
+                # where the sequential path's would
+                counters.append(s.sampler.n_sampled
+                                + (1 if srcs and b in srcs else 0))
                 req = s.request.req
                 if req.logprobs and req.top_logprobs > 0:
                     n_top = max(n_top, req.top_logprobs)
@@ -707,7 +983,9 @@ class MLCEngine:
         vocab = lm.tokenizer.vocab_size
         if n_top > 0:                          # bucket: bounded jit variants
             n_top = min(1 << (n_top - 1).bit_length(), vocab)
-        batch = SamplingParamsBatch.build(specs, vocab)
+        batch = SamplingParamsBatch.build(specs, vocab,
+                                          slot_ids=slot_ids,
+                                          counters=counters)
         batch.need_logprobs = any(s.request.req.logprobs
                                   for s in consumers)
         return batch, consumers, n_top
@@ -938,11 +1216,25 @@ class MLCEngine:
         prefix-cache hit positions the chunk cursor."""
         seq.slot = lm.scheduler.admit(seq, group=r)
         cached = lm.runner.begin_prefill(seq.slot, ids)
+        self._seed_counts(lm, seq)
         seq.prefill_ids = ids
         seq.prefill_pos = cached
         r.cached_tokens = max(
             r.cached_tokens,
             int(lm.runner.last_prefill_info.get("prefix_cached_tokens", 0)))
+
+    @staticmethod
+    def _seed_counts(lm: _LoadedModel, seq: _Seq):
+        """Seed the device count-plane row when a penalty-bearing
+        sequence (re)binds a slot — the row may hold a previous
+        occupant's scatters; the host sampler stays the durable oracle
+        across preemption and resume."""
+        sp = seq.sampler
+        if (lm.backend == "paged"
+                and (sp.frequency_penalty or sp.presence_penalty
+                     or sp.repetition_penalty != 1.0)):
+            lm.runner.seed_counts(seq.slot, sp.counts,
+                                  lm.tokenizer.vocab_size)
 
     def _complete_prefill(self, lm: _LoadedModel, seq: _Seq, *,
                           sampled: Optional[dict] = None):
@@ -961,6 +1253,7 @@ class MLCEngine:
             lm.runner.fork_slot(seq.slot, s.slot)  # OutOfPages -> caller
             s.fork_of = None
             s.pos = seq.pos
+            self._seed_counts(lm, s)
         if r.t_first == 0.0:
             r.t_first = time.time()
             r.prefill_s = r.t_first - (r.t_admit or r.t_submit)
@@ -1157,10 +1450,19 @@ class MLCEngine:
         seq.t_done = time.time()
         seq.next_token = None
         if seq.slot >= 0:
-            # aborted sequences may hold mid-write pages — never publish
-            lm.runner.release(seq.slot, publish=(reason != "abort"))
-            lm.scheduler.release(seq.slot)
-            seq.slot = -1
+            if seq.n_inflight > 0:
+                # the pipeline's in-flight step still carries a row for
+                # this sequence (a speculative KV write + sampled
+                # token): defer the release to that step's drain, which
+                # rewinds the speculative token before any publish
+                seq.pending_release = True
+                seq.release_publish = (reason != "abort")
+            else:
+                # aborted sequences may hold mid-write pages — never
+                # publish them
+                lm.runner.release(seq.slot, publish=(reason != "abort"))
+                lm.scheduler.release(seq.slot)
+                seq.slot = -1
         last = r.done()
         if req.stream:
             if r.tool_grammar and seq.tool_stream is not None:
@@ -1294,7 +1596,9 @@ class MLCEngine:
         loaded model; otherwise one model's dict::
 
             {"backend": "paged" | "dense",
-             "engine":    {"exec_steps": ...},   # steps that dispatched work
+             "engine":    {"exec_steps": ...,    # steps that dispatched work
+                           "pipeline_depth": ..., "inflight_steps": ...,
+                           "dispatch_gap_ms": ..., "host_ms_per_step": ...},
              "scheduler": {"waiting": ..., "running": ..., "plans": ...,
                            "admitted": ..., "preemptions": ..., "pages": ...},
              "runner":    {"attn_kernel_calls": ..., "ragged_steps": ...,
@@ -1310,7 +1614,14 @@ class MLCEngine:
             return {name: self.stats(name) for name in list(self.models)}
         lm = self.models[model]
         return {"backend": lm.backend,
-                "engine": {"exec_steps": lm.exec_steps},
+                "engine": {
+                    "exec_steps": lm.exec_steps,
+                    "pipeline_depth": lm.pipeline_depth,
+                    "inflight_steps": lm.inflight_max,
+                    "dispatch_gap_ms": round(
+                        1000.0 * lm.gap_s / max(1, lm.exec_steps), 3),
+                    "host_ms_per_step": round(
+                        1000.0 * lm.host_s / max(1, lm.exec_steps), 3)},
                 "scheduler": lm.scheduler.stats(),
                 "runner": lm.runner.stats()}
 

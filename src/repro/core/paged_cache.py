@@ -158,6 +158,21 @@ class PageManager:
         self.ensure_capacity(seq_id, alloc.length + n)
         alloc.length += n
 
+    def rewind_tokens(self, seq_id: int, n: int = 1):
+        """Roll the sequence's cursor back ``n`` tokens and drop any
+        trailing page the rolled-back tokens had forced into existence
+        (the pipelined engine's lag-1 finish rewind: a speculatively
+        appended token is un-appended).  Only pages *beyond* the new
+        length are released — an appended token never lands in a shared
+        page (writes go to private pages only), so the deref can never
+        free another sequence's or the prefix cache's data."""
+        alloc = self.seqs[seq_id]
+        assert 0 <= n <= alloc.length, (seq_id, n, alloc.length)
+        alloc.length -= n
+        need = -(-alloc.length // self.page_size)
+        while len(alloc.pages) > need:
+            self.deref_page(alloc.pages.pop())
+
     # -- views -----------------------------------------------------------
     def page_table(self, seq_ids: List[int]) -> np.ndarray:
         """[len(seq_ids), pages_per_seq] int32 (0-padded)."""

@@ -34,7 +34,9 @@ runner interface ``MLCEngine`` drives, adding the chunked-prefill calls
 """
 from __future__ import annotations
 
+import time
 from collections import deque
+from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -58,6 +60,66 @@ def paged_supported(cfg: ModelConfig) -> bool:
     return (not cfg.is_encdec
             and all(s.mixer == "attn" and s.ffn == "dense"
                     for s in cfg.layer_pattern))
+
+
+@dataclass
+class StepHandle:
+    """One dispatched-but-not-materialized fused step (the pipelined
+    engine's unit of in-flight work).
+
+    Holds the ON-DEVICE ``SampleResult`` arrays the fused jit returned —
+    JAX async dispatch means the computation may still be running; no
+    ``np.asarray`` has happened and the host has not blocked.  The next
+    step's decode inputs can be fed device-to-device straight from
+    ``tokens`` (``run_step(prev=handle, decode_srcs=...)``), so the host
+    never needs these values to keep the device busy.  ``materialize()``
+    blocks until the step is done, pulls the arrays across (accounted to
+    the runner's ``t_block_s``/``host_sync_bytes``), backfills the token
+    placeholders of device-fed rows into ``seq_tokens``, and caches the
+    result (idempotent)."""
+    tokens: object            # jax.Array [Sb] int32, on device
+    logprob: object           # jax.Array [Sb] f32
+    top_ids: object           # jax.Array [Sb, K] int32
+    top_lps: object           # jax.Array [Sb, K] f32
+    n_rows: int               # valid sampling rows (<= Sb)
+    runner: "PagedModelRunner"
+    #: (sid, index into seq_tokens[sid], sampling row) placeholders
+    #: written by device-fed decode rows of the NEXT step, which
+    #: consume THIS handle's tokens — resolved at materialize
+    backfills: List[Tuple[int, int, int]] = field(default_factory=list)
+    result: Optional[SampleResult] = None
+
+    def backfill(self, sid: int, pos: int, src: int):
+        """Register that ``seq_tokens[sid][pos]`` holds a placeholder
+        for this handle's sampling row ``src`` (a device-fed decode
+        input); resolves immediately when already materialized."""
+        if self.result is not None:
+            toks = self.runner.seq_tokens.get(sid)
+            if toks is not None and pos < len(toks):
+                toks[pos] = int(self.result.tokens[src])
+        else:
+            self.backfills.append((sid, pos, src))
+
+    def materialize(self) -> SampleResult:
+        if self.result is not None:
+            return self.result
+        r = self.runner
+        t0 = time.perf_counter()
+        tok = np.asarray(self.tokens)          # blocks until step done
+        r.t_block_s += time.perf_counter() - t0
+        res = SampleResult(
+            tokens=tok[:self.n_rows],
+            logprob=np.asarray(self.logprob)[:self.n_rows],
+            top_ids=np.asarray(self.top_ids)[:self.n_rows],
+            top_lps=np.asarray(self.top_lps)[:self.n_rows])
+        r.host_sync_bytes += (res.tokens.nbytes + res.logprob.nbytes
+                              + res.top_ids.nbytes + res.top_lps.nbytes)
+        for sid, pos, src in self.backfills:
+            toks = r.seq_tokens.get(sid)
+            if toks is not None and pos < len(toks):
+                toks[pos] = int(tok[src])
+        self.result = res
+        return res
 
 
 class PagedModelRunner:
@@ -102,6 +164,33 @@ class PagedModelRunner:
         #: fused engine path, where only sampled token ids cross back
         self.host_logit_rows = 0
         self.host_sync_bytes = 0          # device→host payload bytes
+        self.t_block_s = 0.0              # host seconds blocked on device
+        #: distinct fused-sampled jit variants dispatched so far, keyed
+        #: by their full static signature (surfaced as ``jit_buckets``)
+        self._seen_buckets: set = set()
+        self.n_warmup_compiles = 0        # variants compiled by warmup()
+        self.n_rewinds = 0                # lag-1 finish rewinds applied
+        #: sampling rows are ALWAYS padded to this fixed bucket — it
+        #: keeps one step's on-device token array shape-stable, so a
+        #: pipelined step can gather its decode inputs straight from the
+        #: previous StepHandle without a reshape or an extra variant
+        self._s_rows = self._bucket(max(1, max_slots))
+        #: device-resident penalty count planes ``[max_slots + 1, V]``
+        #: (row ``max_slots`` is the trash row pad sampling rows
+        #: scatter into) — allocated lazily at the engine's vocab,
+        #: donated through every fused step, gathered by ``slot_ids``
+        #: before sampling and scatter-incremented with each sampled
+        #: token after it, replacing per-step dense [S, V] uploads
+        self.count_planes = jnp.zeros((1, 1), jnp.float32)
+        self._plane_vocab: Optional[int] = None
+        #: double-buffered host staging for the sampling uploads (the
+        #: SHARK-Engine fenced TransferBufferPool idiom): consecutive
+        #: steps alternate buffer sets, so overwriting a buffer for step
+        #: N+2 can never race the (possibly still-pending) transfer of
+        #: step N — depth-2 pipelining guarantees step N has drained by
+        #: then
+        self._staging = ({}, {})
+        self._staging_i = 0
         #: bounded trace of jitted steps, for liveness assertions/tests:
         #: ("decode", batch_size) | ("chunk", n_valid_tokens) |
         #: ("ragged", n_decode_rows, n_prefill_tokens)
@@ -128,11 +217,13 @@ class PagedModelRunner:
         # the fused logits→token variant the engine drives: sampling is
         # chained after ragged attention INSIDE the same jitted step, so
         # a whole engine step stays one dispatch and only token ids (not
-        # [B, V] logits) come back; variants add (S, n_top) buckets
+        # [B, V] logits) come back; variants add (S, n_top) buckets.
+        # The count planes (arg 3) ride donated through every step like
+        # the page pools, so penalty bookkeeping stays device-resident.
         self._ragged_sample_jit = jax.jit(
-            self._ragged_sample_step, donate_argnums=(1, 2),
+            self._ragged_sample_step, donate_argnums=(1, 2, 3),
             static_argnames=("vocab", "n_top", "use_planes",
-                             "all_greedy", "need_logprobs"))
+                             "all_greedy", "need_logprobs", "use_counts"))
 
         def _copy(k, v, src, dst):
             return (k.at[:, dst].set(k[:, src]),
@@ -141,6 +232,14 @@ class PagedModelRunner:
         # donated so XLA updates the pools in place instead of copying
         # the whole K/V buffers per CoW fork
         self._copy_jit = jax.jit(_copy, donate_argnums=(0, 1))
+        # donated single-row overwrite: re-seeds one count-plane row
+        # from the host oracle at slot bind/resume
+        self._seed_plane_jit = jax.jit(
+            lambda pl, vals, row: pl.at[row].set(vals),
+            donate_argnums=(0,))
+        # persistent all-zero "previous tokens" per length, for steps
+        # with no pipelined predecessor (avoids a per-step upload)
+        self._zero_prev: Dict[int, object] = {}
 
     # ------------------------------------------------------------------
     def _layer_params(self):
@@ -277,15 +376,16 @@ class PagedModelRunner:
         out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
         return out, k_pages, v_pages
 
-    def _ragged_sample_step(self, params, k_pages, v_pages, tokens, pos,
-                            page_tables, contexts, starts, lengths,
-                            page_idx, page_off, parent, seeds, counters,
+    def _ragged_sample_step(self, params, k_pages, v_pages, count_planes,
+                            tokens, pos, page_tables, contexts, starts,
+                            lengths, page_idx, page_off, prev_tokens,
+                            tok_src, parent, seeds, counters,
                             temperature, top_k, top_p, min_p, typical_p,
                             freq_pen, pres_pen, rep_pen, bias, counts,
-                            mask_bits,
+                            slot_rows, mask_bits,
                             *, vocab: int, n_top: int,
                             use_planes: bool, all_greedy: bool,
-                            need_logprobs: bool):
+                            need_logprobs: bool, use_counts: bool):
         """The fused logits→token step: ragged attention, then batched
         sampling over the rows' last-valid-token logits, in ONE jit.
 
@@ -293,20 +393,42 @@ class PagedModelRunner:
         logits it draws from (several sampling rows may share a parent —
         ``n``-way siblings sampling one freshly prefilled prompt); the
         remaining per-row arrays are the :class:`SamplingParamsBatch`
-        fields.  Returns ``(token [S], logprob [S], top_ids [S, n_top],
-        top_lps [S, n_top])`` plus the updated page pools — ``[B, V]``
-        logits never leave the device."""
+        fields.  Two device-to-device indirections keep the pipelined
+        engine off the host:
+
+        * ``tok_src [B*C]`` — slots with ``tok_src >= 0`` take their
+          input token from ``prev_tokens[tok_src]`` (the PREVIOUS step's
+          on-device sampled tokens) instead of the host-packed
+          ``tokens``, so a decode step can be dispatched before the
+          token it consumes has ever been materialized on the host.
+        * ``slot_rows [S]`` + ``count_planes`` — with ``use_counts`` the
+          freq/presence/repetition counts are gathered from the
+          device-resident planes (and the sampled tokens scattered back
+          in), so no dense ``[S, V]`` host plane is ever uploaded.
+
+        Returns ``(token [S], logprob [S], top_ids [S, n_top], top_lps
+        [S, n_top])`` plus the updated page pools and count planes —
+        ``[B, V]`` logits never leave the device."""
+        tokens = jnp.where(tok_src >= 0,
+                           prev_tokens[jnp.clip(tok_src, 0)], tokens)
         logits, k_pages, v_pages = self._ragged_step(
             params, k_pages, v_pages, tokens, pos, page_tables,
             contexts, starts, lengths, page_idx, page_off)
         rows = logits[parent][:, :vocab]
+        if use_counts:
+            counts = count_planes[slot_rows]
         out = batched_sample(rows, seeds, counters, temperature, top_k,
                              top_p, min_p, typical_p, freq_pen,
                              pres_pen, rep_pen,
                              bias, counts, mask_bits, n_top=n_top,
-                             use_planes=use_planes, all_greedy=all_greedy,
+                             use_planes=use_planes or use_counts,
+                             all_greedy=all_greedy,
                              need_logprobs=need_logprobs)
-        return out, k_pages, v_pages
+        if use_counts:
+            # pad rows carry slot_rows == max_slots (the trash row), so
+            # their greedy throwaway tokens never touch a live plane
+            count_planes = count_planes.at[slot_rows, out[0]].add(1.0)
+        return out, k_pages, v_pages, count_planes
 
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
@@ -429,7 +551,10 @@ class PagedModelRunner:
 
     def run_step(self, rows: List[Tuple[int, List[int], str]],
                  sampling: Optional[SamplingParamsBatch] = None,
-                 n_top: int = 0, return_logits: bool = True):
+                 n_top: int = 0, return_logits: bool = True,
+                 materialize: bool = True,
+                 prev: Optional[StepHandle] = None,
+                 decode_srcs: Optional[Dict[int, int]] = None):
         """Execute one fused ragged step: ONE attention kernel call for
         a whole engine step's mixed decode + prefill work.
 
@@ -460,6 +585,18 @@ class PagedModelRunner:
         counted by ``host_logit_rows`` — unless ``return_logits=False``
         (a step that only advances mid-prompt prefill produces no token
         and must transfer nothing).
+
+        The three pipelining kwargs (fused sampled path only):
+        ``materialize=False`` skips the blocking device→host pull and
+        returns a :class:`StepHandle` instead of a
+        :class:`SampleResult` — JAX async dispatch means the host is
+        free the moment the step is enqueued.  ``prev`` is the previous
+        step's (possibly still-running) handle and ``decode_srcs`` maps
+        a row index ``b`` of THIS step to the sampling row of ``prev``
+        whose on-device token row ``b`` consumes: the row's packed
+        token is a placeholder resolved inside the jit
+        (device-to-device), and ``prev``'s eventual materialization
+        backfills the real id into ``seq_tokens``.
         """
         assert rows, "run_step needs at least one row"
         sids = [sid for sid, _, _ in rows]
@@ -483,6 +620,7 @@ class PagedModelRunner:
         Cb = self._bucket(max(len(toks) for _, toks, _ in rows))
         N = Bb * Cb
         tok = np.zeros(N, np.int32)
+        tok_src = np.full(N, -1, np.int32)   # >= 0: take prev_tokens[src]
         pos = np.zeros(N, np.int32)
         page_idx = np.full(N, self.trash_page, np.int32)
         page_off = np.zeros(N, np.int32)
@@ -507,13 +645,19 @@ class PagedModelRunner:
             contexts[b] = start + n
             starts[b] = start
             lengths[b] = n
+            if decode_srcs and b in decode_srcs:
+                assert n == 1, "device-fed rows carry one placeholder"
+                tok_src[o] = decode_srcs[b]
         attn_args = (jnp.asarray(tok), jnp.asarray(pos),
                      jnp.asarray(page_tables), jnp.asarray(contexts),
                      jnp.asarray(starts), jnp.asarray(lengths),
                      jnp.asarray(page_idx), jnp.asarray(page_off))
         if sampling is not None:
-            sampled = self._dispatch_sampled(sampling, n_top, attn_args)
+            sampled = self._dispatch_sampled(sampling, n_top, attn_args,
+                                             tok_src, prev)
         else:
+            assert prev is None and not decode_srcs, \
+                "device-fed tokens need the fused sampled path"
             logits, self.k_pages, self.v_pages = self._ragged_jit(
                 self.params, self.k_pages, self.v_pages, *attn_args)
             if return_logits:
@@ -524,6 +668,9 @@ class PagedModelRunner:
         result: Dict[int, np.ndarray] = {}
         for b, (sid, toks, kind) in enumerate(rows):
             if sid in self.seq_tokens:
+                if decode_srcs and b in decode_srcs:
+                    prev.backfill(sid, len(self.seq_tokens[sid]),
+                                  decode_srcs[b])
                 self.seq_tokens[sid].extend(int(t) for t in toks)
             if kind == "decode":
                 n_dec += 1
@@ -535,54 +682,94 @@ class PagedModelRunner:
                 result[sid] = out[b]
         self.n_ragged_steps += 1
         self.step_log.append(("ragged", n_dec, n_pf))
-        return sampled if sampling is not None else result
+        if sampling is not None:
+            return sampled.materialize() if materialize else sampled
+        return result
 
     def _dispatch_sampled(self, sampling: SamplingParamsBatch,
-                          n_top: int, attn_args: tuple) -> SampleResult:
-        """Run the fused attention+sampling jit for one packed step and
-        pull back only the per-row sample outputs.  The sampling-row
-        count is bucketed to a power of two (pad rows sample greedily
-        from attention row 0 and are dropped), keeping jit variants
-        bounded like the (B, C) attention buckets."""
+                          n_top: int, attn_args: tuple,
+                          tok_src: np.ndarray,
+                          prev: Optional[StepHandle] = None) -> StepHandle:
+        """Dispatch the fused attention+sampling jit for one packed step
+        WITHOUT blocking: returns a :class:`StepHandle` over the
+        on-device outputs (JAX async dispatch frees the host
+        immediately; ``run_step`` materializes it for legacy callers).
+
+        Sampling rows are padded to at least the FIXED ``self._s_rows``
+        bucket (pad rows sample greedily from attention row 0, scatter
+        their count update into the trash plane row, and are dropped) so
+        the on-device token array has one stable shape: the next step
+        can gather its decode inputs from it (``tok_src``) without
+        minting a new jit variant, and warmup covers steady state.
+
+        Host staging buffers are pooled and double-buffered (alternating
+        per call, reuse distance 2): by the time a buffer is repacked
+        for step N+2, step N has drained, so even a zero-copy
+        ``jnp.asarray`` of the buffer can never race a pending read —
+        the SHARK-Engine fenced TransferBufferPool idiom."""
         S = len(sampling)
         assert S >= 1, "sampled step needs at least one sampling row"
-        Sb = self._bucket(S)
+        Sb = max(self._s_rows, self._bucket(S))
+        stage = self._staging[self._staging_i]
+        self._staging_i ^= 1
 
-        def pad(a, fill=0):
-            out = np.full((Sb,) + a.shape[1:], fill, a.dtype)
-            out[:S] = a
-            return out
+        def pad(name, a, fill=0):
+            shape = (Sb,) + a.shape[1:]
+            buf = stage.get((name,) + shape)
+            if buf is None or buf.dtype != a.dtype:
+                buf = stage[(name,) + shape] = np.empty(shape, a.dtype)
+            buf[:S] = a
+            buf[S:] = fill
+            return jnp.asarray(buf)
 
-        (token, lp, top_ids, top_lps), self.k_pages, self.v_pages = \
-            self._ragged_sample_jit(
-                self.params, self.k_pages, self.v_pages, *attn_args,
-                jnp.asarray(pad(sampling.parent)),
-                jnp.asarray(pad(sampling.seeds)),
-                jnp.asarray(pad(sampling.counters)),
-                jnp.asarray(pad(sampling.temperature)),
-                jnp.asarray(pad(sampling.top_k)),
-                jnp.asarray(pad(sampling.top_p)),
-                jnp.asarray(pad(sampling.min_p)),
-                jnp.asarray(pad(sampling.typical_p, 1)),
-                jnp.asarray(pad(sampling.freq_pen)),
-                jnp.asarray(pad(sampling.pres_pen)),
-                jnp.asarray(pad(sampling.rep_pen)),
-                jnp.asarray(pad(sampling.bias)),
-                jnp.asarray(pad(sampling.counts)),
-                jnp.asarray(pad(sampling.mask_bits, 0xFFFFFFFF)),
+        if sampling.use_counts:
+            self._ensure_planes(sampling.vocab)
+        if sampling.slot_ids is not None:
+            slot_rows = np.where(sampling.slot_ids < 0, self.max_slots,
+                                 sampling.slot_ids).astype(np.int32)
+        else:
+            slot_rows = np.zeros(S, np.int32)
+        if prev is not None:
+            prev_tok = prev.tokens
+        else:
+            prev_tok = self._zero_prev.get(self._s_rows)
+            if prev_tok is None:
+                prev_tok = self._zero_prev[self._s_rows] = jnp.zeros(
+                    self._s_rows, jnp.int32)
+        Bb = attn_args[2].shape[0]
+        Cb = attn_args[0].shape[0] // Bb
+        self._seen_buckets.add(
+            (Bb, Cb, Sb, int(prev_tok.shape[0]), n_top,
+             sampling.use_planes, sampling.use_counts,
+             sampling.all_greedy, sampling.need_logprobs))
+        (token, lp, top_ids, top_lps), self.k_pages, self.v_pages, \
+            self.count_planes = self._ragged_sample_jit(
+                self.params, self.k_pages, self.v_pages,
+                self.count_planes, *attn_args,
+                prev_tok, jnp.asarray(tok_src),
+                pad("parent", sampling.parent),
+                pad("seeds", sampling.seeds),
+                pad("counters", sampling.counters),
+                pad("temperature", sampling.temperature),
+                pad("top_k", sampling.top_k),
+                pad("top_p", sampling.top_p),
+                pad("min_p", sampling.min_p),
+                pad("typical_p", sampling.typical_p, 1),
+                pad("freq_pen", sampling.freq_pen),
+                pad("pres_pen", sampling.pres_pen),
+                pad("rep_pen", sampling.rep_pen),
+                pad("bias", sampling.bias),
+                pad("counts", sampling.counts),
+                pad("slot_rows", slot_rows, self.max_slots),
+                pad("mask_bits", sampling.mask_bits, 0xFFFFFFFF),
                 vocab=sampling.vocab, n_top=n_top,
                 use_planes=sampling.use_planes,
                 all_greedy=sampling.all_greedy,
-                need_logprobs=sampling.need_logprobs)
-        res = SampleResult(tokens=np.asarray(token)[:S],
-                           logprob=np.asarray(lp)[:S],
-                           top_ids=np.asarray(top_ids)[:S],
-                           top_lps=np.asarray(top_lps)[:S])
+                need_logprobs=sampling.need_logprobs,
+                use_counts=sampling.use_counts)
         self.n_sampled_tokens += S
-        self.host_sync_bytes += (res.tokens.nbytes + res.logprob.nbytes
-                                 + res.top_ids.nbytes
-                                 + res.top_lps.nbytes)
-        return res
+        return StepHandle(tokens=token, logprob=lp, top_ids=top_ids,
+                          top_lps=top_lps, n_rows=S, runner=self)
 
     def fork_seq(self, src_sid: int) -> int:
         """Copy-on-write fork of a live sequence: the new sequence shares
@@ -659,6 +846,109 @@ class PagedModelRunner:
         self.host_sync_bytes += out.nbytes
         return {s: out[i] for i, s in enumerate(sids)}
 
+    def rewind_tokens(self, sid: int, n: int = 1):
+        """Un-append the last ``n`` tokens of a live sequence — the
+        pipelined engine's lag-1 finish rewind (a speculative decode row
+        was dispatched for a sequence that turned out to have finished
+        one step earlier).  Drops the tokens from ``seq_tokens`` and
+        rolls the page cursor back, releasing a now-empty trailing page.
+        The caller must have materialized every in-flight step that
+        scatters into this sequence first: materialization blocks until
+        the step's K/V writes have landed, so a released page can be
+        reallocated without a stale write racing its new owner."""
+        toks = self.seq_tokens.get(sid)
+        if toks is not None and n:
+            del toks[len(toks) - n:]
+        self.pm.rewind_tokens(sid, n)
+        self.n_rewinds += 1
+
+    # -- device-resident penalty count planes ---------------------------
+    def _ensure_planes(self, vocab: int):
+        if self._plane_vocab != vocab:
+            self.count_planes = jnp.zeros(
+                (self.max_slots + 1, vocab), jnp.float32)
+            self._plane_vocab = vocab
+
+    def seed_counts(self, row: int, counts, vocab: int):
+        """Overwrite count-plane row ``row`` from a host ``{token:
+        count}`` mapping — called when a penalty-bearing request binds
+        (or re-binds, after preemption) a slot, so the in-jit gathers
+        see the sequence's true generated-token counts.  Rows of
+        released slots are left as garbage: they are only ever read
+        after the next penalty-bearing bind re-seeds them."""
+        self._ensure_planes(vocab)
+        vals = np.zeros(vocab, np.float32)
+        for t, c in counts.items():
+            if 0 <= t < vocab:
+                vals[t] = c
+        self.count_planes = self._seed_plane_jit(
+            self.count_planes, jnp.asarray(vals), row)
+
+    # -- jit-bucket warmup ----------------------------------------------
+    def warmup(self, vocab: int, buckets=None,
+               greedy=(False, True)) -> int:
+        """Precompile the fused sampled-step jit for the common ragged
+        buckets so first-hit compiles stop dominating TTFT.
+
+        Inputs are all-pad (contexts 0, K/V writes to the trash page,
+        greedy throwaway samples), so no sequence state, page content,
+        or runner step counter is touched.  Shapes and dtypes mirror
+        ``_dispatch_sampled`` exactly — a warmed variant IS the steady-
+        state variant.  Default buckets cover pure decode at 1 and
+        ``max_slots`` rows plus chunked prefill at ``chunk_size``, each
+        in both ``all_greedy`` flavors.  Returns the number of variants
+        compiled (also accumulated in ``warmup_compiles``)."""
+        if buckets is None:
+            sb = self._bucket(max(1, self.max_slots))
+            cb = self._bucket(max(1, self.chunk_size))
+            buckets = [(1, 1), (sb, 1), (sb, cb), (1, cb)]
+        Sb = self._s_rows
+        words = -(-vocab // 32)
+        f32 = jnp.float32
+        compiled = 0
+        for Bb, Cb in dict.fromkeys(buckets):
+            N = Bb * Cb
+            attn = (jnp.zeros(N, jnp.int32), jnp.zeros(N, jnp.int32),
+                    jnp.zeros((Bb, self.pm.pages_per_seq), jnp.int32),
+                    jnp.zeros(Bb, jnp.int32), jnp.zeros(Bb, jnp.int32),
+                    jnp.zeros(Bb, jnp.int32),
+                    jnp.full(N, self.trash_page, jnp.int32),
+                    jnp.zeros(N, jnp.int32))
+            for all_greedy in greedy:
+                key = (Bb, Cb, Sb, Sb, 0, False, False,
+                       bool(all_greedy), False)
+                if key in self._seen_buckets:
+                    continue
+                _, self.k_pages, self.v_pages, self.count_planes = \
+                    self._ragged_sample_jit(
+                        self.params, self.k_pages, self.v_pages,
+                        self.count_planes, *attn,
+                        jnp.zeros(Sb, jnp.int32),        # prev_tokens
+                        jnp.full(N, -1, jnp.int32),      # tok_src
+                        jnp.zeros(Sb, jnp.int32),        # parent
+                        jnp.zeros(Sb, jnp.uint32),       # seeds
+                        jnp.zeros(Sb, jnp.int32),        # counters
+                        jnp.zeros(Sb, f32),              # temperature
+                        jnp.zeros(Sb, jnp.int32),        # top_k
+                        jnp.zeros(Sb, f32),              # top_p
+                        jnp.zeros(Sb, f32),              # min_p
+                        jnp.ones(Sb, f32),               # typical_p
+                        jnp.zeros(Sb, f32),              # freq_pen
+                        jnp.zeros(Sb, f32),              # pres_pen
+                        jnp.zeros(Sb, f32),              # rep_pen
+                        jnp.zeros((Sb, 1), f32),         # bias
+                        jnp.zeros((Sb, 1), f32),         # counts
+                        jnp.full(Sb, self.max_slots, jnp.int32),
+                        jnp.full((Sb, words), 0xFFFFFFFF, jnp.uint32),
+                        vocab=vocab, n_top=0, use_planes=False,
+                        all_greedy=bool(all_greedy),
+                        need_logprobs=False, use_counts=False)
+                self._seen_buckets.add(key)
+                compiled += 1
+        jax.block_until_ready(self.k_pages)   # compiles charged to warmup
+        self.n_warmup_compiles += compiled
+        return compiled
+
     def free(self, seq_id: int, publish: bool = False):
         """Release a sequence.  With ``publish=True`` (and the prefix
         cache enabled) its pages are first inserted into the cache so a
@@ -690,6 +980,10 @@ class PagedModelRunner:
                "sampled_tokens": self.n_sampled_tokens,
                "host_logit_rows": self.host_logit_rows,
                "host_sync_bytes": self.host_sync_bytes,
+               "host_block_s": self.t_block_s,
+               "jit_buckets": len(self._seen_buckets),
+               "warmup_compiles": self.n_warmup_compiles,
+               "rewinds": self.n_rewinds,
                "attn_kernel_calls": (self.n_ragged_steps
                                      + self.n_prefill_chunks
                                      + self.n_decode_steps)}
@@ -773,23 +1067,47 @@ class PagedEngineBackend:
 
     def run_step(self, rows: List[Tuple[int, List[int], str]],
                  sampling: Optional[SamplingParamsBatch] = None,
-                 n_top: int = 0, return_logits: bool = True):
+                 n_top: int = 0, return_logits: bool = True,
+                 materialize: bool = True, prev=None,
+                 decode_srcs: Optional[Dict[int, int]] = None):
         """Fused plan execution: ``rows`` are ``(slot, tokens, kind)``
         ragged rows (see :meth:`PagedModelRunner.run_step`); one
         attention kernel call covers them all.  With ``sampling``
         (``parent`` indexes into ``rows``) the step samples on device
-        and returns a :class:`SampleResult`; otherwise per-slot
-        last-valid-token logits return (the legacy/test path) — or
-        nothing at all with ``return_logits=False``.  Raises
-        :class:`OutOfPages` before any state mutates when the pool
-        cannot back the whole step."""
+        and returns a :class:`SampleResult` — or, with
+        ``materialize=False``, a non-blocking :class:`StepHandle` (the
+        pipelined engine path; ``prev``/``decode_srcs`` feed decode
+        tokens device-to-device from the previous handle, keyed by row
+        index, which is invariant under the slot→seq mapping).
+        Otherwise per-slot last-valid-token logits return (the
+        legacy/test path) — or nothing at all with
+        ``return_logits=False``.  Raises :class:`OutOfPages` before any
+        state mutates when the pool cannot back the whole step."""
         out = self.runner.run_step(
             [(self._slot_seq[slot], toks, kind)
              for slot, toks, kind in rows],
-            sampling=sampling, n_top=n_top, return_logits=return_logits)
+            sampling=sampling, n_top=n_top, return_logits=return_logits,
+            materialize=materialize, prev=prev, decode_srcs=decode_srcs)
         if sampling is not None or not return_logits:
             return out
         return {slot: out[self._slot_seq[slot]] for slot, _, _ in rows}
+
+    def seed_counts(self, slot: int, counts, vocab: int):
+        """Seed the device count-plane row for ``slot`` (engine slots
+        double as plane rows — both spaces are ``0..max_slots-1``) from
+        the host sampler's generated-token counts."""
+        self.runner.seed_counts(slot, counts, vocab)
+
+    def rewind_token(self, slot: int):
+        """Lag-1 finish rewind: un-append ``slot``'s speculative token
+        (page cursor + recorded token), see
+        :meth:`PagedModelRunner.rewind_tokens`."""
+        self.runner.rewind_tokens(self._slot_seq[slot], 1)
+
+    def warmup(self, vocab: int) -> int:
+        """Precompile the common fused-step jit buckets (see
+        :meth:`PagedModelRunner.warmup`); returns variants compiled."""
+        return self.runner.warmup(vocab)
 
     def fork_slot(self, src_slot: int, dst_slot: int):
         """CoW-fork ``src_slot``'s sequence into ``dst_slot`` (shared

@@ -214,30 +214,54 @@ class SamplingParamsBatch:
     pres_pen: np.ndarray      # [S] f32
     rep_pen: np.ndarray       # [S] f32
     bias: np.ndarray          # [S, V] f32 ([S, 1] when not use_planes)
-    counts: np.ndarray        # [S, V] f32 ([S, 1] when not use_planes)
+    counts: np.ndarray        # [S, V] f32 ([S, 1] when not use_planes/counts)
     mask_bits: np.ndarray     # [S, ceil(V/32)] uint32
-    vocab: int
-    use_planes: bool = True   # static: any bias/penalty row in batch
+    #: [S] int32 — device count-plane row per sampling row (the engine
+    #: slot; -1 = no slot, runner maps it to the trash row)
+    slot_ids: np.ndarray = None
+    vocab: int = 0
+    use_planes: bool = True   # static: any bias row in batch
     all_greedy: bool = False  # static: every row temperature == 0
     #: static: some consumer requested logprobs (set by the engine —
     #: the builder only sees samplers); False skips the [S, V]
     #: log-softmax on device
     need_logprobs: bool = True
+    #: static: penalties read the DEVICE-RESIDENT count planes (gathered
+    #: by ``slot_ids`` and scatter-updated with each sampled token
+    #: inside the fused step) instead of a host-uploaded dense plane —
+    #: the engine path; the ``counts`` field is then placeholder [S, 1]
+    use_counts: bool = False
 
     def __len__(self) -> int:
         return int(self.parent.shape[0])
 
     @classmethod
     def build(cls, specs: List[Tuple[int, object, Optional[np.ndarray]]],
-              vocab: int) -> "SamplingParamsBatch":
+              vocab: int, slot_ids: Optional[List[int]] = None,
+              counters: Optional[List[int]] = None
+              ) -> "SamplingParamsBatch":
         """Pack ``(parent_row, RequestSampler, packed_bitmask|None)``
         specs into device-ready arrays (all-ones bitmask = row
-        unconstrained)."""
+        unconstrained).
+
+        With ``slot_ids`` (the engine path) rows that carry penalties
+        read the device-resident count planes (``use_counts``) and the
+        host ``counts`` plane stays placeholder; without it (direct
+        callers, tests, the oracle benches) penalties ship the legacy
+        dense host plane.  ``counters`` overrides each row's PRNG
+        counter — the pipelined engine adds the in-flight token a
+        sequence has sampled but not yet observed, keeping seeded runs
+        bit-identical to the sequential path."""
         s_count = len(specs)
         words = -(-vocab // 32)
+        has_pen = any(
+            bool(sampler.frequency_penalty or sampler.presence_penalty
+                 or sampler.repetition_penalty != 1.0)
+            for _, sampler, _ in specs)
+        use_counts = has_pen and slot_ids is not None
         use_planes = any(
             bool(sampler.logit_bias)
-            or (bool(sampler.counts)
+            or (not use_counts and bool(sampler.counts)
                 and bool(sampler.frequency_penalty
                          or sampler.presence_penalty
                          or sampler.repetition_penalty != 1.0))
@@ -256,15 +280,20 @@ class SamplingParamsBatch:
             pres_pen=np.zeros(s_count, np.float32),
             rep_pen=np.ones(s_count, np.float32),
             bias=np.zeros((s_count, plane_v), np.float32),
-            counts=np.zeros((s_count, plane_v), np.float32),
+            counts=np.zeros(
+                (s_count, plane_v if not use_counts else 1), np.float32),
             mask_bits=np.full((s_count, words), 0xFFFFFFFF, np.uint32),
-            vocab=vocab, use_planes=use_planes,
+            slot_ids=np.full(s_count, -1, np.int32),
+            vocab=vocab, use_planes=use_planes, use_counts=use_counts,
             all_greedy=all(sampler.temperature == 0.0
                            for _, sampler, _ in specs))
+        if slot_ids is not None:
+            out.slot_ids[:] = slot_ids
         for s, (row, sampler, bitmask) in enumerate(specs):
             out.parent[s] = row
             out.seeds[s] = np.uint32(sampler.seed & 0xFFFFFFFF)
-            out.counters[s] = sampler.n_sampled
+            out.counters[s] = (sampler.n_sampled if counters is None
+                               else counters[s])
             out.temperature[s] = sampler.temperature
             out.top_k[s] = sampler.top_k
             out.top_p[s] = sampler.top_p
@@ -277,9 +306,10 @@ class SamplingParamsBatch:
                 for t, b in sampler.logit_bias.items():
                     if 0 <= t < vocab:
                         out.bias[s, t] = b
-                for t, c in sampler.counts.items():
-                    if 0 <= t < vocab:
-                        out.counts[s, t] = c
+                if not use_counts:
+                    for t, c in sampler.counts.items():
+                        if 0 <= t < vocab:
+                            out.counts[s, t] = c
             if bitmask is not None:
                 out.mask_bits[s, :bitmask.shape[0]] = bitmask
                 out.mask_bits[s, bitmask.shape[0]:] = 0

@@ -213,10 +213,19 @@ class Scheduler:
         # next_token while its prompt is being re-prefilled — it must
         # NOT decode until the chunk cursor catches up, or the token's
         # K/V would land mid-prompt
+        # ``inflight_src`` marks a pipelined decode whose input token is
+        # still on device (sampled by the in-flight step) — it decodes
+        # via a device-to-device gather, no host token needed.  A
+        # sequence whose prefill just dispatched its final chunk
+        # (prefill_ids still set, remaining 0) sits out one step: its
+        # first sampled token only becomes gatherable after the
+        # completing step is in flight.
         plan.decode = [
             seq for seq in (self.running[s] for s in self.active_slots)
-            if getattr(seq, "next_token", None) is not None
-            and not int(getattr(seq, "prefill_remaining", 0) or 0)]
+            if (getattr(seq, "next_token", None) is not None
+                or getattr(seq, "inflight_src", None) is not None)
+            and not int(getattr(seq, "prefill_remaining", 0) or 0)
+            and getattr(seq, "prefill_ids", None) is None]
         for seq in plan.decode:
             plan.layout.add(seq, 1, "decode")
         used = len(plan.decode)
@@ -224,6 +233,10 @@ class Scheduler:
         for slot in sorted(self.running,
                            key=lambda s: self._admitted_at.get(s, 0)):
             seq = self.running[slot]
+            if getattr(seq, "finish_reason", None) is not None:
+                # finished but release-deferred (it still has a row in
+                # the pipeline's in-flight step): plan nothing for it
+                continue
             rem = int(getattr(seq, "prefill_remaining", 0) or 0)
             while rem > 0 and used < token_budget:
                 n = min(rem, chunk_size or rem, token_budget - used)

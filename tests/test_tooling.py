@@ -96,6 +96,16 @@ def test_benchmarks_smoke():
     assert sync and sync[0].split(",")[2] == "0logit_rows", out
     assert any(ln.startswith("engine/mixed_sample_ms_per_step")
                for ln in lines), out
+    # pipelined engine loop: overlap observability rows + the depth-1
+    # vs depth-2 comparison must be reported, and the loop never holds
+    # more than 2 steps in flight
+    for row in ("engine/mixed_dispatch_gap_ms",
+                "engine/mixed_host_ms_per_step",
+                "engine/pipeline_speedup"):
+        assert any(ln.startswith(row) for ln in lines), (row, out)
+    inflight = [ln for ln in lines
+                if ln.startswith("engine/mixed_inflight_steps")]
+    assert inflight and float(inflight[0].split(",")[1]) <= 2, out
     assert any(ln.startswith("kernel/batched_sample") for ln in lines), out
     # the run records the perf trajectory in-repo
     report = ROOT / "BENCH_ragged_step.json"
