@@ -81,6 +81,24 @@ from repro.tokenizer import ByteBPETokenizer, DetokStreamer
 _SENTINEL = object()
 
 
+def _prompt_lookup(ctx: List[int], k: int, max_ngram: int = 3) -> List[int]:
+    """Draft up to ``k`` tokens by n-gram prompt lookup against the
+    sequence's OWN context (prompt + generated + pending token): find
+    an earlier occurrence of the trailing n-gram — longest ``n`` wins,
+    then the LATEST occurrence — and propose the tokens that followed
+    it.  Pure position arithmetic over host ints, deterministic, no
+    model involved; wrong guesses only cost rejected verify rows."""
+    L = len(ctx)
+    if k <= 0 or L < 2:
+        return []
+    for n in range(min(max_ngram, L - 1), 0, -1):
+        tail = ctx[L - n:]
+        for j in range(L - n - 1, -1, -1):
+            if ctx[j:j + n] == tail:
+                return ctx[j + n:j + n + k]
+    return []
+
+
 class _GrammarDeadEnd(Exception):
     """A sampling row's grammar matcher allows NO token (the host
     sampler's loud "grammar mask excludes every token" case) — carries
@@ -206,6 +224,11 @@ class _LoadedModel:
     gap_s: float = 0.0                # device idle between dispatches
     t_last_ready: float = 0.0         # monotonic stamp of last drain
     host_s: float = 0.0               # host time not hidden by device
+    # -- speculative decoding (loop-thread confined counters) --------
+    speculation: str = "off"          # "off" | "prompt_lookup"
+    draft_k: int = 0                  # draft tokens per verify window
+    drafted: int = 0                  # draft tokens dispatched
+    accepted: int = 0                 # draft tokens accepted (emitted)
 
 
 class EngineCrashed(RuntimeError):
@@ -258,7 +281,8 @@ class MLCEngine:
                    max_cached_pages: Optional[int] = None,
                    max_cached_bytes: Optional[int] = None,
                    pipeline_depth: Optional[int] = None,
-                   warmup: bool = False):
+                   warmup: bool = False,
+                   speculation: str = "off", draft_k: int = 4):
         """Load a model under ``name`` for ``chat_completions_create``.
 
         Backends: ``"paged"`` serves every request through the paged KV
@@ -313,7 +337,21 @@ class MLCEngine:
             Precompile the common ragged jit buckets at load (paged
             only), so first-hit compiles stop dominating TTFT; the
             variant count lands in ``stats()["runner"]
-            ["warmup_compiles"]``.
+            ["warmup_compiles"]``.  With speculation enabled the
+            draft-row shapes are warmed too.
+        ``speculation`` / ``draft_k``
+            ``"prompt_lookup"`` (paged only) turns on speculative
+            decoding: each eligible decode row drafts up to ``draft_k``
+            tokens by n-gram lookup against the sequence's own context
+            (falling back to the radix prefix tree), verifies the whole
+            window inside the SAME fused step (one attention kernel
+            call, one sampling call), and accepts the longest prefix
+            whose positions resampled exactly their drafts — rejected
+            positions rewind KV (``rewinds`` stat).  Counter-based
+            Gumbel keys make seeded spec-on runs token-for-token
+            identical to ``"off"``.  Grammar-constrained and
+            penalty-bearing sequences never draft.  ``"off"``
+            (default) disables drafting.
 
         Failure modes: a prompt that cannot fit the page pool even
         alone fails its request with ``RuntimeError`` instead of
@@ -363,13 +401,18 @@ class MLCEngine:
         if backend != "paged":
             pipeline_depth = 1        # dense has no non-blocking step
         assert pipeline_depth in (1, 2), pipeline_depth
+        assert speculation in ("off", "prompt_lookup"), speculation
+        if backend != "paged":
+            speculation = "off"       # dense has no fused verify step
+        assert draft_k >= 1, draft_k
         lm = _LoadedModel(
             runner=runner, tokenizer=tokenizer, scheduler=scheduler,
             backend=backend, token_budget=token_budget,
             prefill_chunk_size=prefill_chunk_size,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth, speculation=speculation,
+            draft_k=(draft_k if speculation != "off" else 0))
         if warmup and backend == "paged":
-            runner.warmup(tokenizer.vocab_size)
+            runner.warmup(tokenizer.vocab_size, draft_k=lm.draft_k)
         with self._lock:
             # publish under the lock, like unload_model pops under it:
             # the loop thread snapshots ``models`` while holding it
@@ -611,7 +654,8 @@ class MLCEngine:
             if plan is None:
                 plan = sched.plan_step(
                     lm.token_budget, chunk_size=lm.prefill_chunk_size,
-                    admission_info=lambda r: self._probe(lm, r))
+                    admission_info=lambda r: self._probe(lm, r),
+                    draft_k=lm.draft_k)
             return busy | self._step_fused(lm, plan)
         plan = sched.plan_step(
             lm.token_budget, chunk_size=None,
@@ -678,6 +722,58 @@ class MLCEngine:
                              - (self._block_s(lm) - blk0))
         return work
 
+    def _draft_tokens(self, lm: _LoadedModel, seq: _Seq,
+                      devfed: bool = False) -> List[int]:
+        """Propose up to ``draft_k`` draft tokens for ``seq``'s next
+        decode row (the speculative verify window's tail).
+
+        Eligibility: no grammar matcher (grammar traffic runs the
+        depth-1 flush path at k=0 — the bitmask for a window position
+        would depend on unverified drafts) and no frequency/presence/
+        repetition penalty (in-window draws would read count planes
+        stale by the window's own earlier tokens).  ``k`` shrinks near
+        ``max_tokens``/``max_context`` so window KV never writes past
+        either limit.
+
+        ``devfed``: the window's first input is still on device (the
+        in-flight step's sampled token), so the lookup anchors one
+        token earlier — on the last HOST-known context — and the
+        matched continuation's first token serves as the guess for the
+        device-fed token itself; the drafts are the tokens after it.
+        A wrong guess just makes the window reject (row 0 always
+        emits), so pipelined speculation never blocks on the host
+        seeing the token.
+
+        Draft sources: the sequence's own context first (prompt
+        lookup), then the radix prefix tree
+        (``PrefixCache.lookup_continuation`` — both engine-loop
+        confined reads)."""
+        sp = seq.sampler
+        if (lm.speculation != "prompt_lookup" or lm.draft_k <= 0
+                or seq.matcher is not None
+                or sp.frequency_penalty or sp.presence_penalty
+                or sp.repetition_penalty != 1.0):
+            return []
+        lag = 3 if devfed else 2       # device-fed rows lag one token
+        k = min(lm.draft_k,
+                seq.request.req.max_tokens - len(seq.generated) - lag,
+                lm.runner.max_context - seq.pos - lag)
+        if k <= 0:
+            return []
+        ctx = seq.request.prompt_ids + list(seq.generated)
+        if not devfed:
+            ctx = ctx + [seq.next_token]
+        want = k + 1 if devfed else k
+        drafts = _prompt_lookup(ctx, want)
+        if not drafts:
+            pc = getattr(lm.runner, "prefix_cache", None)
+            if pc is not None:
+                drafts = pc.lookup_continuation(ctx, want)
+        if devfed:
+            drafts = drafts[1:]        # [0] is the guess for the
+            #                            device-fed token itself
+        return [int(t) for t in drafts[:k]]
+
     def _plan_rows(self, lm: _LoadedModel, plan):
         """Revalidate the planner's ragged layout against current state
         (sequences finish/abort between planning and dispatch) and
@@ -703,15 +799,26 @@ class MLCEngine:
                           and seq.inflight_src is not None)
                 if not devfed and seq.next_token is None:
                     continue
+                if not devfed and seq.n_inflight > 0:
+                    # a speculative verify window is in flight: how many
+                    # of its tokens survive is data-dependent, so the
+                    # sequence sits this step out and resumes host-fed
+                    # after the window drains
+                    continue
                 if devfed and (len(seq.generated) + 2
                                >= seq.request.req.max_tokens
                                or seq.pos + 2 >= lm.runner.max_context):
                     continue                   # finish certain: no row
                 if devfed:
                     srcs[len(rows)] = seq.inflight_src
-                    rows.append((seq, [0], "decode"))  # placeholder id
+                    drafts = self._draft_tokens(lm, seq, devfed=True)
+                    # offset 0 is the placeholder the fused step swaps
+                    # for the in-flight step's sampled token
+                    rows.append((seq, [0] + drafts, "decode"))
                 else:
-                    rows.append((seq, [seq.next_token], "decode"))
+                    drafts = self._draft_tokens(lm, seq)
+                    rows.append((seq, [seq.next_token] + drafts,
+                                 "decode"))
                 continue
             if (seq.slot < 0 or seq.finish_reason is not None
                     or seq.request.aborted or seq.prefill_remaining <= 0):
@@ -837,7 +944,15 @@ class MLCEngine:
         for seq, toks, kind in rows:
             seq.n_inflight += 1
             completes = False
-            if kind == "decode":
+            if kind == "decode" and len(toks) > 1:
+                # speculative verify window: the surviving token is
+                # data-dependent, so there is no single sampling row
+                # the next step could gather from — the sequence sits
+                # out one step (see _plan_rows) and resumes host-fed
+                seq.inflight_of = h
+                seq.inflight_src = None
+                lm.drafted += len(toks) - 1
+            elif kind == "decode":
                 seq.inflight_of = h
                 seq.inflight_src = srcmap[id(seq)]
             else:
@@ -856,7 +971,8 @@ class MLCEngine:
             # plan step N+1 behind the device, from post-drain state
             lm.next_plan = lm.scheduler.plan_step(
                 lm.token_budget, chunk_size=lm.prefill_chunk_size,
-                admission_info=lambda r: self._probe(lm, r))
+                admission_info=lambda r: self._probe(lm, r),
+                draft_k=lm.draft_k)
         return True
 
     def _drain(self, lm: _LoadedModel):
@@ -871,10 +987,20 @@ class MLCEngine:
         advance — one step behind the device at depth 2.
 
         Lag-1 finish: a row dispatched speculatively for a sequence
-        that finished at the PREVIOUS drain is skipped, its input token
-        un-appended (page cursor + recorded token), and the deferred
-        slot/page release performed — before any publish can see the
-        speculative token."""
+        that finished at the PREVIOUS drain is skipped, its input
+        tokens un-appended (page cursor + recorded tokens), and the
+        deferred slot/page release performed — before any publish can
+        see the speculative tokens.
+
+        A speculative verify window retires 1..k+1 tokens: its window
+        inputs were all appended (KV written) at dispatch, so the drain
+        consumes emitted positions in order — each consumed input IS
+        the previous position's emitted draw — stopping at the first
+        non-emitted row or an EOS/stop/length finish, then rewinds
+        every unconsumed input (lag-k).  ``n_inflight`` is decremented
+        only AFTER consumption so a mid-window finish defers its
+        release past the rewind (``pending_release``), keeping rejected
+        draft tokens out of any prefix-cache publish."""
         try:
             res = h.handle.materialize()
         except Exception as e:
@@ -895,29 +1021,48 @@ class MLCEngine:
                 self._maybe_release(lm, seq)
             return
         lm.t_last_ready = time.monotonic()
-        sampled = {}             # id(consumer seq) -> its sample row
+        sampled = {}    # id(consumer seq) -> its sample rows, in order
         for i, s in enumerate(h.consumers):
-            sampled[id(s)] = (int(res.tokens[i]), float(res.logprob[i]),
-                              res.top_ids[i], res.top_lps[i])
+            sampled.setdefault(id(s), []).append(
+                (int(res.tokens[i]), float(res.logprob[i]),
+                 res.top_ids[i], res.top_lps[i], bool(res.emit[i])))
         for seq, toks, kind, completes in h.rows:
-            seq.n_inflight -= 1
             if seq.inflight_of is h:
                 seq.inflight_of = None
                 seq.inflight_src = None
             if seq.finish_reason is not None or seq.slot < 0:
+                seq.n_inflight -= 1
                 if kind == "decode" and seq.slot >= 0:
-                    lm.runner.rewind_token(seq.slot)   # lag-1 rewind
+                    # lag-1 (or whole-window lag-k) finish rewind
+                    lm.runner.rewind_token(seq.slot, len(toks))
                 self._maybe_release(lm, seq)
                 continue
             if kind == "decode":
-                seq.generated.append(seq.next_token)
-                seq.pos += 1
-                self._consume_sampled(lm, seq, sampled[id(seq)])
-            elif completes and seq.prefill_ids is not None:
-                try:
-                    self._complete_prefill(lm, seq, sampled=sampled)
-                except Exception as e:     # CoW fork ran out of pages
-                    self._recover_prefill_failure(lm, seq.request, e)
+                consumed = 0
+                for t, lp, tids, tlps, em in sampled[id(seq)][:len(toks)]:
+                    if not em:
+                        break         # draft mismatch: fresh draw below
+                    #                   is garbage, sequential path ends
+                    seq.generated.append(seq.next_token)
+                    seq.pos += 1
+                    consumed += 1
+                    self._consume_sampled(lm, seq, (t, lp, tids, tlps))
+                    if seq.finish_reason is not None:
+                        break
+                if len(toks) > 1:
+                    lm.accepted += consumed - 1
+                rew = len(toks) - consumed
+                if rew and seq.slot >= 0:
+                    lm.runner.rewind_token(seq.slot, rew)  # lag-k rewind
+                seq.n_inflight -= 1
+                self._maybe_release(lm, seq)
+            else:
+                seq.n_inflight -= 1
+                if completes and seq.prefill_ids is not None:
+                    try:
+                        self._complete_prefill(lm, seq, sampled=sampled)
+                    except Exception as e:   # CoW fork ran out of pages
+                        self._recover_prefill_failure(lm, seq.request, e)
 
     def _maybe_release(self, lm: _LoadedModel, seq: _Seq):
         """Perform a finish/abort release that was deferred while the
@@ -940,16 +1085,48 @@ class MLCEngine:
         post-last-accepted-token here); a matcher that allows NO token
         raises :class:`_GrammarDeadEnd` naming the affected requests —
         the device op would otherwise sample a grammar-illegal token
-        silently where the host sampler always failed loudly.  Returns
+        silently where the host sampler always failed loudly.
+
+        A decode row carrying a draft tail (speculative verify window,
+        ``len(toks) == 1 + k``) packs k+1 CONSECUTIVE sampling rows for
+        the same consumer — one per window position, gathering that
+        position's logits (``offsets``), drawing at PRNG counter
+        ``n_sampled + i`` (exactly where the sequential path's draw
+        would land: only emitted tokens are ever observed), and
+        carrying the NEXT window input as the draft to verify
+        (``draft_toks``; the in-jit acceptance scan emits a row iff
+        every earlier window row resampled its own draft).  Returns
         ``(batch | None, consumer seqs in batch order, bucketed
         top-logprobs K)``."""
         specs: List[tuple] = []
         consumers: List[_Seq] = []
         slot_ids: List[int] = []
         counters: List[int] = []
+        offs: List[int] = []          # sampling slot within parent row
+        dts: List[int] = []           # draft token to verify (-1: none)
+        wos: List[int] = []           # offset inside the verify window
         dead: Dict[int, _Request] = {}
         n_top = 0
         for b, (seq, toks, kind) in enumerate(rows):
+            if kind == "decode" and len(toks) > 1:
+                # speculative verify window (eligibility in
+                # _draft_tokens guarantees no matcher here); a
+                # device-fed window's first input is still unobserved
+                # by its sampler, so every window counter shifts by one
+                base = (seq.sampler.n_sampled
+                        + (1 if srcs and b in srcs else 0))
+                for i in range(len(toks)):
+                    specs.append((b, seq.sampler, None))
+                    consumers.append(seq)
+                    slot_ids.append(seq.slot)
+                    counters.append(base + i)
+                    offs.append(i)
+                    dts.append(toks[i + 1] if i + 1 < len(toks) else -1)
+                    wos.append(i)
+                req = seq.request.req
+                if req.logprobs and req.top_logprobs > 0:
+                    n_top = max(n_top, req.top_logprobs)
+                continue
             if kind == "decode":
                 targets = [seq]
             elif len(toks) == seq.prefill_remaining:
@@ -973,6 +1150,9 @@ class MLCEngine:
                 # where the sequential path's would
                 counters.append(s.sampler.n_sampled
                                 + (1 if srcs and b in srcs else 0))
+                offs.append(len(toks) - 1)
+                dts.append(-1)
+                wos.append(0)
                 req = s.request.req
                 if req.logprobs and req.top_logprobs > 0:
                     n_top = max(n_top, req.top_logprobs)
@@ -986,6 +1166,9 @@ class MLCEngine:
         batch = SamplingParamsBatch.build(specs, vocab,
                                           slot_ids=slot_ids,
                                           counters=counters)
+        batch.offsets = np.asarray(offs, np.int32)
+        batch.draft_toks = np.asarray(dts, np.int32)
+        batch.win_off = np.asarray(wos, np.int32)
         batch.need_logprobs = any(s.request.req.logprobs
                                   for s in consumers)
         return batch, consumers, n_top
@@ -1241,8 +1424,9 @@ class MLCEngine:
         """The last prompt chunk landed: CoW-fork any waiting siblings
         off the now-complete prompt KV, then consume the first tokens
         the fused step already sampled on device (``sampled`` maps
-        ``id(seq)`` to each consumer's sample row — siblings drew from
-        the same logits row with their own seeds)."""
+        ``id(seq)`` to each consumer's sample rows — siblings drew from
+        the same logits row with their own seeds; prefill completions
+        always carry exactly one sample row per consumer)."""
         r = seq.request
         seq.prefill_ids = None
         seq.prefill_pos = 0
@@ -1262,7 +1446,7 @@ class MLCEngine:
                 self._emit_role(r, s)
                 s.role_sent = True
             if s.next_token is None:           # fresh (not resumed) seq
-                self._consume_sampled(lm, s, sampled[id(s)])
+                self._consume_sampled(lm, s, sampled[id(s)][0][:4])
 
     def _prefill_dense(self, lm: _LoadedModel, r: _Request,
                        pending: List[_Seq]):
@@ -1598,7 +1782,10 @@ class MLCEngine:
             {"backend": "paged" | "dense",
              "engine":    {"exec_steps": ...,    # steps that dispatched work
                            "pipeline_depth": ..., "inflight_steps": ...,
-                           "dispatch_gap_ms": ..., "host_ms_per_step": ...},
+                           "dispatch_gap_ms": ..., "host_ms_per_step": ...,
+                           "speculation": ..., "draft_k": ...,
+                           "drafted": ..., "accepted": ...,
+                           "accept_rate": ...},
              "scheduler": {"waiting": ..., "running": ..., "plans": ...,
                            "admitted": ..., "preemptions": ..., "pages": ...},
              "runner":    {"attn_kernel_calls": ..., "ragged_steps": ...,
@@ -1621,7 +1808,13 @@ class MLCEngine:
                     "dispatch_gap_ms": round(
                         1000.0 * lm.gap_s / max(1, lm.exec_steps), 3),
                     "host_ms_per_step": round(
-                        1000.0 * lm.host_s / max(1, lm.exec_steps), 3)},
+                        1000.0 * lm.host_s / max(1, lm.exec_steps), 3),
+                    "speculation": lm.speculation,
+                    "draft_k": lm.draft_k,
+                    "drafted": lm.drafted,
+                    "accepted": lm.accepted,
+                    "accept_rate": round(
+                        lm.accepted / max(1, lm.drafted), 4)},
                 "scheduler": lm.scheduler.stats(),
                 "runner": lm.runner.stats()}
 

@@ -160,12 +160,15 @@ class PageManager:
 
     def rewind_tokens(self, seq_id: int, n: int = 1):
         """Roll the sequence's cursor back ``n`` tokens and drop any
-        trailing page the rolled-back tokens had forced into existence
-        (the pipelined engine's lag-1 finish rewind: a speculatively
-        appended token is un-appended).  Only pages *beyond* the new
-        length are released — an appended token never lands in a shared
-        page (writes go to private pages only), so the deref can never
-        free another sequence's or the prefix cache's data."""
+        trailing pages the rolled-back tokens had forced into existence
+        (lag-1: the pipelined engine's finish rewind; lag-k: the
+        rejected tail of a speculative verify window).  Only pages
+        *beyond* the new length are released — appended tokens never
+        land in shared pages (``append_tokens`` allocates private
+        pages; adoption shares only FULL pages and ``fork`` copies the
+        partial tail), so even a rewind that crosses page boundaries,
+        follows a CoW fork, or sits next to prefix-cache-published
+        pages can only pop pages this sequence privately owns."""
         alloc = self.seqs[seq_id]
         assert 0 <= n <= alloc.length, (seq_id, n, alloc.length)
         alloc.length -= n

@@ -49,7 +49,7 @@ from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SampleResult, SamplingParamsBatch
 from repro.kernels.ops import (paged_attention, paged_prefill_attention,
                                paged_ragged_attention)
-from repro.kernels.sampling import batched_sample
+from repro.kernels.sampling import batched_accept, batched_sample
 from repro.models import model
 from repro.models.attention import _project, _qk_norm
 from repro.models.layers import apply_rope, mlp, rmsnorm
@@ -83,6 +83,9 @@ class StepHandle:
     top_lps: object           # jax.Array [Sb, K] f32
     n_rows: int               # valid sampling rows (<= Sb)
     runner: "PagedModelRunner"
+    #: jax.Array [Sb] bool — per-row speculative acceptance (all-True
+    #: when the step carried no draft windows)
+    emit: object = None
     #: (sid, index into seq_tokens[sid], sampling row) placeholders
     #: written by device-fed decode rows of the NEXT step, which
     #: consume THIS handle's tokens — resolved at materialize
@@ -111,9 +114,13 @@ class StepHandle:
             tokens=tok[:self.n_rows],
             logprob=np.asarray(self.logprob)[:self.n_rows],
             top_ids=np.asarray(self.top_ids)[:self.n_rows],
-            top_lps=np.asarray(self.top_lps)[:self.n_rows])
+            top_lps=np.asarray(self.top_lps)[:self.n_rows],
+            emit=(np.asarray(self.emit)[:self.n_rows]
+                  if self.emit is not None
+                  else np.ones(self.n_rows, bool)))
         r.host_sync_bytes += (res.tokens.nbytes + res.logprob.nbytes
-                              + res.top_ids.nbytes + res.top_lps.nbytes)
+                              + res.top_ids.nbytes + res.top_lps.nbytes
+                              + res.emit.nbytes)
         for sid, pos, src in self.backfills:
             toks = r.seq_tokens.get(sid)
             if toks is not None and pos < len(toks):
@@ -327,9 +334,9 @@ class PagedModelRunner:
             logits = x @ params["lm_head"]
         return logits[0], k_pages, v_pages
 
-    def _ragged_step(self, params, k_pages, v_pages, tokens, pos,
-                     page_tables, contexts, starts, lengths,
-                     page_idx, page_off):
+    def _ragged_logits(self, params, k_pages, v_pages, tokens, pos,
+                       page_tables, contexts, starts, lengths,
+                       page_idx, page_off):
         """One fused ragged step over B packed rows of C slots each.
 
         tokens/pos/page_idx/page_off [B*C] (row b occupies the slice
@@ -338,8 +345,11 @@ class PagedModelRunner:
         B*C slots are scattered into pages (pads land in the trash page)
         and every row attends to its OWN page-table row with per-row
         causal masking — one attention kernel invocation per layer for
-        the whole step.  Returns each row's last-valid-slot logits
-        [B, V]."""
+        the whole step.  Returns each row's FULL per-slot logits
+        [B, C, V]: speculative verify windows sample several offsets of
+        one row, so the reduce to one position per row happens in the
+        caller (``_ragged_step`` keeps the last-valid-slot [B, V]
+        semantics for the legacy logits path)."""
         cfg = self.cfg
         B = page_tables.shape[0]
         N = tokens.shape[0]
@@ -371,7 +381,17 @@ class PagedModelRunner:
             logits = x @ params["embed"].T
         else:
             logits = x @ params["lm_head"]
-        logits = logits[0].reshape(B, C, -1)
+        return logits[0].reshape(B, C, -1), k_pages, v_pages
+
+    def _ragged_step(self, params, k_pages, v_pages, tokens, pos,
+                     page_tables, contexts, starts, lengths,
+                     page_idx, page_off):
+        """Legacy logits-path reduce over :meth:`_ragged_logits`: each
+        row's last-valid-slot logits [B, V]."""
+        logits, k_pages, v_pages = self._ragged_logits(
+            params, k_pages, v_pages, tokens, pos, page_tables,
+            contexts, starts, lengths, page_idx, page_off)
+        C = logits.shape[1]
         last = jnp.clip(lengths - 1, 0, C - 1)
         out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
         return out, k_pages, v_pages
@@ -379,10 +399,10 @@ class PagedModelRunner:
     def _ragged_sample_step(self, params, k_pages, v_pages, count_planes,
                             tokens, pos, page_tables, contexts, starts,
                             lengths, page_idx, page_off, prev_tokens,
-                            tok_src, parent, seeds, counters,
+                            tok_src, parent, offsets, seeds, counters,
                             temperature, top_k, top_p, min_p, typical_p,
                             freq_pen, pres_pen, rep_pen, bias, counts,
-                            slot_rows, mask_bits,
+                            slot_rows, mask_bits, draft_toks, win_off,
                             *, vocab: int, n_top: int,
                             use_planes: bool, all_greedy: bool,
                             need_logprobs: bool, use_counts: bool):
@@ -391,10 +411,18 @@ class PagedModelRunner:
 
         ``parent [S]`` maps each sampling row to the attention row whose
         logits it draws from (several sampling rows may share a parent —
-        ``n``-way siblings sampling one freshly prefilled prompt); the
-        remaining per-row arrays are the :class:`SamplingParamsBatch`
-        fields.  Two device-to-device indirections keep the pipelined
-        engine off the host:
+        ``n``-way siblings sampling one freshly prefilled prompt, or the
+        ``k+1`` positions of a speculative verify window) and ``offsets
+        [S]`` selects the slot WITHIN that row (ordinary rows: the last
+        valid slot; verify windows: ``0..k``); the remaining per-row
+        arrays are the :class:`SamplingParamsBatch` fields.
+        ``draft_toks``/``win_off`` feed ``batched_accept``: the returned
+        ``emit [S]`` marks the rows whose (seed, counter) draw saw
+        exactly the sequential path's logits — i.e. every earlier row of
+        the same window resampled its own draft — so the engine retires
+        ``1..k+1`` tokens per window and rewinds the rest.  Two
+        device-to-device indirections keep the pipelined engine off the
+        host:
 
         * ``tok_src [B*C]`` — slots with ``tok_src >= 0`` take their
           input token from ``prev_tokens[tok_src]`` (the PREVIOUS step's
@@ -411,10 +439,10 @@ class PagedModelRunner:
         ``[B, V]`` logits never leave the device."""
         tokens = jnp.where(tok_src >= 0,
                            prev_tokens[jnp.clip(tok_src, 0)], tokens)
-        logits, k_pages, v_pages = self._ragged_step(
+        logits, k_pages, v_pages = self._ragged_logits(
             params, k_pages, v_pages, tokens, pos, page_tables,
             contexts, starts, lengths, page_idx, page_off)
-        rows = logits[parent][:, :vocab]
+        rows = logits[parent, offsets][:, :vocab]
         if use_counts:
             counts = count_planes[slot_rows]
         out = batched_sample(rows, seeds, counters, temperature, top_k,
@@ -424,11 +452,17 @@ class PagedModelRunner:
                              use_planes=use_planes or use_counts,
                              all_greedy=all_greedy,
                              need_logprobs=need_logprobs)
+        emit = batched_accept(out[0], draft_toks, win_off)
         if use_counts:
             # pad rows carry slot_rows == max_slots (the trash row), so
-            # their greedy throwaway tokens never touch a live plane
+            # their greedy throwaway tokens never touch a live plane.
+            # Verify-window rows scatter unconditionally too — penalty-
+            # bearing rows never draft (the engine flushes them to
+            # k=0), so a rejected draw only ever lands in a plane row
+            # whose penalties are all zero, where counts have no effect
+            # and the next penalty-bearing bind re-seeds anyway
             count_planes = count_planes.at[slot_rows, out[0]].add(1.0)
-        return out, k_pages, v_pages, count_planes
+        return out + (emit,), k_pages, v_pages, count_planes
 
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
@@ -646,13 +680,22 @@ class PagedModelRunner:
             starts[b] = start
             lengths[b] = n
             if decode_srcs and b in decode_srcs:
-                assert n == 1, "device-fed rows carry one placeholder"
+                # device-fed rows carry their placeholder at offset 0;
+                # a speculative verify row's draft tail (offsets 1..k)
+                # is host-known and packed normally
                 tok_src[o] = decode_srcs[b]
         attn_args = (jnp.asarray(tok), jnp.asarray(pos),
                      jnp.asarray(page_tables), jnp.asarray(contexts),
                      jnp.asarray(starts), jnp.asarray(lengths),
                      jnp.asarray(page_idx), jnp.asarray(page_off))
         if sampling is not None:
+            if sampling.offsets is None:
+                # default: every sampling row draws from its parent
+                # row's LAST valid slot (the non-speculative semantics;
+                # verify windows set explicit offsets 0..k)
+                row_last = np.array([len(t) - 1 for _, t, _ in rows],
+                                    np.int32)
+                sampling.offsets = row_last[sampling.parent]
             sampled = self._dispatch_sampled(sampling, n_top, attn_args,
                                              tok_src, prev)
         else:
@@ -674,7 +717,7 @@ class PagedModelRunner:
                 self.seq_tokens[sid].extend(int(t) for t in toks)
             if kind == "decode":
                 n_dec += 1
-                self.n_decode_tokens += 1
+                self.n_decode_tokens += len(toks)
             else:
                 n_pf += len(toks)
                 self.n_prefill_tokens += len(toks)
@@ -742,12 +785,13 @@ class PagedModelRunner:
             (Bb, Cb, Sb, int(prev_tok.shape[0]), n_top,
              sampling.use_planes, sampling.use_counts,
              sampling.all_greedy, sampling.need_logprobs))
-        (token, lp, top_ids, top_lps), self.k_pages, self.v_pages, \
+        (token, lp, top_ids, top_lps, emit), self.k_pages, self.v_pages, \
             self.count_planes = self._ragged_sample_jit(
                 self.params, self.k_pages, self.v_pages,
                 self.count_planes, *attn_args,
                 prev_tok, jnp.asarray(tok_src),
                 pad("parent", sampling.parent),
+                pad("offsets", sampling.offsets.astype(np.int32)),
                 pad("seeds", sampling.seeds),
                 pad("counters", sampling.counters),
                 pad("temperature", sampling.temperature),
@@ -762,6 +806,8 @@ class PagedModelRunner:
                 pad("counts", sampling.counts),
                 pad("slot_rows", slot_rows, self.max_slots),
                 pad("mask_bits", sampling.mask_bits, 0xFFFFFFFF),
+                pad("draft_toks", sampling.draft_toks, -1),
+                pad("win_off", sampling.win_off),
                 vocab=sampling.vocab, n_top=n_top,
                 use_planes=sampling.use_planes,
                 all_greedy=sampling.all_greedy,
@@ -769,7 +815,8 @@ class PagedModelRunner:
                 use_counts=sampling.use_counts)
         self.n_sampled_tokens += S
         return StepHandle(tokens=token, logprob=lp, top_ids=top_ids,
-                          top_lps=top_lps, n_rows=S, runner=self)
+                          top_lps=top_lps, n_rows=S, runner=self,
+                          emit=emit)
 
     def fork_seq(self, src_sid: int) -> int:
         """Copy-on-write fork of a live sequence: the new sequence shares
@@ -847,10 +894,14 @@ class PagedModelRunner:
         return {s: out[i] for i, s in enumerate(sids)}
 
     def rewind_tokens(self, sid: int, n: int = 1):
-        """Un-append the last ``n`` tokens of a live sequence — the
-        pipelined engine's lag-1 finish rewind (a speculative decode row
-        was dispatched for a sequence that turned out to have finished
-        one step earlier).  Drops the tokens from ``seq_tokens`` and
+        """Un-append the last ``n`` tokens of a live sequence.  Lag-1
+        is the pipelined engine's finish rewind (a speculative decode
+        row was dispatched for a sequence that turned out to have
+        finished one step earlier); lag-k rolls back the rejected tail
+        of a speculative verify window (the window's draft tokens were
+        appended optimistically so their K/V lands in-step; acceptance
+        then keeps a prefix and rewinds the rest).  Drops the tokens
+        from ``seq_tokens`` and
         rolls the page cursor back, releasing a now-empty trailing page.
         The caller must have materialized every in-flight step that
         scatters into this sequence first: materialization blocks until
@@ -886,7 +937,7 @@ class PagedModelRunner:
 
     # -- jit-bucket warmup ----------------------------------------------
     def warmup(self, vocab: int, buckets=None,
-               greedy=(False, True)) -> int:
+               greedy=(False, True), draft_k: int = 0) -> int:
         """Precompile the fused sampled-step jit for the common ragged
         buckets so first-hit compiles stop dominating TTFT.
 
@@ -896,17 +947,56 @@ class PagedModelRunner:
         ``_dispatch_sampled`` exactly — a warmed variant IS the steady-
         state variant.  Default buckets cover pure decode at 1 and
         ``max_slots`` rows plus chunked prefill at ``chunk_size``, each
-        in both ``all_greedy`` flavors.  Returns the number of variants
-        compiled (also accumulated in ``warmup_compiles``)."""
+        in both ``all_greedy`` flavors.  With ``draft_k > 0``
+        (speculation enabled) the draft-row shapes are covered too:
+        verify windows widen decode rows to ``1 + draft_k`` slots and
+        multiply the sampling rows, so without these buckets a spec-on
+        engine pays its first-hit compiles at serve time.  A bucket may
+        be ``(B, C)``, ``(B, C, s_rows)``, or ``(B, C, s_rows,
+        prev_rows)`` — the latter two pin the sampling-row count and the
+        previous step's token-array length (default: the fixed
+        ``_s_rows`` bucket for both, the non-speculative steady state).
+        Returns the number of variants compiled (also accumulated in
+        ``warmup_compiles``)."""
+        ms = max(1, self.max_slots)
+        sb = self._bucket(ms)
         if buckets is None:
-            sb = self._bucket(max(1, self.max_slots))
             cb = self._bucket(max(1, self.chunk_size))
             buckets = [(1, 1), (sb, 1), (sb, cb), (1, cb)]
-        Sb = self._s_rows
+            if draft_k > 0:
+                w = 1 + draft_k
+                sd = self._bucket(ms * w)
+                buckets += [
+                    # all slots (and one slot) carrying verify windows,
+                    # fed host-side (prev = the fixed zero array)
+                    (sb, self._bucket(w), ms * w),
+                    (1, self._bucket(w), w),
+                    # plain decode chained AFTER a draft step's handle
+                    (sb, 1, ms, sd),
+                    (1, 1, 1, sd),
+                ]
+                # partial windows: the lookup often finds fewer than
+                # draft_k tokens, so every power-of-two width below the
+                # full window occurs in steady state.  Warm the
+                # single-sequence ladder (the common low-traffic case);
+                # multi-sequence partial mixes still compile on first
+                # hit.
+                wb = 2
+                while wb < self._bucket(w):
+                    buckets.append((1, wb, wb))
+                    wb *= 2
         words = -(-vocab // 32)
         f32 = jnp.float32
         compiled = 0
-        for Bb, Cb in dict.fromkeys(buckets):
+        norm = [(bk[0], bk[1],
+                 max(self._s_rows,
+                     self._bucket(bk[2])) if len(bk) > 2 else self._s_rows,
+                 max(self._s_rows,
+                     self._bucket(bk[3])) if len(bk) > 3 else None)
+                for bk in buckets]
+        for Bb, Cb, Sb, Pb in dict.fromkeys(norm):
+            if Pb is None:
+                Pb = self._s_rows    # host-fed steps use _zero_prev
             N = Bb * Cb
             attn = (jnp.zeros(N, jnp.int32), jnp.zeros(N, jnp.int32),
                     jnp.zeros((Bb, self.pm.pages_per_seq), jnp.int32),
@@ -915,7 +1005,7 @@ class PagedModelRunner:
                     jnp.full(N, self.trash_page, jnp.int32),
                     jnp.zeros(N, jnp.int32))
             for all_greedy in greedy:
-                key = (Bb, Cb, Sb, Sb, 0, False, False,
+                key = (Bb, Cb, Sb, Pb, 0, False, False,
                        bool(all_greedy), False)
                 if key in self._seen_buckets:
                     continue
@@ -923,9 +1013,10 @@ class PagedModelRunner:
                     self._ragged_sample_jit(
                         self.params, self.k_pages, self.v_pages,
                         self.count_planes, *attn,
-                        jnp.zeros(Sb, jnp.int32),        # prev_tokens
+                        jnp.zeros(Pb, jnp.int32),        # prev_tokens
                         jnp.full(N, -1, jnp.int32),      # tok_src
                         jnp.zeros(Sb, jnp.int32),        # parent
+                        jnp.zeros(Sb, jnp.int32),        # offsets
                         jnp.zeros(Sb, jnp.uint32),       # seeds
                         jnp.zeros(Sb, jnp.int32),        # counters
                         jnp.zeros(Sb, f32),              # temperature
@@ -940,6 +1031,8 @@ class PagedModelRunner:
                         jnp.zeros((Sb, 1), f32),         # counts
                         jnp.full(Sb, self.max_slots, jnp.int32),
                         jnp.full((Sb, words), 0xFFFFFFFF, jnp.uint32),
+                        jnp.full(Sb, -1, jnp.int32),     # draft_toks
+                        jnp.zeros(Sb, jnp.int32),        # win_off
                         vocab=vocab, n_top=0, use_planes=False,
                         all_greedy=bool(all_greedy),
                         need_logprobs=False, use_counts=False)
@@ -1098,16 +1191,18 @@ class PagedEngineBackend:
         the host sampler's generated-token counts."""
         self.runner.seed_counts(slot, counts, vocab)
 
-    def rewind_token(self, slot: int):
-        """Lag-1 finish rewind: un-append ``slot``'s speculative token
-        (page cursor + recorded token), see
-        :meth:`PagedModelRunner.rewind_tokens`."""
-        self.runner.rewind_tokens(self._slot_seq[slot], 1)
+    def rewind_token(self, slot: int, n: int = 1):
+        """Lag-``n`` rewind: un-append ``slot``'s last ``n`` tokens
+        (page cursors + recorded tokens) — lag-1 covers the pipelined
+        finish rewind, lag-k the rejected tail of a speculative verify
+        window; see :meth:`PagedModelRunner.rewind_tokens`."""
+        self.runner.rewind_tokens(self._slot_seq[slot], n)
 
-    def warmup(self, vocab: int) -> int:
+    def warmup(self, vocab: int, draft_k: int = 0) -> int:
         """Precompile the common fused-step jit buckets (see
-        :meth:`PagedModelRunner.warmup`); returns variants compiled."""
-        return self.runner.warmup(vocab)
+        :meth:`PagedModelRunner.warmup`); ``draft_k > 0`` adds the
+        speculative verify-window shapes.  Returns variants compiled."""
+        return self.runner.warmup(vocab, draft_k=draft_k)
 
     def fork_slot(self, src_slot: int, dst_slot: int):
         """CoW-fork ``src_slot``'s sequence into ``dst_slot`` (shared

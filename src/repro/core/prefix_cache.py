@@ -196,6 +196,40 @@ class PrefixCache:
             best_n = max(best_n, _common_prefix(t.tokens, rest))
         return i + best_n
 
+    def lookup_continuation(self, context: List[int], k: int,
+                            max_ngram: int = 3,
+                            min_ngram: int = 1) -> List[int]:
+        """Prompt-lookup drafting against the tree: find the trailing
+        ``n``-gram of ``context`` (longest ``n`` in ``[min_ngram,
+        max_ngram]`` wins) inside a cached token path and return up to
+        ``k`` tokens that followed it there — the radix tree indexes
+        every served token sequence, so a conversation's second turn
+        drafts from its first.  Pure read like ``peek_len``: no LRU
+        touch, no hit/miss counters (the engine reports draft stats
+        itself).  Deterministic: paths are walked in sorted-key order
+        and the FIRST match at the winning ``n`` is returned."""
+        if k <= 0 or not context:
+            return []
+        streams: List[List[int]] = []
+
+        def walk(node: _Node, prefix: List[int]):
+            for key in sorted(node.children):
+                child = node.children[key]
+                walk(child, prefix + list(key))
+            for t in sorted(node.tails, key=lambda t: t.tokens):
+                streams.append(prefix + list(t.tokens))
+            if not node.children and not node.tails and prefix:
+                streams.append(prefix)
+
+        walk(self.root, [])
+        for n in range(min(max_ngram, len(context)), min_ngram - 1, -1):
+            tail = list(context[-n:])
+            for stream in streams:
+                for j in range(len(stream) - n, -1, -1):
+                    if stream[j:j + n] == tail and j + n < len(stream):
+                        return stream[j + n:j + n + k]
+        return []
+
     # -- publication -----------------------------------------------------
     def insert(self, ids: List[int], pages: List[int]):
         """Publish a finished sequence's tokens/pages into the tree.

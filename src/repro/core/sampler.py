@@ -161,6 +161,58 @@ class RequestSampler:
         return int(self.rng.choice(probs.shape[0], p=probs))
 
 
+def counter_draw(sampler: "RequestSampler", logits: np.ndarray,
+                 counter: int,
+                 bitmask: Optional[np.ndarray] = None) -> int:
+    """One deterministic counter-based draw on the host: the token the
+    DEVICE pipeline emits for this row — the sampler's params plus the
+    ``fold_in(PRNGKey(seed), counter)`` Gumbel key — via the
+    row-at-a-time kernel oracle (``kernels.ref.batched_sample_ref``),
+    so host and device agree token-for-token, not just in
+    distribution.  ``bitmask`` is the packed uint32 grammar mask row
+    (``None`` = unconstrained)."""
+    from repro.kernels.ref import batched_sample_ref    # lazy: jax-backed
+    logits = np.asarray(logits, np.float32)
+    vocab = int(logits.shape[-1])
+    batch = SamplingParamsBatch.build([(0, sampler, bitmask)], vocab,
+                                      counters=[int(counter)])
+    tok, _, _, _ = batched_sample_ref(
+        logits[None, :], batch.seeds, batch.counters, batch.temperature,
+        batch.top_k, batch.top_p, batch.min_p, batch.typical_p,
+        batch.freq_pen, batch.pres_pen, batch.rep_pen, batch.bias,
+        batch.counts, batch.mask_bits)
+    return int(tok[0])
+
+
+def accept_draft(sampler: "RequestSampler", logits_rows, drafts,
+                 bitmasks=None) -> Tuple[List[int], int]:
+    """Sequential host acceptance oracle for speculative verification.
+
+    Walk the verify window one position at a time exactly as a
+    NON-speculative run would: draw position ``i`` with counter
+    ``n_sampled`` (advancing via ``observe``, so in-window penalties see
+    earlier emissions), emit the drawn token, and stop after the first
+    position whose draw differs from the draft that was fed as the next
+    position's input.  ``logits_rows`` has ``k+1`` rows (the window
+    input tokens were ``[t0, d1..dk]``); ``drafts`` has ``k`` entries.
+
+    Returns ``(emitted_tokens, n_accepted)`` with ``n_accepted ==
+    len(emitted_tokens) - 1``.  This is the ground truth the batched
+    device path (``batched_sample`` at counters ``c..c+k`` composed with
+    ``kernels.sampling.batched_accept``) must reproduce token-for-token
+    — the spec-on ≡ spec-off determinism contract.
+    """
+    emitted: List[int] = []
+    for i, row in enumerate(logits_rows):
+        bm = bitmasks[i] if bitmasks is not None else None
+        t = counter_draw(sampler, row, sampler.n_sampled, bm)
+        sampler.observe(t)
+        emitted.append(t)
+        if i >= len(drafts) or t != int(drafts[i]):
+            break
+    return emitted, len(emitted) - 1
+
+
 def _argmax_allowed(x: np.ndarray,
                     mask: Optional[np.ndarray] = None) -> int:
     """Argmax restricted to grammar-allowed tokens: even when every
@@ -231,6 +283,21 @@ class SamplingParamsBatch:
     #: inside the fused step) instead of a host-uploaded dense plane —
     #: the engine path; the ``counts`` field is then placeholder [S, 1]
     use_counts: bool = False
+    #: [S] int32 — slot offset WITHIN the parent attention row this
+    #: sampling row draws its logits from.  ``None`` lets the runner
+    #: default every row to its parent's last valid slot (the
+    #: non-speculative semantics); speculative verify windows set
+    #: offsets ``0..k`` across their ``k+1`` rows
+    offsets: np.ndarray = None
+    #: [S] int32 — the draft token this position proposed as the NEXT
+    #: position's input (-1 = nothing to check: ordinary rows and the
+    #: window's bonus position).  Consumed by ``batched_accept`` inside
+    #: the fused step
+    draft_toks: np.ndarray = None
+    #: [S] int32 — this row's offset inside its verify window (0 for
+    #: the window head and every ordinary width-1 row); window rows are
+    #: consecutive
+    win_off: np.ndarray = None
 
     def __len__(self) -> int:
         return int(self.parent.shape[0])
@@ -284,6 +351,8 @@ class SamplingParamsBatch:
                 (s_count, plane_v if not use_counts else 1), np.float32),
             mask_bits=np.full((s_count, words), 0xFFFFFFFF, np.uint32),
             slot_ids=np.full(s_count, -1, np.int32),
+            draft_toks=np.full(s_count, -1, np.int32),
+            win_off=np.zeros(s_count, np.int32),
             vocab=vocab, use_planes=use_planes, use_counts=use_counts,
             all_greedy=all(sampler.temperature == 0.0
                            for _, sampler, _ in specs))
@@ -325,3 +394,8 @@ class SampleResult:
     logprob: np.ndarray       # [S] f32
     top_ids: np.ndarray       # [S, K] int32
     top_lps: np.ndarray       # [S, K] f32
+    #: [S] bool — speculative acceptance per row (``batched_accept``):
+    #: True iff every earlier row of the row's verify window resampled
+    #: exactly its draft, so this row's token is emitted.  All-True for
+    #: non-speculative steps
+    emit: np.ndarray = None

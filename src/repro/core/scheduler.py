@@ -67,7 +67,10 @@ class AdmissionInfo:
 @dataclass
 class RaggedRow:
     """One row of the packed ragged step layout: ``n`` consecutive
-    tokens of one sequence (``kind="decode"`` rows always carry 1).
+    tokens of one sequence.  ``kind="decode"`` rows carry 1 token —
+    or, with speculative decoding planned (``plan_step(draft_k=...)``),
+    ``1 + draft_k`` for draft-eligible sequences: the pending token
+    plus a prompt-lookup draft tail verified in the same fused step.
 
     ``completes`` marks a prefill row whose tokens finish the
     sequence's prompt this step — the row whose final logits the fused
@@ -193,8 +196,8 @@ class Scheduler:
     def plan_step(self, token_budget: int, *,
                   chunk_size: Optional[int] = None,
                   admission_info: Optional[Callable[[object],
-                                                    AdmissionInfo]] = None
-                  ) -> StepPlan:
+                                                    AdmissionInfo]] = None,
+                  draft_k: int = 0) -> StepPlan:
         """Plan one engine step under ``token_budget`` model-forward
         tokens.
 
@@ -206,6 +209,18 @@ class Scheduler:
         first.  ``chunk_size`` of None means monolithic prefill (the
         dense backend).  ``admission_info`` probes a waiting request's
         cost; requests it maps to None are skipped this step.
+
+        ``draft_k > 0`` (speculative decoding) widens draft-eligible
+        decode rows to ``1 + draft_k`` layout tokens — a verify window:
+        the pending token plus up to ``draft_k`` prompt-lookup drafts,
+        sampled at every window position in the same fused step.
+        Eligible means the sequence is unconstrained (``matcher``
+        forces the grammar flush path, which is depth-1/k=0) and is
+        not sitting out its own in-flight window; device-fed rows
+        draft too, anchoring the lookup one token earlier.  The engine
+        may shrink the tail at dispatch (rows shrinking after planning
+        is already the layout's contract), so the widened ``n`` is a
+        budget ceiling.
         """
         self.n_plans += 1
         plan = StepPlan()
@@ -226,9 +241,20 @@ class Scheduler:
                 or getattr(seq, "inflight_src", None) is not None)
             and not int(getattr(seq, "prefill_remaining", 0) or 0)
             and getattr(seq, "prefill_ids", None) is None]
+        used = 0
         for seq in plan.decode:
-            plan.layout.add(seq, 1, "decode")
-        used = len(plan.decode)
+            n = 1
+            # widen: host-fed rows, and device-fed rows (their draft
+            # tail anchors one token earlier) — but not sequences whose
+            # own verify window is still in flight (inflight_src None,
+            # n_inflight > 0): those sit the step out
+            if (draft_k > 0
+                    and getattr(seq, "matcher", None) is None
+                    and (getattr(seq, "inflight_src", None) is not None
+                         or not getattr(seq, "n_inflight", 0))):
+                n += draft_k
+            plan.layout.add(seq, n, "decode")
+            used += n
         # continue in-flight chunked prefills, oldest admission first
         for slot in sorted(self.running,
                            key=lambda s: self._admitted_at.get(s, 0)):

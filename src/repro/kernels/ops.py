@@ -17,6 +17,7 @@ from repro.kernels.paged_attention import (paged_prefill_attention
 from repro.kernels.paged_attention import (paged_ragged_attention
                                            as _paged_ragged)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.sampling import batched_accept as _batched_accept
 from repro.kernels.sampling import batched_sample as _batched_sample
 from repro.kernels.w4a16_gemm import w4a16_gemm as _w4a16
 
@@ -80,6 +81,17 @@ def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
                            rep_pen, bias, counts, mask_bits, n_top=n_top,
                            use_planes=use_planes, all_greedy=all_greedy,
                            need_logprobs=need_logprobs)
+
+
+@jax.jit
+def batched_accept(tokens, drafts, win_off):
+    """Batched speculative acceptance over the step's sampling rows:
+    ``emit[s]`` is True iff every earlier row of row ``s``'s verify
+    window resampled exactly its draft token (``win_off`` gives each
+    row's offset inside its window; ``drafts == -1`` means nothing to
+    check).  The engine path runs the same function INSIDE the fused
+    step jit; this wrapper serves tests."""
+    return _batched_accept(tokens, drafts, win_off)
 
 
 @functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",

@@ -215,6 +215,28 @@ def batched_sample_ref(logits, seeds, counters, temperature, top_k,
     return tokens, lp, top_ids.astype(np.int32), top_lps
 
 
+def batched_accept_ref(tokens, drafts, win_off):
+    """Row-at-a-time oracle for ``kernels.sampling.batched_accept``:
+    walk each window left to right and emit rows until (and including)
+    the first one whose preceding row rejected its draft."""
+    import numpy as np
+
+    tokens = np.asarray(tokens)
+    drafts = np.asarray(drafts)
+    win_off = np.asarray(win_off)
+    S = tokens.shape[0]
+    emit = np.zeros(S, bool)
+    for s in range(S):
+        start = s - int(win_off[s])
+        ok = True
+        for j in range(start, s):
+            if drafts[j] >= 0 and tokens[j] != drafts[j]:
+                ok = False
+                break
+        emit[s] = ok
+    return emit
+
+
 def w4a16_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                    group: int) -> jax.Array:
     """x: [M,K] bf16; w_packed: [K//2, N] int8 (2 nibbles along K);

@@ -78,6 +78,37 @@ def _penalized(logits, bias, counts, freq_pen, pres_pen, rep_pen,
     return jnp.where(allowed, jnp.maximum(x, ALLOWED_FLOOR), MASKED)
 
 
+def batched_accept(tokens, drafts, win_off):
+    """Batched speculative acceptance over one step's sampling rows.
+
+    Verification packs each sequence's window of ``k+1`` positions as
+    ``k+1`` CONSECUTIVE sampling rows; ``win_off[s]`` is row ``s``'s
+    offset inside its window (0 for the window head — and for every
+    ordinary non-speculative row, which is just a width-1 window).
+    ``drafts[s]`` is the draft token position ``s`` proposed as INPUT to
+    the next position, or ``-1`` when there is nothing to check (the
+    bonus position at offset ``k``, and all non-speculative rows).
+
+    Row ``s`` is EMITTED iff every earlier row of its window resampled
+    exactly its own draft — i.e. the window prefix up to ``s`` is the
+    token stream the sequential path would have produced, so row ``s``'s
+    (seed, counter) draw saw exactly the sequential logits.  The first
+    mismatching row is itself emitted (its fresh draw IS the sequential
+    token); everything after it is discarded and rewound.
+
+    Pure jnp over ``[S]`` arrays — rides inside the fused step jit next
+    to ``batched_sample``, adding zero dispatches.  Returns ``emit [S]
+    bool``.
+    """
+    miss = ((drafts >= 0) & (tokens != drafts)).astype(jnp.int32)
+    # c[j] = number of rejected drafts among rows < j; misses inside
+    # this row's window before it = c[s] - c[window_start]
+    c = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(miss)])
+    idx = jnp.arange(tokens.shape[0])
+    before = c[idx] - c[idx - win_off]
+    return before == 0
+
+
 def batched_sample(logits, seeds, counters, temperature, top_k, top_p,
                    min_p, typical_p, freq_pen, pres_pen, rep_pen, bias,
                    counts, mask_bits, *, n_top: int = 0,

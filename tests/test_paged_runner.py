@@ -55,3 +55,136 @@ def test_paged_concurrent_ragged(rng_key):
     pr.free(a)
     pr.free(b)
     assert pr.pm.num_free_pages == 32
+
+
+# ---------------------------------------------------------------------------
+# lag-k rewind: the speculative verify window's rejected tail is unwound
+# ---------------------------------------------------------------------------
+
+def _runner(rng_key, **kw):
+    cfg = get_config("yi-6b", reduced=True)
+    params = init_params(model.params_def(cfg), rng_key)
+    kw.setdefault("num_pages", 32)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("pages_per_seq", 8)
+    return PagedModelRunner(cfg, params, **kw)
+
+
+def test_rewind_across_page_boundary(rng_key):
+    """Rewinding k tokens that straddle a page boundary frees exactly
+    the drained trailing page, and re-decoding the same tokens at the
+    same positions reproduces the original logits bit-for-bit (the
+    rejected K/V really is gone, not shadowing the rewritten one)."""
+    pr = _runner(rng_key)
+    base = pr.pm.stats()
+    sid = pr.prefill_seq(list(range(1, 12)))           # 11 tokens, 3 pages
+    first = {}
+    for i, t in enumerate([20, 21, 22]):               # 12..14: page 4 opens
+        first[i] = pr.decode({sid: t})[sid]
+    assert len(pr.pm.seqs[sid].pages) == 4
+    frees = pr.pm.num_free_pages
+    pr.rewind_tokens(sid, 3)                           # 14 -> 11: crosses 12
+    assert pr.pm.context_lens([sid])[0] == 11
+    assert len(pr.pm.seqs[sid].pages) == 3             # page 4 returned
+    assert pr.pm.num_free_pages == frees + 1
+    for i, t in enumerate([20, 21, 22]):               # replay the window
+        again = pr.decode({sid: t})[sid]
+        assert np.array_equal(first[i], again), i
+    pr.free(sid)
+    assert pr.pm.stats() == base
+
+
+def test_rewind_cow_forked_tail(rng_key):
+    """A fork copies the partial tail page CoW; rewinding the fork's own
+    appended tokens pops only its private pages — the source sequence's
+    stream is byte-identical to a run where the fork never existed."""
+    pr = _runner(rng_key)
+    base = pr.pm.stats()
+    prompt = list(range(1, 11))                        # 10 tokens: tail of 2
+    sid = pr.prefill_seq(prompt)
+    fork = pr.fork_seq(sid)
+    assert pr.pm.n_cow_forks >= 1
+    # both advance; the fork then speculates 2 tokens and rejects them
+    both = pr.decode({sid: 30, fork: 40})
+    f1 = pr.decode({fork: 41})[fork]
+    pr.decode({fork: 42})
+    pr.rewind_tokens(fork, 2)                          # back to length 11
+    assert pr.pm.context_lens([fork])[0] == 11
+    # the source's next logits match a fork-free straight-through run
+    nxt = pr.decode({sid: 31})[sid]
+    again = pr.decode({fork: 41})[fork]                # fork replays too
+    assert np.array_equal(f1, again)
+    pr.free(fork)
+    ref_logits = {}
+    ref = _runner(rng_key)
+    rsid = ref.prefill_seq(prompt)
+    for t in [30, 31]:
+        ref_logits[t] = ref.decode({rsid: t})[rsid]
+    assert np.allclose(both[sid], ref_logits[30], atol=1e-5)
+    assert np.allclose(nxt, ref_logits[31], atol=1e-5)
+    pr.free(sid)
+    st = pr.pm.stats()
+    # cow_forks/shared_pages are cumulative counters; the pool itself
+    # must be back to baseline
+    assert (st["free_pages"], st["used_pages"], st["active_seqs"]) == \
+        (base["free_pages"], base["used_pages"], base["active_seqs"])
+
+
+def test_rewind_next_to_published_prefix_pages(rng_key):
+    """A sequence whose prompt was adopted from the prefix cache rewinds
+    its speculated tail without disturbing the published pages: the
+    cache keeps every cached page, refcounts stay consistent, and the
+    adopted prefix still matches fresh prefill logits afterwards."""
+    pr = _runner(rng_key)
+    prompt = list(range(1, 14))                        # 13 tokens
+    s1 = pr.prefill_seq(prompt)
+    pr.free(s1, publish=True)                          # pages -> radix tree
+    cached = pr.prefix_cache.stats()["cached_pages"]
+    assert cached >= 3                                 # 3 full pages shared
+    s2 = pr.prefill_seq(prompt)                        # adopts the prefix
+    assert pr.last_prefill_info["prefix_cached_tokens"] > 0
+    for t in [50, 51, 52]:                             # grow past adoption
+        pr.decode({s2: t})
+    pr.rewind_tokens(s2, 3)                            # drop the window tail
+    assert pr.pm.context_lens([s2])[0] == len(prompt)
+    assert pr.prefix_cache.stats()["cached_pages"] == cached
+    # published pages untouched: a third adopter still prefills clean
+    s3 = pr.prefill_seq(prompt)
+    l2 = pr.decode({s2: 60})[s2]
+    l3 = pr.decode({s3: 60})[s3]
+    assert np.allclose(l2, l3, atol=1e-5)
+    pr.free(s2)
+    pr.free(s3)
+    st = pr.pm.stats()
+    assert st["active_seqs"] == 0
+    assert st["used_pages"] == pr.prefix_cache.stats()["cached_pages"]
+
+
+def test_rewind_then_preempt_then_resume(rng_key):
+    """Round trip: speculate, reject (rewind), preempt (free without
+    publish), then resume by re-prefilling prompt+kept tokens — the
+    resumed stream continues exactly where the rewound one left off."""
+    pr = _runner(rng_key)
+    base = pr.pm.stats()
+    prompt = list(range(2, 12))
+    sid = pr.prefill_seq(prompt)
+    kept = []
+    for t in [70, 71]:                                 # accepted tokens
+        pr.decode({sid: t})
+        kept.append(t)
+    pr.decode({sid: 72})                               # speculated...
+    pr.decode({sid: 73})
+    pr.rewind_tokens(sid, 2)                           # ...and rejected
+    pr.free(sid)                                       # preemption
+    assert pr.pm.stats() == base                       # fully returned
+    rsid = pr.prefill_seq(prompt + kept)               # resume
+    resumed = pr.decode({rsid: 74})[rsid]
+    ref = _runner(rng_key)
+    ref_sid = ref.prefill_seq(prompt)
+    for t in [70, 71]:
+        ref.decode({ref_sid: t})
+    straight = ref.decode({ref_sid: 74})[ref_sid]
+    assert np.allclose(resumed, straight, atol=1e-5)
+    pr.free(rsid)
+    assert pr.pm.stats() == base

@@ -211,15 +211,29 @@ def test_pipeline_stats_and_warmup(params):
     eng = MLCEngine()
     eng.load_model("m", CFG, params=params, backend="paged", max_slots=2,
                    max_context=64, page_size=4, pipeline_depth=2,
-                   enable_prefix_cache=False, warmup=True)
+                   enable_prefix_cache=False, warmup=True,
+                   speculation="prompt_lookup", draft_k=4)
     try:
         st = eng.stats("m")
         assert st["runner"]["warmup_compiles"] > 0
         resp = eng.chat_completions_create(
             _req(max_tokens=8, temperature=0.5, seed=2))
         assert resp.usage.completion_tokens > 0
+        # snapshot AFTER the first request (its odd final prefill-chunk
+        # width may hit an unwarmed bucket; that gap predates
+        # speculation), then prove the draft-row coverage: a greedy
+        # lookup-friendly request drives real verify windows at several
+        # widths and must recompile NOTHING
+        warm_buckets = eng.stats("m")["runner"]["jit_buckets"]
+        rep = "one two three four " * 3
+        resp = eng.chat_completions_create(
+            _req(messages=[ChatMessage("user", rep)], max_tokens=10,
+                 temperature=0.0, seed=0))
+        assert resp.usage.completion_tokens > 0
         st = eng.stats("m")
         e = st["engine"]
+        assert e["drafted"] > 0            # windows actually dispatched
+        assert st["runner"]["jit_buckets"] == warm_buckets
         assert e["pipeline_depth"] == 2
         assert e["inflight_steps"] == 2       # steady decode keeps 2 in flight
         assert e["exec_steps"] > 0

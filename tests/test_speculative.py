@@ -1,0 +1,445 @@
+"""Prompt-lookup speculative decoding: differential determinism harness.
+
+The engine drafts k tokens per decode step (n-gram lookup against the
+sequence's own context, falling back to the prefix-cache radix tree) and
+verifies them as ONE multi-token ragged row inside the same fused
+forward+sample step — no extra kernel dispatches.  The correctness
+contract is absolute: with seeds fixed, speculation is invisible.  This
+file proves it at three levels:
+
+1. the batched acceptance op (``kernels.ops.batched_accept``) vs its
+   row-at-a-time numpy oracle (``kernels.ref.batched_accept_ref``);
+2. the full device verify window (``batched_sample`` at counters
+   ``c..c+k`` composed with ``batched_accept`` and the engine's
+   consume-until-first-reject drain) vs the sequential host walk
+   (``core.sampler.accept_draft``), token-for-token;
+3. end-to-end: one seeded mixed workload (chunked long prefill,
+   stochastic sampling, penalties, n=2 fork, stop strings) through
+   spec-off/spec-on engines at pipeline depths 1 and 2 — byte-identical
+   outputs, a positive accept rate, fused ``kernel_calls_per_step ==
+   1.0``, and every page back on the free list afterwards.
+"""
+import copy
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:                        # hypothesis widens the sweep when available;
+    from hypothesis import given, settings     # the contracts themselves
+    from hypothesis import strategies as st    # run in every environment
+    _HYP = True
+except ImportError:
+    _HYP = False
+
+
+def _sweep(fn):
+    if _HYP:
+        return settings(max_examples=25, deadline=None)(
+            given(data_seed=st.integers(0, 2**31 - 1))(fn))
+    return pytest.mark.parametrize("data_seed", list(range(10)))(fn)
+
+
+from repro.configs import get_config
+from repro.core import ChatCompletionRequest, ChatMessage, MLCEngine
+from repro.core.sampler import (RequestSampler, SamplingParamsBatch,
+                                accept_draft, counter_draw)
+from repro.grammar.matcher import pack_token_bitmask
+from repro.kernels import ref
+from repro.kernels.ops import batched_accept, batched_sample
+from repro.models import model
+from repro.models.pdef import init_params
+
+V = 32
+
+
+# ---------------------------------------------------------------------------
+# 1. acceptance op vs numpy oracle
+# ---------------------------------------------------------------------------
+
+def _windows(rng, s_total):
+    """Random partition of ``s_total`` rows into verify windows."""
+    off = []
+    while len(off) < s_total:
+        w = min(int(rng.integers(1, 6)), s_total - len(off))
+        off.extend(range(w))
+    return np.asarray(off, np.int32)
+
+
+@_sweep
+def test_accept_op_matches_ref(data_seed):
+    rng = np.random.default_rng(data_seed)
+    S = 16
+    win_off = _windows(rng, S)
+    tokens = rng.integers(0, V, S).astype(np.int32)
+    drafts = rng.integers(0, V, S).astype(np.int32)
+    hit = rng.random(S) < 0.5                         # some exact hits
+    drafts[hit] = tokens[hit]
+    drafts[rng.random(S) < 0.3] = -1                  # nothing to check
+    got = np.asarray(batched_accept(tokens, drafts, win_off))
+    exp = ref.batched_accept_ref(tokens, drafts, win_off)
+    assert np.array_equal(got, exp), (tokens, drafts, win_off)
+
+
+def test_accept_op_edge_cases():
+    off5 = np.arange(5, dtype=np.int32)
+    toks = np.asarray([3, 1, 4, 1, 5], np.int32)
+    # all-accept: every draft resampled exactly -> whole window emits
+    # (drafts[s] is checked against row s's OWN draw; -1 on the bonus row)
+    drafts = np.asarray([3, 1, 4, 1, -1], np.int32)
+    assert np.asarray(batched_accept(toks, drafts, off5)).all()
+    # first draft wrong: only the head row (its fresh draw IS the
+    # sequential token) emits
+    drafts = np.asarray([9, 1, 4, 1, -1], np.int32)
+    assert np.asarray(batched_accept(toks, drafts, off5)).tolist() == \
+        [True, False, False, False, False]
+    # mid-window reject: the prefix through the first mismatching row
+    # emits (that row's fresh draw is the sequential token)
+    drafts = np.asarray([3, 1, 9, 1, -1], np.int32)
+    assert np.asarray(batched_accept(toks, drafts, off5)).tolist() == \
+        [True, True, True, False, False]
+    # ordinary non-speculative rows are width-1 windows: always emitted
+    plain = np.zeros(4, np.int32)
+    assert np.asarray(batched_accept(
+        np.asarray([7, 7, 7, 7], np.int32),
+        np.full(4, -1, np.int32), plain)).all()
+
+
+# ---------------------------------------------------------------------------
+# 2. device verify window vs sequential host oracle
+# ---------------------------------------------------------------------------
+
+def _spec_sampler(rng, temperature):
+    """A draft-ELIGIBLE sampler: the engine only speculates on rows with
+    no grammar matcher and no freq/pres/rep penalties, so the in-window
+    ``observe`` calls of the sequential walk cannot change later draws
+    (counters are explicit, counts planes are inert)."""
+    return RequestSampler(
+        temperature=temperature,
+        top_k=int(rng.integers(0, V + 1)),
+        top_p=float(rng.uniform(0.05, 1.0)) if rng.random() < 0.7 else 1.0,
+        min_p=float(rng.uniform(0.0, 0.5)) if rng.random() < 0.5 else 0.0,
+        typical_p=(float(rng.uniform(0.2, 1.0))
+                   if rng.random() < 0.5 else 1.0),
+        logit_bias=({int(rng.integers(0, V)): float(rng.uniform(-5, 5))}
+                    if rng.random() < 0.5 else None),
+        seed=int(rng.integers(0, 2**31 - 1)))
+
+
+def _device_window(sampler, logits, drafts):
+    """The engine's device path for one verify window: batched draws at
+    counters ``n_sampled..n_sampled+k``, batched acceptance, and the
+    drain loop's consume-until-first-reject."""
+    w = logits.shape[0]
+    base = sampler.n_sampled
+    batch = SamplingParamsBatch.build(
+        [(i, sampler, None) for i in range(w)], V,
+        counters=[base + i for i in range(w)])
+    toks, _, _, _ = batched_sample(
+        logits[batch.parent].astype(np.float32), batch.seeds,
+        batch.counters, batch.temperature, batch.top_k, batch.top_p,
+        batch.min_p, batch.typical_p, batch.freq_pen, batch.pres_pen,
+        batch.rep_pen, batch.bias, batch.counts, batch.mask_bits,
+        use_planes=batch.use_planes)
+    toks = np.asarray(toks, np.int32)
+    darr = np.asarray(list(drafts) + [-1], np.int32)
+    emit = np.asarray(batched_accept(toks, darr,
+                                     np.arange(w, dtype=np.int32)))
+    out = []
+    for i in range(w):
+        if not emit[i]:
+            break
+        out.append(int(toks[i]))
+    return out
+
+
+@_sweep
+def test_device_window_matches_sequential_oracle(data_seed):
+    """Host sequential walk == device batched window, token-for-token,
+    across random drafts (hits and misses) and sampler params."""
+    rng = np.random.default_rng(data_seed)
+    k = int(rng.integers(1, 5))
+    logits = (rng.standard_normal((k + 1, V)) * 3).astype(np.float32)
+    temperature = float(rng.choice([0.0, 0.7, 1.3]))
+    s0 = _spec_sampler(rng, temperature)
+    # the sequential draws (explicit counters; penalty-free => observe
+    # order is irrelevant to the draw itself)
+    true = [counter_draw(copy.deepcopy(s0), logits[i], s0.n_sampled + i)
+            for i in range(k + 1)]
+    # drafts: each position right with p=0.6, else deliberately wrong
+    drafts = [t if rng.random() < 0.6 else (t + 1) % V
+              for t in true[:k]]
+    host = accept_draft(copy.deepcopy(s0), logits, drafts)
+    dev = _device_window(copy.deepcopy(s0), logits, drafts)
+    assert dev == host[0]
+    assert host[1] == len(host[0]) - 1
+    # sanity against the independently computed sequential stream: the
+    # emitted prefix is exactly the accepted drafts plus one fresh draw
+    n_ok = 0
+    while n_ok < k and drafts[n_ok] == true[n_ok]:
+        n_ok += 1
+    assert dev == true[:n_ok + 1]
+
+
+@_sweep
+def test_device_window_all_accept_and_all_reject(data_seed):
+    rng = np.random.default_rng(data_seed)
+    k = int(rng.integers(1, 5))
+    logits = (rng.standard_normal((k + 1, V)) * 3).astype(np.float32)
+    s0 = _spec_sampler(rng, float(rng.choice([0.0, 1.0])))
+    true = [counter_draw(copy.deepcopy(s0), logits[i], s0.n_sampled + i)
+            for i in range(k + 1)]
+    # perfect drafts: the whole window (k accepted + 1 bonus) emits
+    emitted = _device_window(copy.deepcopy(s0), logits, true[:k])
+    assert emitted == true
+    assert accept_draft(copy.deepcopy(s0), logits, true[:k]) == (true, k)
+    # first draft wrong: exactly one token emits (zero accepted), which
+    # is the token the non-speculative path would have produced
+    bad = [(true[0] + 1) % V] + true[1:k]
+    emitted = _device_window(copy.deepcopy(s0), logits, bad)
+    assert emitted == [true[0]]
+    assert accept_draft(copy.deepcopy(s0), logits, bad) == ([true[0]], 0)
+
+
+@_sweep
+def test_grammar_row_is_width_one_window(data_seed):
+    """Grammar-constrained rows are never drafted: they flush to the
+    k=0 degenerate window — one masked row, always emitted, and the
+    host/device draws still agree under the bitmask."""
+    rng = np.random.default_rng(data_seed)
+    mask = rng.random(V) < 0.4
+    if not mask.any():
+        mask[int(rng.integers(0, V))] = True
+    logits = (rng.standard_normal((1, V)) * 3).astype(np.float32)
+    s0 = _spec_sampler(rng, float(rng.choice([0.0, 0.9])))
+    packed = pack_token_bitmask(mask)
+    batch = SamplingParamsBatch.build([(0, s0, packed)], V,
+                                      counters=[s0.n_sampled])
+    toks, _, _, _ = batched_sample(
+        logits[batch.parent].astype(np.float32), batch.seeds,
+        batch.counters, batch.temperature, batch.top_k, batch.top_p,
+        batch.min_p, batch.typical_p, batch.freq_pen, batch.pres_pen,
+        batch.rep_pen, batch.bias, batch.counts, batch.mask_bits,
+        use_planes=batch.use_planes)
+    tok = int(np.asarray(toks)[0])
+    assert mask[tok]
+    emit = np.asarray(batched_accept(
+        np.asarray([tok], np.int32), np.asarray([-1], np.int32),
+        np.zeros(1, np.int32)))
+    assert emit.tolist() == [True]
+    host = accept_draft(copy.deepcopy(s0), logits, [], bitmasks=[packed])
+    assert host == ([tok], 0)
+
+
+# ---------------------------------------------------------------------------
+# 3. end-to-end differential harness
+# ---------------------------------------------------------------------------
+
+CFG = get_config("llama-3.1-8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(model.params_def(CFG), jax.random.PRNGKey(0))
+
+
+def _mk(params, depth, speculation="off", **kw):
+    eng = MLCEngine()
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("max_context", 96)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("prefill_chunk_size", 6)
+    kw.setdefault("seed", 0)
+    kw.setdefault("enable_prefix_cache", False)
+    eng.load_model("m", CFG, params=params, backend="paged",
+                   pipeline_depth=depth, speculation=speculation,
+                   draft_k=3, **kw)
+    return eng
+
+
+def _req(**kw):
+    kw.setdefault("messages", [ChatMessage("user", "hello")])
+    kw.setdefault("model", "m")
+    kw.setdefault("max_tokens", 8)
+    kw.setdefault("seed", 0)
+    return ChatCompletionRequest(**kw)
+
+
+def _run_all(eng, reqs):
+    out = [None] * len(reqs)
+
+    def go(i):
+        out[i] = eng.chat_completions_create(_req(**reqs[i]))
+
+    ts = [threading.Thread(target=go, args=(i,)) for i in range(len(reqs))]
+    for t in ts:
+        t.start()
+        time.sleep(0.05)
+    for t in ts:
+        t.join(timeout=600)
+    assert all(r is not None for r in out)
+    return out
+
+
+def _texts(resp):
+    return ([c.message.content for c in resp.choices],
+            [c.finish_reason for c in resp.choices],
+            resp.usage.completion_tokens)
+
+
+def _drained(eng, timeout=60):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if eng.stats("m")["scheduler"]["running"] == 0:
+            return True
+        time.sleep(0.02)
+    return False
+
+
+LONG = "The quick brown fox jumps over the lazy dog. " * 4
+# heavily repetitive prompt: prompt-lookup finds its n-grams constantly,
+# so greedy decode accepts drafts and the accept rate is provably > 0
+REP = "one two three four one two three four one two three four"
+
+MIXED = [
+    # lookup-friendly greedy decode -> drafts fire and mostly accept
+    dict(messages=[ChatMessage("user", REP)],
+         max_tokens=12, temperature=0.0, seed=0),
+    # long prompt -> chunked prefill interleaving with verify windows
+    dict(messages=[ChatMessage("user", LONG)],
+         max_tokens=10, temperature=0.8, seed=5),
+    # penalties: draft-INELIGIBLE rows riding next to verify windows
+    dict(messages=[ChatMessage("user", "tell me a story")],
+         max_tokens=10, temperature=1.2, seed=9,
+         frequency_penalty=0.7, presence_penalty=0.3),
+    # n=2 forks a CoW sibling; stop strings can land mid-window
+    dict(messages=[ChatMessage("user", "two ways")],
+         max_tokens=6, temperature=0.9, seed=3, n=2, stop=["XYZZY"]),
+]
+
+
+@pytest.fixture(scope="module")
+def quad(params):
+    """(spec, depth) -> engine, all sharing one params pytree."""
+    engines = {(spec, depth): _mk(params, depth, speculation=spec)
+               for spec in ("off", "prompt_lookup") for depth in (1, 2)}
+    yield engines
+    for eng in engines.values():
+        eng.shutdown()
+
+
+def test_differential_determinism(quad):
+    """The seeded mixed workload is byte-identical across speculation
+    off/on and pipeline depth 1/2 — speculation with seeds fixed is
+    observationally invisible except in the stats."""
+    results = {key: [_texts(r) for r in _run_all(eng, MIXED)]
+               for key, eng in quad.items()}
+    baseline = results[("off", 1)]
+    for key, got in results.items():
+        assert got == baseline, key
+    for (spec, depth), eng in quad.items():
+        assert _drained(eng)
+        st = eng.stats("m")
+        e = st["engine"]
+        assert e["speculation"] == spec
+        if spec == "off":
+            assert e["drafted"] == 0 and e["accepted"] == 0
+        else:
+            assert e["draft_k"] == 3
+            assert e["drafted"] > 0, (spec, depth)
+            assert e["accepted"] > 0, (spec, depth)
+            assert 0.0 < e["accept_rate"] <= 1.0
+        # the verify window rides the ONE fused kernel call per step
+        assert st["runner"]["attn_kernel_calls"] == e["exec_steps"]
+        assert st["runner"]["host_logit_rows"] == 0
+        # nothing leaked: every page free, every slot returned
+        assert st["runner"]["pages"]["used_pages"] == 0, (spec, depth)
+        assert st["runner"]["pages"]["active_seqs"] == 0, (spec, depth)
+
+
+def test_speculation_with_prefix_cache_tree_drafts(params):
+    """With the prefix cache ON, published streams feed
+    ``lookup_continuation`` drafts; outputs still match the cache-off
+    spec-off baseline and all non-cached pages drain back."""
+    base = _mk(params, 1)
+    spec = _mk(params, 2, speculation="prompt_lookup",
+               enable_prefix_cache=True)
+    try:
+        reqs = MIXED[:2]
+        a = [_texts(r) for r in _run_all(base, reqs)]
+        # run twice: the second pass can draft from streams the first
+        # pass published into the radix tree
+        for _ in range(2):
+            b = [_texts(r) for r in _run_all(spec, reqs)]
+            assert b == a
+        assert _drained(spec)
+        st = spec.stats("m")
+        assert st["engine"]["drafted"] > 0
+        assert st["runner"]["pages"]["active_seqs"] == 0
+        # cached pages may remain resident; none are leaked beyond the
+        # prefix cache's own accounting
+        assert (st["runner"]["pages"]["used_pages"]
+                == st["runner"]["prefix_cache"]["cached_pages"])
+    finally:
+        base.shutdown()
+        spec.shutdown()
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_stop_string_mid_window_rewinds(params, depth):
+    """Greedy + a huge logit bias make the model emit one piece forever;
+    the stop string lands mid-stream while later window rows for the
+    same step already hold speculated continuations of that very piece.
+    The drain must cut the emission at the stop, rewind the rejected
+    tail, and leave pages exactly as the non-speculative engine does."""
+    e_off = _mk(params, 1, max_slots=2, max_context=64, page_size=2)
+    e_on = _mk(params, depth, max_slots=2, max_context=64, page_size=2,
+               speculation="prompt_lookup")
+    try:
+        tok = e_on.models["m"].tokenizer
+        tid = int(tok.encode("z", allow_specials=False)[0])
+        piece = tok.decode([tid])
+        spec = dict(max_tokens=12, temperature=0.0,
+                    logit_bias={tid: 200.0}, stop=[piece * 3])
+        a = e_off.chat_completions_create(_req(**spec))
+        b = e_on.chat_completions_create(_req(**spec))
+        assert _texts(a) == _texts(b)
+        assert b.choices[0].finish_reason == "stop"
+        assert _drained(e_off) and _drained(e_on)
+        s_on = e_on.stats("m")
+        if depth == 1:
+            # host-fed windows see the full repetitive context, so the
+            # lookup is guaranteed to hit: the window really was
+            # speculated into, then cut by the stop string
+            assert s_on["engine"]["drafted"] > 0
+        assert s_on["runner"]["rewinds"] >= 1
+        for eng in (e_off, e_on):
+            pg = eng.stats("m")["runner"]["pages"]
+            assert pg["used_pages"] == 0
+            assert pg["active_seqs"] == 0
+    finally:
+        e_off.shutdown()
+        e_on.shutdown()
+
+
+def test_grammar_request_never_drafts(params):
+    """A grammar-constrained request on a speculation-enabled engine
+    must flush to k=0 (the matcher advances one token at a time), while
+    still matching the spec-off engine byte-for-byte."""
+    e_off = _mk(params, 1)
+    e_on = _mk(params, 2, speculation="prompt_lookup")
+    try:
+        req = dict(messages=[ChatMessage("user", "emit json")],
+                   max_tokens=10, temperature=0.0, seed=4,
+                   response_format={"type": "json_object"})
+        a = e_off.chat_completions_create(_req(**req))
+        before = e_on.stats("m")["engine"]["drafted"]
+        b = e_on.chat_completions_create(_req(**req))
+        after = e_on.stats("m")["engine"]["drafted"]
+        assert _texts(a) == _texts(b)
+        assert after == before, "grammar row was speculated into"
+    finally:
+        e_off.shutdown()
+        e_on.shutdown()

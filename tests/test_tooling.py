@@ -106,6 +106,16 @@ def test_benchmarks_smoke():
     inflight = [ln for ln in lines
                 if ln.startswith("engine/mixed_inflight_steps")]
     assert inflight and float(inflight[0].split(",")[1]) <= 2, out
+    # prompt-lookup speculation: the mixed engine runs with speculation
+    # ENABLED, so the 1.0-kernel-calls and 0-logit-rows assertions
+    # above already cover verify windows; the accept rate must be real
+    # (> 0 on the lookup-friendly traffic) and the off-vs-on comparison
+    # must be reported
+    acc = [ln for ln in lines
+           if ln.startswith("engine/mixed_accept_rate")]
+    assert acc and float(acc[0].split(",")[1]) > 0, out
+    assert any(ln.startswith("engine/speculative_speedup")
+               for ln in lines), out
     assert any(ln.startswith("kernel/batched_sample") for ln in lines), out
     # the run records the perf trajectory in-repo
     report = ROOT / "BENCH_ragged_step.json"
