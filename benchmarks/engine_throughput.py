@@ -82,55 +82,69 @@ def _latency_rows(smoke: bool) -> list:
                 s["runner"]["host_sync_bytes"],
                 s["runner"]["host_logit_rows"])
 
-    calls0, steps0, sync0, logit_rows0 = dispatch_counters()
-
     n_streams = 1 if smoke else 2
     stream_toks = 8 if smoke else 32
     long_words = 30 if smoke else 120    # >= 8 prefill chunks when cold
-    ttfts, itls = [], []
 
-    def stream(i):
+    def mixed_pass(salt):
+        """One full mixed-traffic pass: decode streams + a long cold
+        prefill.  Returns (ttfts, itls, wall, counter deltas).  Run
+        TWICE: the first pass pays any stray bucket compiles its (B, C)
+        shapes first hit, the second measures the precompiled engine —
+        warm TTFT and ITL percentiles come from the warm pass so a
+        compile outlier can't masquerade as scheduling jitter."""
+        ttfts, itls = [], []
+        c0 = dispatch_counters()
+
+        def stream(i):
+            t0 = time.perf_counter()
+            it = eng.chat_completions_create(ChatCompletionRequest(
+                messages=[ChatMessage(
+                    "user", f"short chat message {salt} {i}")],
+                model="m", max_tokens=stream_toks, seed=i, stream=True))
+            last = None
+            for c in it:
+                now = time.perf_counter()
+                if c.choices and c.choices[0].delta.content:
+                    if last is None:
+                        ttfts.append(now - t0)
+                    else:
+                        itls.append(now - last)
+                    last = now
+
+        def long_prompt():
+            t0 = time.perf_counter()
+            it = eng.chat_completions_create(ChatCompletionRequest(
+                messages=[ChatMessage(
+                    "user", " ".join(f"word{salt}{j}"
+                                     for j in range(long_words)))],
+                model="m", max_tokens=4, seed=99, stream=True))
+            for c in it:
+                if c.choices and c.choices[0].delta.content:
+                    ttfts.append(time.perf_counter() - t0)
+                    break
+            for _ in it:
+                pass
+
+        ts = [threading.Thread(target=stream, args=(i,))
+              for i in range(n_streams)]
         t0 = time.perf_counter()
-        it = eng.chat_completions_create(ChatCompletionRequest(
-            messages=[ChatMessage("user", f"short chat message {i}")],
-            model="m", max_tokens=stream_toks, seed=i, stream=True))
-        last = None
-        for c in it:
-            now = time.perf_counter()
-            if c.choices and c.choices[0].delta.content:
-                if last is None:
-                    ttfts.append(now - t0)
-                else:
-                    itls.append(now - last)
-                last = now
+        for t in ts:
+            t.start()
+        time.sleep(0.1)                  # streams admit first
+        tl = threading.Thread(target=long_prompt)
+        tl.start()
+        for t in ts + [tl]:
+            t.join()
+        wall = time.perf_counter() - t0
+        c1 = dispatch_counters()
+        return ttfts, itls, wall, tuple(b - a for a, b in zip(c0, c1))
 
-    def long_prompt():
-        t0 = time.perf_counter()
-        it = eng.chat_completions_create(ChatCompletionRequest(
-            messages=[ChatMessage(
-                "user", " ".join(f"word{j}" for j in range(long_words)))],
-            model="m", max_tokens=4, seed=99, stream=True))
-        for c in it:
-            if c.choices and c.choices[0].delta.content:
-                ttfts.append(time.perf_counter() - t0)
-                break
-        for _ in it:
-            pass
-
-    ts = [threading.Thread(target=stream, args=(i,))
-          for i in range(n_streams)]
-    t0 = time.perf_counter()
-    for t in ts:
-        t.start()
-    time.sleep(0.1)                      # streams admit first
-    tl = threading.Thread(target=long_prompt)
-    tl.start()
-    for t in ts + [tl]:
-        t.join()
-    wall = time.perf_counter() - t0
-    calls, steps, sync, logit_rows = dispatch_counters()
-    calls, steps = calls - calls0, max(1, steps - steps0)
-    sync, logit_rows = sync - sync0, logit_rows - logit_rows0
+    cold_ttfts, _, _, cold_d = mixed_pass("c")
+    warm_ttfts, itls, wall, warm_d = mixed_pass("w")
+    calls, steps, sync, logit_rows = (a + b for a, b in zip(cold_d, warm_d))
+    steps = max(1, steps)
+    warm_steps = max(1, warm_d[1])
     # a lookup-friendly greedy request so the accept-rate row always
     # reflects real verify windows, even if the stochastic streams
     # rejected every draft
@@ -149,20 +163,26 @@ def _latency_rows(smoke: bool) -> list:
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
     return [
-        ("engine/mixed_ttft_p50", round(pct(ttfts, 50) * 1e6, 1),
-         f"{pct(ttfts, 50)*1e3:.1f}ms"),
-        ("engine/mixed_ttft_p95", round(pct(ttfts, 95) * 1e6, 1),
-         f"{pct(ttfts, 95)*1e3:.1f}ms"),
+        # cold-pass TTFT (first traffic after engine warmup: any stray
+        # bucket compile lands here, where it belongs)
+        ("engine/mixed_ttft_p50", round(pct(cold_ttfts, 50) * 1e6, 1),
+         f"{pct(cold_ttfts, 50)*1e3:.1f}ms"),
+        ("engine/mixed_ttft_p95", round(pct(cold_ttfts, 95) * 1e6, 1),
+         f"{pct(cold_ttfts, 95)*1e3:.1f}ms"),
+        # warm-pass TTFT: every (B, C) bucket this traffic hits is
+        # already compiled, so this is pure admission + prefill latency
+        ("engine/mixed_ttft_warm_p50", round(pct(warm_ttfts, 50) * 1e6, 1),
+         f"{pct(warm_ttfts, 50)*1e3:.1f}ms"),
         ("engine/mixed_itl_p50", round(pct(itls, 50) * 1e6, 1),
-         f"{pct(itls, 50)*1e3:.1f}ms"),
+         f"{pct(itls, 50)*1e3:.1f}ms_warm"),
         ("engine/mixed_itl_p95", round(pct(itls, 95) * 1e6, 1),
-         f"{pct(itls, 95)*1e3:.1f}ms_n={len(itls)}"),
+         f"{pct(itls, 95)*1e3:.1f}ms_warm_n={len(itls)}"),
         # the tentpole's dispatch reduction as a number, not a claim:
         # attention kernel dispatches per engine step (fused ragged = 1.0)
         ("engine/mixed_kernel_calls_per_step",
          round(calls / steps, 3), f"{calls}calls/{steps}steps"),
-        ("engine/mixed_steps_per_s", round(steps / wall, 2),
-         f"{steps}steps/{wall:.2f}s"),
+        ("engine/mixed_steps_per_s", round(warm_steps / wall, 2),
+         f"{warm_steps}steps/{wall:.2f}s_warm"),
         # the batched-sampling tentpole as numbers: device sampling cost
         # per step, and device→host payload per step — token ids and
         # logprobs only, never [B, V] logit planes (logit_rows == 0)
@@ -298,6 +318,46 @@ def _speculative_rows(smoke: bool) -> list:
              f"accept{est['accept_rate']}")]
 
 
+def _capacity_rows(smoke: bool) -> list:
+    """Resident-sequence capacity under a FIXED byte budget: how many
+    sequences fit before ``OutOfPages`` with bf16 KV pages vs int8 pages
+    (+ bf16 scales).  Both runners get ``budget // page_bytes`` physical
+    pages — int8 pages hold the same tokens but cost ~half the bytes, so
+    the quantized pool admits ~1.9x the sequences (Dh=64: 128 B/vector
+    bf16 vs 64 + 2 scale bytes int8)."""
+    from repro.core.paged_cache import OutOfPages
+    from repro.core.paged_runner import PagedModelRunner
+    from repro.models import model
+    from repro.models.pdef import init_params
+
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    params = init_params(model.params_def(cfg), jax.random.PRNGKey(0))
+    page_size, prompt_len = 8, 16                 # 2 pages per sequence
+
+    def mk(kv_dtype, num_pages):
+        return PagedModelRunner(
+            cfg, params, num_pages=num_pages, page_size=page_size,
+            max_slots=256, pages_per_seq=2, enable_prefix_cache=False,
+            chunk_size=prompt_len, kv_dtype=kv_dtype)
+
+    budget = (16 if smoke else 48) * mk("f32", 1).page_bytes
+    counts = {}
+    for kv_dtype in ("f32", "int8"):
+        runner = mk(kv_dtype, budget // mk(kv_dtype, 1).page_bytes)
+        n = 0
+        try:
+            while True:
+                runner.prefill_seq(list(range(1, prompt_len + 1)))
+                n += 1
+        except OutOfPages:
+            pass
+        counts[kv_dtype] = n
+    ratio = counts["int8"] / max(1, counts["f32"])
+    return [("engine/kv_capacity_seqs", round(ratio, 3),
+             f"{counts['int8']}seqs_int8_vs_{counts['f32']}seqs_bf16_"
+             f"same_byte_budget")]
+
+
 def _sample_us(vocab: int, rows: int, iters: int) -> float:
     """Microbench the fused sampling op at the mixed workload's shape
     (one decode row per stream, model vocab)."""
@@ -328,7 +388,8 @@ def _sample_us(vocab: int, rows: int, iters: int) -> float:
 
 def run(smoke: bool = False) -> list:
     return (_throughput_rows(smoke) + _latency_rows(smoke)
-            + _pipeline_rows(smoke) + _speculative_rows(smoke))
+            + _capacity_rows(smoke) + _pipeline_rows(smoke)
+            + _speculative_rows(smoke))
 
 
 if __name__ == "__main__":

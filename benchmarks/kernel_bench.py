@@ -85,6 +85,42 @@ def run(smoke: bool = False) -> list:
     rows.append((f"kernel/paged_ragged_{Bq}x{C}", us,
                  f"{flops/us/1e3:.1f}GFLOP/s(xla-cpu)"))
 
+    # quantized ragged decode (int8 KV pages, dequant fused into the
+    # gather).  Long-context decode is where quantized pages pay: the
+    # step is KV-bandwidth-bound, and int8 pools halve the bytes pulled
+    # per token.  The shape is fixed (not scaled down in smoke) because
+    # short contexts are compute-bound and the scale-multiply then LOSES
+    # — a smoke-scaled row would report the wrong sign.  Derived column
+    # is the speedup vs the bf16-pool baseline at the same shape.
+    Bq2, H2, Kv2, D2 = 1, 4, 4, 64
+    P2, psz2, pps2 = 1024, 16, 512         # ctx = 8192 tokens
+    q8 = jax.random.normal(ks[0], (Bq2, 1, H2, D2),
+                           jnp.float32).astype(jnp.bfloat16)
+    kb = jax.random.normal(ks[1], (P2, psz2, Kv2, D2),
+                           jnp.float32).astype(jnp.bfloat16)
+    vb = jax.random.normal(ks[2], (P2, psz2, Kv2, D2),
+                           jnp.float32).astype(jnp.bfloat16)
+    k8 = jax.random.randint(ks[1], (P2, psz2, Kv2, D2), -127, 128, jnp.int8)
+    v8 = jax.random.randint(ks[2], (P2, psz2, Kv2, D2), -127, 128, jnp.int8)
+    s8 = (jax.random.uniform(ks[0], (P2, psz2, Kv2)) * 0.02
+          ).astype(jnp.bfloat16)
+    pt8 = jax.random.randint(key, (Bq2, pps2), 0, P2)
+    ctx8 = jnp.full((Bq2,), pps2 * psz2, jnp.int32)
+    st8 = jnp.full((Bq2,), pps2 * psz2 - 1, jnp.int32)
+    f2d = jax.jit(lambda *a: ref.paged_ragged_attention_ref(*a))
+    f2e = jax.jit(lambda q, k, v, ks_, vs_, pt, cx, st:
+                  ref.paged_ragged_attention_ref(
+                      q, k, v, pt, cx, st, k_scales=ks_, v_scales=vs_))
+    # fixed iters + best-of-2 even in smoke: the row gates a speedup
+    # RATIO, and 2-iteration timings of a ~7 ms op swing more than the
+    # margin under ambient host load
+    us_bf16 = min(_time(f2d, q8, kb, vb, pt8, ctx8, st8, iters=8)
+                  for _ in range(3))
+    us_int8 = min(_time(f2e, q8, k8, v8, s8, s8, pt8, ctx8, st8, iters=8)
+                  for _ in range(3))
+    rows.append((f"kernel/paged_ragged_int8_{pps2*psz2}ctx", us_int8,
+                 f"{us_bf16/us_int8:.2f}x_vs_bf16_pages"))
+
     # w4a16 gemm (quantized matmul class)
     M, K, N = (32, 256, 256) if smoke else (128, 2048, 2048)
     x = (jax.random.normal(ks[0], (M, K), jnp.float32) * 0.1).astype(jnp.bfloat16)

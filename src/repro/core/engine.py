@@ -282,7 +282,8 @@ class MLCEngine:
                    max_cached_bytes: Optional[int] = None,
                    pipeline_depth: Optional[int] = None,
                    warmup: bool = False,
-                   speculation: str = "off", draft_k: int = 4):
+                   speculation: str = "off", draft_k: int = 4,
+                   kv_dtype: str = "f32", weight_quant: str = "off"):
         """Load a model under ``name`` for ``chat_completions_create``.
 
         Backends: ``"paged"`` serves every request through the paged KV
@@ -316,10 +317,28 @@ class MLCEngine:
             insert; ``None`` means bounded only by the page pool.
         ``max_cached_bytes``
             The same cap expressed in BYTES of KV payload — divided by
-            this model's per-page byte cost (``2 * n_layers * page_size
-            * n_kv_heads * head_dim * 2``), so one byte budget can
-            govern several loaded models of different shapes.  When
-            both caps are set the tighter one wins.
+            this model's per-page byte cost, computed from the actual
+            pool dtypes (``2 * n_layers * page_size * n_kv_heads *
+            (head_dim * kv_elem_bytes + scale_bytes)``: bf16 vectors by
+            default; int8 vectors plus a bf16 scale per (token,
+            kv-head) under ``kv_dtype="int8"``) — so one byte budget
+            can govern several loaded models of different shapes and
+            precisions.  When both caps are set the tighter one wins.
+        ``kv_dtype``
+            ``"int8"`` (paged only) stores KV pages quantized —
+            per-(token, kv-head) symmetric int8 with bf16 scales,
+            quantized at scatter time and dequantized INSIDE the fused
+            ragged attention kernel (still one kernel call per step).
+            Roughly halves page bytes, so ~2x sequences fit the same
+            pool.  ``"f32"`` (default) keeps today's bf16 pools
+            bit-for-bit.
+        ``weight_quant``
+            ``"w4a16"`` (paged only) serves int4 group-quantized
+            weights (``quant/int4.py``): projections and MLP matmuls
+            run through ``qdot`` — the Pallas ``w4a16_gemm`` kernel on
+            TPU, a fused dequant-matmul elsewhere.  Embeddings,
+            lm_head, and norms stay bf16.  ``"off"`` (default) serves
+            full-precision weights.
         ``page_size`` / ``num_pages``
             Tokens per physical KV page, and the pool size (default:
             ``(max_slots + 2) * ceil(max_context / page_size)`` — every
@@ -378,12 +397,16 @@ class MLCEngine:
                 enable_prefix_cache=enable_prefix_cache,
                 chunk_size=prefill_chunk_size,
                 max_cached_pages=max_cached_pages,
-                max_cached_bytes=max_cached_bytes)
+                max_cached_bytes=max_cached_bytes,
+                kv_dtype=kv_dtype, weight_quant=weight_quant)
             scheduler = Scheduler(max_slots=max_slots,
                                   max_context=max_context,
                                   page_manager=runner.pm)
             default_budget = max_slots + prefill_chunk_size
         elif backend == "dense":
+            assert kv_dtype == "f32", "dense backend: kv_dtype unsupported"
+            assert weight_quant == "off", \
+                "dense backend: weight_quant unsupported (use quantize=)"
             runner = ModelRunner(cfg, params, max_slots=max_slots,
                                  max_context=max_context, seed=seed,
                                  quantize=quantize,

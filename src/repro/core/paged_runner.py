@@ -54,6 +54,7 @@ from repro.models import model
 from repro.models.attention import _project, _qk_norm
 from repro.models.layers import apply_rope, mlp, rmsnorm
 from repro.models.pdef import init_params
+from repro.quant.int4 import qdot
 
 
 def paged_supported(cfg: ModelConfig) -> bool:
@@ -138,20 +139,35 @@ class PagedModelRunner:
                  enable_prefix_cache: bool = True,
                  chunk_size: int = 16,
                  max_cached_pages: Optional[int] = None,
-                 max_cached_bytes: Optional[int] = None):
+                 max_cached_bytes: Optional[int] = None,
+                 kv_dtype: str = "f32",
+                 weight_quant: str = "off"):
         assert paged_supported(cfg), f"{cfg.name}: paged path needs pure GQA"
         assert chunk_size >= 1
+        assert kv_dtype in ("f32", "int8"), kv_dtype
+        assert weight_quant in ("off", "w4a16"), weight_quant
         self.cfg = cfg
         self.page_size = page_size
         self.pages_per_seq = pages_per_seq
         self.max_slots = max_slots
         self.chunk_size = chunk_size
+        #: Python-static quantization switch: every traced step function
+        #: branches on it at TRACE time, so the f32 default compiles to
+        #: exactly the pre-quantization program
+        self.kv_quant = kv_dtype == "int8"
+        self.kv_dtype = kv_dtype
+        self.weight_quant = weight_quant
         self.pm = PageManager(num_pages, page_size, max_slots, pages_per_seq)
-        # K + V planes across every layer, bf16 — what one physical page
-        # of THIS model actually costs, so a byte cap can govern several
-        # loaded models with one number
+        # K + V planes across every layer — what one physical page of
+        # THIS model actually costs, so a byte cap can govern several
+        # loaded models with one number.  Derived from the actual pool
+        # dtypes: bf16 K/V vectors by default; int8 vectors plus one
+        # bf16 scale per (token, kv-head) when the pool is quantized.
+        kv_elem = 1 if self.kv_quant else jnp.dtype(jnp.bfloat16).itemsize
+        scale_bytes = jnp.dtype(jnp.bfloat16).itemsize if self.kv_quant \
+            else 0
         self.page_bytes = (2 * cfg.n_layers * page_size * cfg.n_kv_heads
-                           * cfg.head_dim * 2)
+                           * (cfg.head_dim * kv_elem + scale_bytes))
         self.prefix_cache = (
             PrefixCache(self.pm, max_cached_pages=max_cached_pages,
                         max_cached_bytes=max_cached_bytes,
@@ -205,40 +221,59 @@ class PagedModelRunner:
         if params is None:
             params = init_params(model.params_def(cfg),
                                  jax.random.PRNGKey(seed))
+        if weight_quant == "w4a16":
+            from repro.quant.int4 import quantize_tree
+            params = quantize_tree(params, model.params_def(cfg))
         self.params = params
         L, Kv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         # one extra physical page (index num_pages) absorbs the K/V
         # writes of a padded final chunk's pad rows — never in any
         # page table, never read
         self.trash_page = num_pages
+        pool_dtype = jnp.int8 if self.kv_quant else jnp.bfloat16
         self.k_pages = jnp.zeros((L, num_pages + 1, page_size, Kv, Dh),
-                                 jnp.bfloat16)
+                                 pool_dtype)
         self.v_pages = jnp.zeros_like(self.k_pages)
-        self._step = jax.jit(self._decode_step, donate_argnums=(1, 2))
+        # per-(token, kv-head) dequant scale planes, mirroring the pool
+        # page layout so the page table routes them too.  In f32 mode
+        # they are tiny placeholders: every jit signature carries them
+        # (donated + rebound like the pools) so both modes share one
+        # call protocol, but no traced op ever touches them.
+        scale_shape = ((L, num_pages + 1, page_size, Kv)
+                       if self.kv_quant else (L, 1, 1, 1))
+        self.k_scales = jnp.zeros(scale_shape, jnp.bfloat16)
+        self.v_scales = jnp.zeros(scale_shape, jnp.bfloat16)
+        self._step = jax.jit(self._decode_step, donate_argnums=(1, 2, 3, 4))
         self._chunk_step = jax.jit(self._prefill_chunk_step,
-                                   donate_argnums=(1, 2))
+                                   donate_argnums=(1, 2, 3, 4))
         # one jit object: variants are cached per traced (B, C) bucket;
         # run_step pads both to powers of two so the count stays bounded
         # at O(log(max_slots) * log(max chunk tokens))
-        self._ragged_jit = jax.jit(self._ragged_step, donate_argnums=(1, 2))
+        self._ragged_jit = jax.jit(self._ragged_step,
+                                   donate_argnums=(1, 2, 3, 4))
         # the fused logits→token variant the engine drives: sampling is
         # chained after ragged attention INSIDE the same jitted step, so
         # a whole engine step stays one dispatch and only token ids (not
         # [B, V] logits) come back; variants add (S, n_top) buckets.
-        # The count planes (arg 3) ride donated through every step like
-        # the page pools, so penalty bookkeeping stays device-resident.
+        # The count planes (arg 5) ride donated through every step like
+        # the page pools and scale planes, so penalty bookkeeping stays
+        # device-resident.
         self._ragged_sample_jit = jax.jit(
-            self._ragged_sample_step, donate_argnums=(1, 2, 3),
+            self._ragged_sample_step, donate_argnums=(1, 2, 3, 4, 5),
             static_argnames=("vocab", "n_top", "use_planes",
                              "all_greedy", "need_logprobs", "use_counts"))
 
-        def _copy(k, v, src, dst):
-            return (k.at[:, dst].set(k[:, src]),
-                    v.at[:, dst].set(v[:, src]))
+        def _copy(k, v, ks, vs, src, dst):
+            k = k.at[:, dst].set(k[:, src])
+            v = v.at[:, dst].set(v[:, src])
+            if self.kv_quant:    # placeholders have no page dim to copy
+                ks = ks.at[:, dst].set(ks[:, src])
+                vs = vs.at[:, dst].set(vs[:, src])
+            return k, v, ks, vs
 
         # donated so XLA updates the pools in place instead of copying
         # the whole K/V buffers per CoW fork
-        self._copy_jit = jax.jit(_copy, donate_argnums=(0, 1))
+        self._copy_jit = jax.jit(_copy, donate_argnums=(0, 1, 2, 3))
         # donated single-row overwrite: re-seeds one count-plane row
         # from the host oracle at slot bind/resume
         self._seed_plane_jit = jax.jit(
@@ -261,8 +296,48 @@ class PagedModelRunner:
         layers += list(self.params["decoder"]["suffix"])
         return layers
 
-    def _decode_step(self, params, k_pages, v_pages, token, pos,
-                     page_table, lens, page_idx, page_off):
+    @staticmethod
+    def _page_quant(x):
+        """Symmetric per-(token, kv-head) int8 quantization of K/V rows:
+        ``x [..., Kv, Dh] -> (int8 values, bf16 scales [..., Kv])``.
+        Dequant is ``values * scale`` — exactly the multiply the paged
+        kernels fuse into their page loop."""
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+        return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+    def _scatter_kv(self, k_pages, v_pages, k_scales, v_scales,
+                    li, page_idx, page_off, k, v):
+        """Scatter one layer's new K/V rows ([N, Kv, Dh]) into the page
+        pools — quantizing at scatter time (values + scales) when the
+        pool is int8.  The branch is on a Python flag, so each mode
+        traces to a single-path program."""
+        if self.kv_quant:
+            kq, ks = self._page_quant(k)
+            vq, vs = self._page_quant(v)
+            k_pages = k_pages.at[li, page_idx, page_off].set(kq)
+            v_pages = v_pages.at[li, page_idx, page_off].set(vq)
+            k_scales = k_scales.at[li, page_idx, page_off].set(ks)
+            v_scales = v_scales.at[li, page_idx, page_off].set(vs)
+        else:
+            k_pages = k_pages.at[li, page_idx, page_off].set(
+                k.astype(k_pages.dtype))
+            v_pages = v_pages.at[li, page_idx, page_off].set(
+                v.astype(v_pages.dtype))
+        return k_pages, v_pages, k_scales, v_scales
+
+    def _layer_scales(self, k_scales, v_scales, li):
+        """Per-layer scale operands for the attention kernels: the real
+        planes when quantized, ``None`` (the unquantized kernel variant)
+        otherwise."""
+        if self.kv_quant:
+            return k_scales[li], v_scales[li]
+        return None, None
+
+    def _decode_step(self, params, k_pages, v_pages, k_scales, v_scales,
+                     token, pos, page_table, lens, page_idx, page_off):
         """token [B,1], pos [B], page_table [B,pps], lens [B] (incl. the
         new token), page_idx/page_off [B]: physical write location."""
         cfg = self.cfg
@@ -278,13 +353,14 @@ class PagedModelRunner:
             q = apply_rope(q, pos[:, None], cfg.rope_theta)
             k = apply_rope(k, pos[:, None], cfg.rope_theta)
             # scatter the new K/V into each sequence's current page
-            k_pages = k_pages.at[li, page_idx, page_off].set(
-                k[:, 0].astype(k_pages.dtype))
-            v_pages = v_pages.at[li, page_idx, page_off].set(
-                v[:, 0].astype(v_pages.dtype))
+            k_pages, v_pages, k_scales, v_scales = self._scatter_kv(
+                k_pages, v_pages, k_scales, v_scales, li, page_idx,
+                page_off, k[:, 0], v[:, 0])
+            ks, vs = self._layer_scales(k_scales, v_scales, li)
             att = paged_attention(q[:, 0], k_pages[li], v_pages[li],
-                                  page_table, lens)           # [B,H,Dh]
-            y = att.reshape(B, 1, -1) @ p["attn"]["wo"]
+                                  page_table, lens,
+                                  k_scales=ks, v_scales=vs)   # [B,H,Dh]
+            y = qdot(att.reshape(B, 1, -1), p["attn"]["wo"])
             x = x + y
             h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
             x = x + mlp(h, p["ffn"], cfg.act)
@@ -293,10 +369,11 @@ class PagedModelRunner:
             logits = x @ params["embed"].T
         else:
             logits = x @ params["lm_head"]
-        return logits, k_pages, v_pages
+        return logits, k_pages, v_pages, k_scales, v_scales
 
-    def _prefill_chunk_step(self, params, k_pages, v_pages, tokens, pos,
-                            page_table, ctx, start, page_idx, page_off):
+    def _prefill_chunk_step(self, params, k_pages, v_pages, k_scales,
+                            v_scales, tokens, pos, page_table, ctx, start,
+                            page_idx, page_off):
         """One chunked-prefill step for a single sequence.
 
         tokens/pos/page_idx/page_off [C] (C = chunk_size, padded);
@@ -317,13 +394,15 @@ class PagedModelRunner:
             q, k = _qk_norm(cfg, p["attn"], q, k)
             q = apply_rope(q, pos[None, :], cfg.rope_theta)
             k = apply_rope(k, pos[None, :], cfg.rope_theta)
-            k_pages = k_pages.at[li, page_idx, page_off].set(
-                k[0].astype(k_pages.dtype))
-            v_pages = v_pages.at[li, page_idx, page_off].set(
-                v[0].astype(v_pages.dtype))
+            k_pages, v_pages, k_scales, v_scales = self._scatter_kv(
+                k_pages, v_pages, k_scales, v_scales, li, page_idx,
+                page_off, k[0], v[0])
+            ks, vs = self._layer_scales(k_scales, v_scales, li)
             att = paged_prefill_attention(q[0], k_pages[li], v_pages[li],
-                                          page_table, ctx, start)  # [C,H,Dh]
-            y = att.reshape(1, C, -1) @ p["attn"]["wo"]
+                                          page_table, ctx, start,
+                                          k_scales=ks,
+                                          v_scales=vs)         # [C,H,Dh]
+            y = qdot(att.reshape(1, C, -1), p["attn"]["wo"])
             x = x + y
             h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
             x = x + mlp(h, p["ffn"], cfg.act)
@@ -332,10 +411,10 @@ class PagedModelRunner:
             logits = x @ params["embed"].T
         else:
             logits = x @ params["lm_head"]
-        return logits[0], k_pages, v_pages
+        return logits[0], k_pages, v_pages, k_scales, v_scales
 
-    def _ragged_logits(self, params, k_pages, v_pages, tokens, pos,
-                       page_tables, contexts, starts, lengths,
+    def _ragged_logits(self, params, k_pages, v_pages, k_scales, v_scales,
+                       tokens, pos, page_tables, contexts, starts, lengths,
                        page_idx, page_off):
         """One fused ragged step over B packed rows of C slots each.
 
@@ -364,15 +443,15 @@ class PagedModelRunner:
             q, k = _qk_norm(cfg, p["attn"], q, k)
             q = apply_rope(q, pos[None, :], cfg.rope_theta)
             k = apply_rope(k, pos[None, :], cfg.rope_theta)
-            k_pages = k_pages.at[li, page_idx, page_off].set(
-                k[0].astype(k_pages.dtype))
-            v_pages = v_pages.at[li, page_idx, page_off].set(
-                v[0].astype(v_pages.dtype))
+            k_pages, v_pages, k_scales, v_scales = self._scatter_kv(
+                k_pages, v_pages, k_scales, v_scales, li, page_idx,
+                page_off, k[0], v[0])
+            ks, vs = self._layer_scales(k_scales, v_scales, li)
             att = paged_ragged_attention(
                 q[0].reshape(B, C, cfg.n_heads, cfg.head_dim),
                 k_pages[li], v_pages[li], page_tables, contexts,
-                starts)                                        # [B,C,H,Dh]
-            y = att.reshape(1, N, -1) @ p["attn"]["wo"]
+                starts, k_scales=ks, v_scales=vs)              # [B,C,H,Dh]
+            y = qdot(att.reshape(1, N, -1), p["attn"]["wo"])
             x = x + y
             h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
             x = x + mlp(h, p["ffn"], cfg.act)
@@ -381,22 +460,24 @@ class PagedModelRunner:
             logits = x @ params["embed"].T
         else:
             logits = x @ params["lm_head"]
-        return logits[0].reshape(B, C, -1), k_pages, v_pages
+        return (logits[0].reshape(B, C, -1), k_pages, v_pages,
+                k_scales, v_scales)
 
-    def _ragged_step(self, params, k_pages, v_pages, tokens, pos,
-                     page_tables, contexts, starts, lengths,
+    def _ragged_step(self, params, k_pages, v_pages, k_scales, v_scales,
+                     tokens, pos, page_tables, contexts, starts, lengths,
                      page_idx, page_off):
         """Legacy logits-path reduce over :meth:`_ragged_logits`: each
         row's last-valid-slot logits [B, V]."""
-        logits, k_pages, v_pages = self._ragged_logits(
-            params, k_pages, v_pages, tokens, pos, page_tables,
-            contexts, starts, lengths, page_idx, page_off)
+        logits, k_pages, v_pages, k_scales, v_scales = self._ragged_logits(
+            params, k_pages, v_pages, k_scales, v_scales, tokens, pos,
+            page_tables, contexts, starts, lengths, page_idx, page_off)
         C = logits.shape[1]
         last = jnp.clip(lengths - 1, 0, C - 1)
         out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
-        return out, k_pages, v_pages
+        return out, k_pages, v_pages, k_scales, v_scales
 
-    def _ragged_sample_step(self, params, k_pages, v_pages, count_planes,
+    def _ragged_sample_step(self, params, k_pages, v_pages, k_scales,
+                            v_scales, count_planes,
                             tokens, pos, page_tables, contexts, starts,
                             lengths, page_idx, page_off, prev_tokens,
                             tok_src, parent, offsets, seeds, counters,
@@ -439,9 +520,9 @@ class PagedModelRunner:
         ``[B, V]`` logits never leave the device."""
         tokens = jnp.where(tok_src >= 0,
                            prev_tokens[jnp.clip(tok_src, 0)], tokens)
-        logits, k_pages, v_pages = self._ragged_logits(
-            params, k_pages, v_pages, tokens, pos, page_tables,
-            contexts, starts, lengths, page_idx, page_off)
+        logits, k_pages, v_pages, k_scales, v_scales = self._ragged_logits(
+            params, k_pages, v_pages, k_scales, v_scales, tokens, pos,
+            page_tables, contexts, starts, lengths, page_idx, page_off)
         rows = logits[parent, offsets][:, :vocab]
         if use_counts:
             counts = count_planes[slot_rows]
@@ -462,7 +543,8 @@ class PagedModelRunner:
             # whose penalties are all zero, where counts have no effect
             # and the next penalty-bearing bind re-seeds anyway
             count_planes = count_planes.at[slot_rows, out[0]].add(1.0)
-        return out + (emit,), k_pages, v_pages, count_planes
+        return (out + (emit,), k_pages, v_pages, k_scales, v_scales,
+                count_planes)
 
     def _layer_params_traced(self, params):
         g = self.cfg.grouped_pattern()
@@ -543,10 +625,13 @@ class PagedModelRunner:
         tok = np.zeros(C, np.int32)
         tok[:T] = tokens
         table = self.pm.page_table([sid])[0]
-        logits, self.k_pages, self.v_pages = self._chunk_step(
-            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
-            jnp.asarray(pos), jnp.asarray(table), np.int32(start + T),
-            np.int32(start), jnp.asarray(page_idx), jnp.asarray(page_off))
+        logits, self.k_pages, self.v_pages, self.k_scales, self.v_scales = \
+            self._chunk_step(
+                self.params, self.k_pages, self.v_pages, self.k_scales,
+                self.v_scales, jnp.asarray(tok),
+                jnp.asarray(pos), jnp.asarray(table), np.int32(start + T),
+                np.int32(start), jnp.asarray(page_idx),
+                jnp.asarray(page_off))
         self.seq_tokens[sid].extend(tokens)
         self.n_prefill_chunks += 1
         self.n_prefill_tokens += T
@@ -701,8 +786,10 @@ class PagedModelRunner:
         else:
             assert prev is None and not decode_srcs, \
                 "device-fed tokens need the fused sampled path"
-            logits, self.k_pages, self.v_pages = self._ragged_jit(
-                self.params, self.k_pages, self.v_pages, *attn_args)
+            logits, self.k_pages, self.v_pages, self.k_scales, \
+                self.v_scales = self._ragged_jit(
+                    self.params, self.k_pages, self.v_pages,
+                    self.k_scales, self.v_scales, *attn_args)
             if return_logits:
                 out = np.asarray(logits.astype(jnp.float32))
                 self.host_logit_rows += B
@@ -786,8 +873,10 @@ class PagedModelRunner:
              sampling.use_planes, sampling.use_counts,
              sampling.all_greedy, sampling.need_logprobs))
         (token, lp, top_ids, top_lps, emit), self.k_pages, self.v_pages, \
-            self.count_planes = self._ragged_sample_jit(
+            self.k_scales, self.v_scales, self.count_planes = \
+            self._ragged_sample_jit(
                 self.params, self.k_pages, self.v_pages,
+                self.k_scales, self.v_scales,
                 self.count_planes, *attn_args,
                 prev_tok, jnp.asarray(tok_src),
                 pad("parent", sampling.parent),
@@ -846,9 +935,11 @@ class PagedModelRunner:
         return sid
 
     def _copy_page(self, src: int, dst: int):
-        """Copy one physical page's K/V payload across every layer."""
-        self.k_pages, self.v_pages = self._copy_jit(
-            self.k_pages, self.v_pages, src, dst)
+        """Copy one physical page's K/V payload (values AND dequant
+        scales, when quantized) across every layer."""
+        self.k_pages, self.v_pages, self.k_scales, self.v_scales = \
+            self._copy_jit(self.k_pages, self.v_pages, self.k_scales,
+                           self.v_scales, src, dst)
 
     def last_prefill_logits(self) -> np.ndarray:
         return self._last_logits_np
@@ -878,10 +969,13 @@ class PagedModelRunner:
              for s, p in zip(sids, pos)], np.int32)
         page_off = (pos % self.page_size).astype(np.int32)
         tok = np.array([[seq_tokens[s]] for s in sids], np.int32)
-        logits, self.k_pages, self.v_pages = self._step(
-            self.params, self.k_pages, self.v_pages, jnp.asarray(tok),
-            jnp.asarray(pos.astype(np.int32)), jnp.asarray(table),
-            jnp.asarray(lens), jnp.asarray(page_idx), jnp.asarray(page_off))
+        logits, self.k_pages, self.v_pages, self.k_scales, self.v_scales = \
+            self._step(
+                self.params, self.k_pages, self.v_pages, self.k_scales,
+                self.v_scales, jnp.asarray(tok),
+                jnp.asarray(pos.astype(np.int32)), jnp.asarray(table),
+                jnp.asarray(lens), jnp.asarray(page_idx),
+                jnp.asarray(page_off))
         for s in sids:
             if s in self.seq_tokens:
                 self.seq_tokens[s].append(int(seq_tokens[s]))
@@ -1009,9 +1103,11 @@ class PagedModelRunner:
                        bool(all_greedy), False)
                 if key in self._seen_buckets:
                     continue
-                _, self.k_pages, self.v_pages, self.count_planes = \
+                _, self.k_pages, self.v_pages, self.k_scales, \
+                    self.v_scales, self.count_planes = \
                     self._ragged_sample_jit(
                         self.params, self.k_pages, self.v_pages,
+                        self.k_scales, self.v_scales,
                         self.count_planes, *attn,
                         jnp.zeros(Pb, jnp.int32),        # prev_tokens
                         jnp.full(N, -1, jnp.int32),      # tok_src
@@ -1062,6 +1158,9 @@ class PagedModelRunner:
         steps`` should be 1.0 (surfaced by the mixed-traffic benchmark
         as ``kernel_calls_per_step``)."""
         out = {"pages": self.pm.stats(),
+               "kv_dtype": self.kv_dtype,
+               "weight_quant": self.weight_quant,
+               "page_bytes": self.page_bytes,
                "prefills": self.n_prefills,
                "forks": self.n_forks,
                "chunk_size": self.chunk_size,
@@ -1111,7 +1210,8 @@ class PagedEngineBackend:
                  num_pages: Optional[int] = None, seed: int = 0,
                  enable_prefix_cache: bool = True, chunk_size: int = 16,
                  max_cached_pages: Optional[int] = None,
-                 max_cached_bytes: Optional[int] = None):
+                 max_cached_bytes: Optional[int] = None,
+                 kv_dtype: str = "f32", weight_quant: str = "off"):
         pages_per_seq = -(-max_context // page_size)
         if num_pages is None:
             # room for every slot at full context plus cache headroom
@@ -1121,7 +1221,8 @@ class PagedEngineBackend:
             max_slots=max_slots, pages_per_seq=pages_per_seq, seed=seed,
             enable_prefix_cache=enable_prefix_cache, chunk_size=chunk_size,
             max_cached_pages=max_cached_pages,
-            max_cached_bytes=max_cached_bytes)
+            max_cached_bytes=max_cached_bytes,
+            kv_dtype=kv_dtype, weight_quant=weight_quant)
         self.cfg = cfg
         self.max_context = max_context
         self.max_slots = max_slots

@@ -34,31 +34,39 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q, k_pages, v_pages, page_table, context_lens, *,
+                    k_scales=None, v_scales=None,
                     scale: Optional[float] = None,
                     interpret: Optional[bool] = None):
     return _paged(q, k_pages, v_pages, page_table, context_lens,
+                  k_scales=k_scales, v_scales=v_scales,
                   scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_prefill_attention(q, k_pages, v_pages, page_table, context,
-                            start, *, scale: Optional[float] = None,
+                            start, *, k_scales=None, v_scales=None,
+                            scale: Optional[float] = None,
                             interpret: Optional[bool] = None):
     return _paged_prefill(q, k_pages, v_pages, page_table, context, start,
+                          k_scales=k_scales, v_scales=v_scales,
                           scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_ragged_attention(q, k_pages, v_pages, page_tables, contexts,
-                           starts, *, scale: Optional[float] = None,
+                           starts, *, k_scales=None, v_scales=None,
+                           scale: Optional[float] = None,
                            interpret: Optional[bool] = None):
     """One fused ragged attention step: q [B, C, H, D] mixed decode +
     prefill-chunk rows, each against its own page-table row.  Jit
     variants are keyed by the (B, C) shape — callers bucket both to
     powers of two so the variant count stays bounded (see
-    ``PagedModelRunner.run_step``)."""
+    ``PagedModelRunner.run_step``).  Passing ``k_scales``/``v_scales``
+    ([P, page_size, Kv]) selects the quantized-pool variant with dequant
+    fused into the page loop."""
     return _paged_ragged(q, k_pages, v_pages, page_tables, contexts,
-                         starts, scale=scale, interpret=interpret)
+                         starts, k_scales=k_scales, v_scales=v_scales,
+                         scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_top", "use_planes",

@@ -60,9 +60,13 @@ NEG_INF = -1e30
 
 
 def _kernel(page_table_ref, lens_ref,          # scalar-prefetch refs
-            q_ref, k_ref, v_ref, o_ref,        # blocks
-            m_scr, l_scr, acc_scr, *,
-            scale: float, page_size: int, pages_per_seq: int):
+            q_ref, k_ref, v_ref, *rest,        # blocks (+scales), out, scr
+            scale: float, page_size: int, pages_per_seq: int,
+            quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -80,6 +84,11 @@ def _kernel(page_table_ref, lens_ref,          # scalar-prefetch refs
         q = q_ref[0, 0].astype(jnp.float32)       # [G, D]
         k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
         v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        if quantized:
+            # fused dequant: per-(token, kv-head) scale multiplied into
+            # the VMEM tile — no f32 copy of the pool ever materializes
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [G, page]
@@ -104,14 +113,21 @@ def _kernel(page_table_ref, lens_ref,          # scalar-prefetch refs
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, context_lens: jax.Array, *,
+                    k_scales: Optional[jax.Array] = None,
+                    v_scales: Optional[jax.Array] = None,
                     scale: Optional[float] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
-    """Returns [B, H, D] attention output over the paged KV cache."""
+    """Returns [B, H, D] attention output over the paged KV cache.
+
+    With ``k_scales``/``v_scales`` ([P, page_size, Kv]) the pools hold
+    quantized values and dequant is fused into the page loop.
+    """
     B, H, D = q.shape
     P, page_size, Kv, _ = k_pages.shape
     pages_per_seq = page_table.shape[1]
     G = H // Kv
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scales is not None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
@@ -127,14 +143,23 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         # scalar-prefetched page table routes the DMA to the physical page
         return (pt[b, pi], 0, kv, 0)
 
+    def scales_map(b, kv, pi, pt, lens):
+        return (pt[b, pi], 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), q_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+    ]
+    operands = [page_table, context_lens, qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scales_map)] * 2
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), q_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
@@ -144,20 +169,24 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, page_size=page_size,
-                          pages_per_seq=pages_per_seq),
+                          pages_per_seq=pages_per_seq, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Kv, G, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(page_table, context_lens, qg, k_pages, v_pages)
+    )(*operands)
     return out.reshape(B, H, D)
 
 
 def _prefill_kernel(page_table_ref, meta_ref,      # scalar-prefetch refs
-                    q_ref, k_ref, v_ref, o_ref,    # blocks
-                    m_scr, l_scr, acc_scr, *,
-                    scale: float, page_size: int, n_group: int):
+                    q_ref, k_ref, v_ref, *rest,    # blocks (+scales), out
+                    scale: float, page_size: int, n_group: int,
+                    quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     pi = pl.program_id(1)
 
     @pl.when(pi == 0)
@@ -175,6 +204,9 @@ def _prefill_kernel(page_table_ref, meta_ref,      # scalar-prefetch refs
         q = q_ref[0].astype(jnp.float32)          # [C*G, D]
         k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
         v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        if quantized:
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [C*G, page]
@@ -205,6 +237,8 @@ def _prefill_kernel(page_table_ref, meta_ref,      # scalar-prefetch refs
 def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
                             v_pages: jax.Array, page_table: jax.Array,
                             context: jax.Array, start: jax.Array, *,
+                            k_scales: Optional[jax.Array] = None,
+                            v_scales: Optional[jax.Array] = None,
                             scale: Optional[float] = None,
                             interpret: Optional[bool] = None) -> jax.Array:
     """Chunked prefill: C query tokens of one sequence attend to its page
@@ -220,6 +254,7 @@ def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
     pages_per_seq = page_table.shape[0]
     G = H // Kv
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scales is not None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
@@ -237,14 +272,23 @@ def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
         # scalar-prefetched page table routes the DMA to the physical page
         return (pt[pi], 0, kv, 0)
 
+    def scales_map(kv, pi, pt, meta):
+        return (pt[pi], 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, C * G, D), q_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+    ]
+    operands = [page_table, meta, qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scales_map)] * 2
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, C * G, D), q_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C * G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((C * G, 1), jnp.float32),
@@ -254,20 +298,25 @@ def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_prefill_kernel, scale=scale,
-                          page_size=page_size, n_group=G),
+                          page_size=page_size, n_group=G,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Kv, C * G, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(page_table, meta, qg, k_pages, v_pages)
+    )(*operands)
     return out.reshape(Kv, C, G, D).transpose(1, 0, 2, 3).reshape(C, H, D)
 
 
 def _ragged_kernel(page_tables_ref, contexts_ref, starts_ref,   # prefetch
-                   q_ref, k_ref, v_ref, o_ref,                  # blocks
-                   m_scr, l_scr, acc_scr, *,
-                   scale: float, page_size: int, n_group: int):
+                   q_ref, k_ref, v_ref, *rest,    # blocks (+scales), out
+                   scale: float, page_size: int, n_group: int,
+                   quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -286,6 +335,11 @@ def _ragged_kernel(page_tables_ref, contexts_ref, starts_ref,   # prefetch
         q = q_ref[0, 0].astype(jnp.float32)       # [C*G, D]
         k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
         v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+        if quantized:
+            # fused dequant: the int8 page tile is rescaled in VMEM by
+            # its per-(token, kv-head) scale — nothing f32 hits HBM
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [C*G, page]
@@ -315,6 +369,8 @@ def _ragged_kernel(page_tables_ref, contexts_ref, starts_ref,   # prefetch
 def paged_ragged_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, page_tables: jax.Array,
                            contexts: jax.Array, starts: jax.Array, *,
+                           k_scales: Optional[jax.Array] = None,
+                           v_scales: Optional[jax.Array] = None,
                            scale: Optional[float] = None,
                            interpret: Optional[bool] = None) -> jax.Array:
     """Ragged multi-sequence paged attention: one kernel invocation for a
@@ -332,12 +388,17 @@ def paged_ragged_attention(q: jax.Array, k_pages: jax.Array,
     rows signal themselves with ``contexts[b] == 0`` and output zeros.
     The caller must have scattered all B rows' K/V (pads into a trash
     page outside every page table) before invoking.
+
+    With ``k_scales``/``v_scales`` ([P, page_size, Kv]) the pools hold
+    quantized (int8) values; each page tile is dequantized in VMEM by a
+    scale-multiply fused into the page loop.
     """
     B, C, H, D = q.shape
     _, page_size, Kv, _ = k_pages.shape
     pages_per_seq = page_tables.shape[1]
     G = H // Kv
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scales is not None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
@@ -355,14 +416,23 @@ def paged_ragged_attention(q: jax.Array, k_pages: jax.Array,
         # physical page backing this sequence's pi-th logical page
         return (pt[b, pi], 0, kv, 0)
 
+    def scales_map(b, kv, pi, pt, ctx, st):
+        return (pt[b, pi], 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, C * G, D), q_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+        pl.BlockSpec((1, page_size, 1, D), kv_map),
+    ]
+    operands = [page_tables, contexts, starts, qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scales_map)] * 2
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, C * G, D), q_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-            pl.BlockSpec((1, page_size, 1, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, C * G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((C * G, 1), jnp.float32),
@@ -372,12 +442,13 @@ def paged_ragged_attention(q: jax.Array, k_pages: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_ragged_kernel, scale=scale,
-                          page_size=page_size, n_group=G),
+                          page_size=page_size, n_group=G,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Kv, C * G, D), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(page_tables, contexts, starts, qg, k_pages, v_pages)
+    )(*operands)
     return (out.reshape(B, Kv, C, G, D).transpose(0, 2, 1, 3, 4)
             .reshape(B, C, H, D))

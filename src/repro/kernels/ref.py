@@ -14,6 +14,19 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def _dequant_gather(pages, scales, table, flat_len):
+    """Gather ``pages[table]`` flattened to [..., flat_len, Kv, D] and —
+    when per-(token, kv-head) ``scales`` are given — dequantize in f32."""
+    D = pages.shape[-1]
+    Kv = pages.shape[-2]
+    lead = table.shape[:-1]
+    out = pages[table].reshape(*lead, flat_len, Kv, D).astype(jnp.float32)
+    if scales is not None:
+        s = scales[table].reshape(*lead, flat_len, Kv)
+        out = out * s[..., None].astype(jnp.float32)
+    return out
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True,
                         window: int = 0,
@@ -40,11 +53,14 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         page_table: jax.Array, context_lens: jax.Array,
-                        *, scale: Optional[float] = None) -> jax.Array:
+                        *, k_scales: Optional[jax.Array] = None,
+                        v_scales: Optional[jax.Array] = None,
+                        scale: Optional[float] = None) -> jax.Array:
     """Decode attention over a paged KV cache.
 
     q: [B, H, D]; k_pages/v_pages: [P, page_size, Kv, D];
     page_table: [B, pages_per_seq] int32; context_lens: [B] int32.
+    Optional k_scales/v_scales ([P, page_size, Kv]) dequantize int8 pools.
     """
     B, H, D = q.shape
     P, page_size, Kv, _ = k_pages.shape
@@ -53,11 +69,11 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     scale = D ** -0.5 if scale is None else scale
 
     # gather each sequence's pages -> [B, pages_per_seq*page_size, Kv, D]
-    k = k_pages[page_table].reshape(B, pages_per_seq * page_size, Kv, D)
-    v = v_pages[page_table].reshape(B, pages_per_seq * page_size, Kv, D)
+    flat = pages_per_seq * page_size
+    k = _dequant_gather(k_pages, k_scales, page_table, flat)
+    v = _dequant_gather(v_pages, v_scales, page_table, flat)
     qf = q.reshape(B, Kv, G, D).astype(jnp.float32)
-    scores = jnp.einsum("bkgd,btkd->bkgt", qf,
-                        k.astype(jnp.float32)) * scale
+    scores = jnp.einsum("bkgd,btkd->bkgt", qf, k) * scale
     t = jnp.arange(pages_per_seq * page_size)[None, :]
     valid = t < context_lens[:, None]
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
@@ -69,12 +85,15 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
                                 v_pages: jax.Array, page_table: jax.Array,
                                 context, start, *,
+                                k_scales: Optional[jax.Array] = None,
+                                v_scales: Optional[jax.Array] = None,
                                 scale: Optional[float] = None) -> jax.Array:
     """Chunked prefill attention over one sequence's paged KV cache.
 
     q: [C, H, D] (chunk of queries at positions start..start+C-1);
     k_pages/v_pages: [P, page_size, Kv, D]; page_table: [pages_per_seq].
     Keys at t >= context are masked; query row i sees keys t <= start+i.
+    Optional k_scales/v_scales ([P, page_size, Kv]) dequantize int8 pools.
     """
     C, H, D = q.shape
     P, page_size, Kv, _ = k_pages.shape
@@ -82,11 +101,11 @@ def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
     G = H // Kv
     scale = D ** -0.5 if scale is None else scale
 
-    k = k_pages[page_table].reshape(pages_per_seq * page_size, Kv, D)
-    v = v_pages[page_table].reshape(pages_per_seq * page_size, Kv, D)
+    flat = pages_per_seq * page_size
+    k = _dequant_gather(k_pages, k_scales, page_table, flat)
+    v = _dequant_gather(v_pages, v_scales, page_table, flat)
     qf = q.reshape(C, Kv, G, D).astype(jnp.float32)
-    scores = jnp.einsum("ckgd,tkd->ckgt", qf,
-                        k.astype(jnp.float32)) * scale
+    scores = jnp.einsum("ckgd,tkd->ckgt", qf, k) * scale
     t = jnp.arange(pages_per_seq * page_size)[None, :]
     qpos = start + jnp.arange(C)[:, None]
     mask = (t < context) & (t <= qpos)
@@ -99,6 +118,8 @@ def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
 def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, page_tables: jax.Array,
                                contexts: jax.Array, starts: jax.Array, *,
+                               k_scales: Optional[jax.Array] = None,
+                               v_scales: Optional[jax.Array] = None,
                                scale: Optional[float] = None) -> jax.Array:
     """Ragged multi-sequence chunk attention (one fused engine step).
 
@@ -109,6 +130,7 @@ def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
     each row is exactly ``paged_prefill_attention_ref`` over its own
     page-table row (the per-sequence oracle the kernel must match).
     Rows with ``contexts[b] == 0`` (batch padding) return zeros.
+    Optional k_scales/v_scales ([P, page_size, Kv]) dequantize int8 pools.
     """
     B, C, H, D = q.shape
     P, page_size, Kv, _ = k_pages.shape
@@ -116,11 +138,11 @@ def paged_ragged_attention_ref(q: jax.Array, k_pages: jax.Array,
     G = H // Kv
     scale = D ** -0.5 if scale is None else scale
 
-    k = k_pages[page_tables].reshape(B, pages_per_seq * page_size, Kv, D)
-    v = v_pages[page_tables].reshape(B, pages_per_seq * page_size, Kv, D)
+    flat = pages_per_seq * page_size
+    k = _dequant_gather(k_pages, k_scales, page_tables, flat)
+    v = _dequant_gather(v_pages, v_scales, page_tables, flat)
     qf = q.reshape(B, C, Kv, G, D).astype(jnp.float32)
-    scores = jnp.einsum("bckgd,btkd->bckgt", qf,
-                        k.astype(jnp.float32)) * scale
+    scores = jnp.einsum("bckgd,btkd->bckgt", qf, k) * scale
     t = jnp.arange(pages_per_seq * page_size)[None, None, :]
     qpos = starts[:, None] + jnp.arange(C)[None, :]         # [B, C]
     mask = (t < contexts[:, None, None]) & (t <= qpos[..., None])

@@ -108,8 +108,9 @@ def cross_cache_axes(cfg: ModelConfig) -> dict:
 
 def _project(cfg: ModelConfig, p: dict, x: jax.Array, which: str,
              n_heads: int) -> jax.Array:
+    from repro.quant.int4 import qdot
     w = p["w" + which]
-    y = x @ w
+    y = qdot(x, w)
     if cfg.qkv_bias and ("b" + which) in p:
         y = y + p["b" + which]
     B, S = x.shape[:2]

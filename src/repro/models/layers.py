@@ -145,14 +145,15 @@ def mlp_def(d_model: int, d_ff: int, act: str):
 
 
 def mlp(x: jax.Array, p, act: str) -> jax.Array:
+    from repro.quant.int4 import qdot
     f = act_fn(act)
     if gated(act):
-        h = f(x @ p["wg"]) * (x @ p["wi"])
+        h = f(qdot(x, p["wg"])) * qdot(x, p["wi"])
         h = shard_act(h, "batch", None, "d_ff")
-        return h @ p["wo"]
-    h = f(x @ p["wi"] + p["bi"])
+        return qdot(h, p["wo"])
+    h = f(qdot(x, p["wi"]) + p["bi"])
     h = shard_act(h, "batch", None, "d_ff")
-    return h @ p["wo"] + p["bo"]
+    return qdot(h, p["wo"]) + p["bo"]
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:

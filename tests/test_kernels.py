@@ -128,6 +128,108 @@ def test_paged_ragged_attention_sweep(B, C, H, Kv, D, pages, psz, pps,
             got[:L], np.asarray(batched[b], np.float32)[:L], atol=0.06)
 
 
+# ---------------------------------------------------------------------------
+# quantized KV pages: kernels with dequant FUSED into the page loop vs
+# (a) the quantized oracle (same math, tight tolerance) and (b) the
+# unquantized oracle on the original pools (bounded quantization noise).
+# ---------------------------------------------------------------------------
+
+def _quant_pools(kp, vp):
+    """Per-(token, kv-head) symmetric int8, exactly the runner's scheme."""
+    from repro.core.paged_runner import PagedModelRunner
+    kq, ks = PagedModelRunner._page_quant(kp)
+    vq, vs = PagedModelRunner._page_quant(vp)
+    return kq, ks, vq, vs
+
+
+@pytest.mark.parametrize("B,H,Kv,D,pages,psz,pps", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (3, 4, 4, 128, 32, 8, 6),
+])
+def test_paged_attention_quantized(B, H, Kv, D, pages, psz, pps, rng_key):
+    ks_ = jax.random.split(rng_key, 5)
+    q = _rand(ks_[0], (B, H, D), jnp.bfloat16)
+    kp = _rand(ks_[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks_[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks_[3], (B, pps), 0, pages)
+    lens = jax.random.randint(ks_[4], (B,), 1, pps * psz + 1)
+    kq, kscale, vq, vscale = _quant_pools(kp, vp)
+    out = ops.paged_attention(q, kq, vq, pt, lens, k_scales=kscale,
+                              v_scales=vscale, interpret=True)
+    oracle = ref.paged_attention_ref(q, kq, vq, pt, lens, k_scales=kscale,
+                                     v_scales=vscale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32), atol=0.06)
+    dense = ref.paged_attention_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32), atol=0.12)
+
+
+@pytest.mark.parametrize("C,H,Kv,D,pages,psz,pps", [
+    (8, 8, 2, 64, 16, 16, 4),
+    (16, 4, 4, 128, 32, 8, 6),
+])
+def test_paged_prefill_attention_quantized(C, H, Kv, D, pages, psz, pps,
+                                           rng_key):
+    ks_ = jax.random.split(rng_key, 4)
+    q = _rand(ks_[0], (C, H, D), jnp.bfloat16)
+    kp = _rand(ks_[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks_[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks_[3], (pps,), 0, pages)
+    start = (pps * psz - C) // 2
+    ctx = start + C
+    kq, kscale, vq, vscale = _quant_pools(kp, vp)
+    out = ops.paged_prefill_attention(q, kq, vq, pt, ctx, start,
+                                      k_scales=kscale, v_scales=vscale,
+                                      interpret=True)
+    oracle = ref.paged_prefill_attention_ref(q, kq, vq, pt, ctx, start,
+                                             k_scales=kscale,
+                                             v_scales=vscale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32), atol=0.06)
+    dense = ref.paged_prefill_attention_ref(q, kp, vp, pt, ctx, start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32), atol=0.12)
+
+
+@pytest.mark.parametrize("B,C,H,Kv,D,pages,psz,pps", [
+    (4, 8, 8, 2, 64, 16, 16, 4),
+    (2, 16, 4, 4, 128, 32, 8, 6),
+])
+def test_paged_ragged_attention_quantized(B, C, H, Kv, D, pages, psz, pps,
+                                          rng_key):
+    """The serving kernel: mixed decode/chunk/pad rows over int8 pools,
+    scale-multiply inside the page loop (no materialized f32 copy)."""
+    ks_ = jax.random.split(rng_key, 5)
+    q = _rand(ks_[0], (B, C, H, D), jnp.bfloat16)
+    kp = _rand(ks_[1], (pages, psz, Kv, D), jnp.bfloat16)
+    vp = _rand(ks_[2], (pages, psz, Kv, D), jnp.bfloat16)
+    pt = jax.random.randint(ks_[3], (B, pps), 0, pages)
+    lengths = [(1, C, max(1, C // 2), 0)[b % 4] for b in range(B)]
+    starts = np.array(jax.random.randint(
+        ks_[4], (B,), 0, pps * psz - C + 1), np.int32)
+    starts[np.asarray(lengths) == 0] = 0
+    contexts = (starts + np.asarray(lengths)).astype(np.int32)
+    kq, kscale, vq, vscale = _quant_pools(kp, vp)
+    out = ops.paged_ragged_attention(
+        q, kq, vq, pt, jnp.asarray(contexts), jnp.asarray(starts),
+        k_scales=kscale, v_scales=vscale, interpret=True)
+    oracle = ref.paged_ragged_attention_ref(
+        q, kq, vq, pt, jnp.asarray(contexts), jnp.asarray(starts),
+        k_scales=kscale, v_scales=vscale)
+    dense = ref.paged_ragged_attention_ref(
+        q, kp, vp, pt, jnp.asarray(contexts), jnp.asarray(starts))
+    for b, L in enumerate(lengths):
+        got = np.asarray(out[b], np.float32)
+        if L == 0:
+            np.testing.assert_allclose(got, 0.0)       # batch pad row
+            continue
+        np.testing.assert_allclose(
+            got[:L], np.asarray(oracle[b], np.float32)[:L], atol=0.06)
+        np.testing.assert_allclose(
+            got[:L], np.asarray(dense[b], np.float32)[:L], atol=0.12)
+
+
 def test_paged_attention_single_token_context(rng_key):
     ks = jax.random.split(rng_key, 3)
     q = _rand(ks[0], (1, 4, 64), jnp.bfloat16)

@@ -161,6 +161,123 @@ def test_rewind_next_to_published_prefix_pages(rng_key):
     assert st["used_pages"] == pr.prefix_cache.stats()["cached_pages"]
 
 
+# ---------------------------------------------------------------------------
+# quantized KV pages (kv_dtype="int8"): every page-lifecycle path must
+# carry the per-(token, kv-head) scales coherently.  Within one int8
+# runner replay is BIT-identical (quantization is deterministic, so
+# re-scattered K/V requantizes to the same bytes); against a fresh f32
+# runner the logits agree to quantization noise and greedy argmax.
+# ---------------------------------------------------------------------------
+
+INT8_ATOL = 0.25          # yi-6b reduced: observed max |Δlogit| ~0.1
+
+
+def _close_and_same_argmax(a, b, atol=INT8_ATOL):
+    assert np.max(np.abs(a - b)) < atol, np.max(np.abs(a - b))
+    assert np.argmax(a) == np.argmax(b)
+
+
+def test_int8_decode_matches_f32(rng_key):
+    """Plain prefill+decode with int8 pages tracks the f32 runner."""
+    pr = _runner(rng_key, kv_dtype="int8")
+    ref = _runner(rng_key)
+    assert pr.k_pages.dtype == jnp.int8
+    assert pr.k_scales.shape[1:] == (33, 4, pr.cfg.n_kv_heads)
+    prompt = list(range(1, 12))
+    a, b = pr.prefill_seq(prompt), ref.prefill_seq(prompt)
+    _close_and_same_argmax(pr.last_prefill_logits(),
+                           ref.last_prefill_logits())
+    for t in [20, 21, 22]:
+        _close_and_same_argmax(pr.decode({a: t})[a], ref.decode({b: t})[b])
+
+
+def test_int8_rewind_across_page_boundary(rng_key):
+    """Rewind across a page boundary on the quantized pool: the popped
+    page's K/V AND scales are really gone — replaying the window is
+    bit-identical to the first pass."""
+    pr = _runner(rng_key, kv_dtype="int8")
+    sid = pr.prefill_seq(list(range(1, 12)))           # 11 tokens, 3 pages
+    first = {}
+    for i, t in enumerate([20, 21, 22]):               # 12..14: page 4 opens
+        first[i] = pr.decode({sid: t})[sid]
+    assert len(pr.pm.seqs[sid].pages) == 4
+    pr.rewind_tokens(sid, 3)                           # 14 -> 11: crosses 12
+    assert pr.pm.context_lens([sid])[0] == 11
+    for i, t in enumerate([20, 21, 22]):               # replay the window
+        assert np.array_equal(first[i], pr.decode({sid: t})[sid]), i
+
+
+def test_int8_cow_forked_tail(rng_key):
+    """CoW fork copies the partial tail page's scale rows along with the
+    quantized K/V: fork and source keep tracking an f32 oracle after the
+    fork diverges."""
+    pr = _runner(rng_key, kv_dtype="int8")
+    prompt = list(range(1, 11))                        # 10 tokens: tail of 2
+    sid = pr.prefill_seq(prompt)
+    fork = pr.fork_seq(sid)
+    assert pr.pm.n_cow_forks >= 1
+    both = pr.decode({sid: 30, fork: 40})              # divergence
+    nxt = pr.decode({sid: 31})[sid]
+    f2 = pr.decode({fork: 41})[fork]
+    ref = _runner(rng_key)
+    rs = ref.prefill_seq(prompt)
+    rf = ref.fork_seq(rs)
+    rboth = ref.decode({rs: 30, rf: 40})
+    _close_and_same_argmax(both[sid], rboth[rs])
+    _close_and_same_argmax(both[fork], rboth[rf])
+    _close_and_same_argmax(nxt, ref.decode({rs: 31})[rs])
+    _close_and_same_argmax(f2, ref.decode({rf: 41})[rf])
+
+
+def test_int8_published_prefix_adopt(rng_key):
+    """Prefix-cache publish/adopt shares the quantized pages AND their
+    scales: an adopter's stream is bit-identical to a fresh quantized
+    prefill of the same prompt (same bytes, same scales)."""
+    pr = _runner(rng_key, kv_dtype="int8")
+    prompt = list(range(1, 14))                        # 13 tokens
+    s1 = pr.prefill_seq(prompt)
+    pr.free(s1, publish=True)                          # pages -> radix tree
+    assert pr.prefix_cache.stats()["cached_pages"] >= 3
+    s2 = pr.prefill_seq(prompt)                        # adopts the prefix
+    assert pr.last_prefill_info["prefix_cached_tokens"] > 0
+    s3 = pr.prefill_seq(prompt)                        # second adopter
+    l2 = pr.decode({s2: 60})[s2]
+    l3 = pr.decode({s3: 60})[s3]
+    assert np.array_equal(l2, l3)
+    fresh = _runner(rng_key, kv_dtype="int8", enable_prefix_cache=False)
+    f = fresh.prefill_seq(prompt)
+    assert np.array_equal(l2, fresh.decode({f: 60})[f])
+
+
+def test_int8_preempt_resume(rng_key):
+    """Preempt (free without publish) then resume by re-prefilling
+    prompt+kept tokens: requantization is deterministic, so the resumed
+    quantized stream matches straight-through int8 AND stays within
+    quantization noise of the f32 oracle."""
+    pr = _runner(rng_key, kv_dtype="int8")
+    base = pr.pm.stats()
+    prompt = list(range(2, 12))
+    sid = pr.prefill_seq(prompt)
+    kept = []
+    for t in [70, 71]:
+        pr.decode({sid: t})
+        kept.append(t)
+    pr.free(sid)                                       # preemption
+    assert pr.pm.stats() == base
+    rsid = pr.prefill_seq(prompt + kept)               # resume
+    resumed = pr.decode({rsid: 74})[rsid]
+    straight = _runner(rng_key, kv_dtype="int8")
+    ss = straight.prefill_seq(prompt)
+    for t in [70, 71]:
+        straight.decode({ss: t})
+    assert np.array_equal(resumed, straight.decode({ss: 74})[ss])
+    f32 = _runner(rng_key)
+    fs = f32.prefill_seq(prompt)
+    for t in [70, 71]:
+        f32.decode({fs: t})
+    _close_and_same_argmax(resumed, f32.decode({fs: 74})[fs])
+
+
 def test_rewind_then_preempt_then_resume(rng_key):
     """Round trip: speculate, reject (rewind), preempt (free without
     publish), then resume by re-prefilling prompt+kept tokens — the

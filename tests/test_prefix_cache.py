@@ -151,6 +151,34 @@ def test_max_cached_bytes_engine_knob():
     eng.shutdown()
 
 
+def test_page_bytes_tracks_pool_dtype():
+    """page_bytes is derived from the ACTUAL pool dtype: bf16 K/V
+    vectors by default; int8 vectors plus one bf16 scale per (token,
+    kv-head) when the pool is quantized.  The same byte cap therefore
+    admits ~2x the pages on a quantized pool (Dh=64: 128 B vs 66 B per
+    KV vector pair)."""
+    from repro.core.paged_runner import PagedModelRunner
+    cfg = get_config("llama-3.1-8b", reduced=True)
+    psz = 16
+    kw = dict(num_pages=4, page_size=psz, max_slots=1, pages_per_seq=2)
+    bf16 = PagedModelRunner(cfg, **kw)
+    i8 = PagedModelRunner(cfg, kv_dtype="int8", **kw)
+    assert bf16.page_bytes == (2 * cfg.n_layers * psz * cfg.n_kv_heads
+                               * cfg.head_dim * 2)
+    assert i8.page_bytes == (2 * cfg.n_layers * psz * cfg.n_kv_heads
+                             * (cfg.head_dim + 2))
+    assert bf16.page_bytes / i8.page_bytes >= 1.8
+    # the engine knob path sees the quantized cost too
+    eng = MLCEngine()
+    eng.load_model("m", cfg, max_slots=2, max_context=128, seed=0,
+                   backend="paged", page_size=psz, kv_dtype="int8",
+                   max_cached_bytes=2 * bf16.page_bytes)
+    pc = eng.models["m"].runner.prefix_cache
+    assert pc.page_bytes == i8.page_bytes
+    assert pc.max_cached_pages == (2 * bf16.page_bytes) // i8.page_bytes
+    eng.shutdown()
+
+
 def test_peek_len_is_pure():
     """peek_len reports the cached-prefix length without perturbing LRU
     clocks or hit/miss counters (the scheduler probes every step)."""

@@ -85,7 +85,17 @@ def test_benchmarks_smoke():
         assert any(ln.startswith(row) for ln in lines), (row, out)
     # the latency + dispatch-fusion report is part of the contract
     assert any(ln.startswith("engine/mixed_ttft_p50") for ln in lines), out
+    assert any(ln.startswith("engine/mixed_ttft_warm_p50")
+               for ln in lines), out
     assert any(ln.startswith("engine/mixed_itl_p95") for ln in lines), out
+    # quantized KV pages: >= 1.8x resident sequences under the same byte
+    # budget, and the fused-dequant ragged row beats bf16 pages at long
+    # context by >= 1.2x
+    cap = [ln for ln in lines if ln.startswith("engine/kv_capacity_seqs")]
+    assert cap and float(cap[0].split(",")[1]) >= 1.8, out
+    qrow = [ln for ln in lines if ln.startswith("kernel/paged_ragged_int8")]
+    assert qrow, out
+    assert float(qrow[0].split(",")[2].split("x_")[0]) >= 1.2, out
     fused = [ln for ln in lines
              if ln.startswith("engine/mixed_kernel_calls_per_step")]
     assert fused and fused[0].split(",")[1] == "1.0", out
